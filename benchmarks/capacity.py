@@ -1,0 +1,61 @@
+"""Paper Fig. 11 / Fig. 12 — capacity scaling at equal RAM.
+
+At TinyEngine's per-module RAM budget, how much larger an image (Fig. 11)
+or channel width (Fig. 12) can vMCU run?  Binary search per VWW module.
+Paper: image 1.29x–2.58x, channels 1.26x–3.17x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph_planner import (MCUNET_5FPS_VWW,
+                                      tinyengine_module_bytes,
+                                      vmcu_module_bytes)
+
+
+def _max_scale(cfg, budget: int, grow) -> float:
+    lo, hi = 1.0, 8.0
+    for _ in range(24):
+        mid = (lo + hi) / 2
+        if vmcu_module_bytes(grow(cfg, mid)) <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def grow_image(cfg, s: float):
+    return dataclasses.replace(cfg, hw=max(1, int(cfg.hw * s)))
+
+
+def grow_channels(cfg, s: float):
+    return dataclasses.replace(cfg, c_in=max(1, int(cfg.c_in * s)),
+                               c_out=max(1, int(cfg.c_out * s)))
+
+
+def run() -> list[dict]:
+    rows = []
+    for cfg in MCUNET_5FPS_VWW:
+        budget = tinyengine_module_bytes(cfg)
+        rows.append({
+            "module": cfg.name,
+            "image_scale": _max_scale(cfg, budget, grow_image),
+            "channel_scale": _max_scale(cfg, budget, grow_channels),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print("module,image_scale,channel_scale")
+    for r in rows:
+        print(f"{r['module']},{r['image_scale']:.2f},"
+              f"{r['channel_scale']:.2f}")
+    im = [r["image_scale"] for r in rows]
+    ch = [r["channel_scale"] for r in rows]
+    print(f"# image {min(im):.2f}x..{max(im):.2f}x (paper 1.29–2.58); "
+          f"channels {min(ch):.2f}x..{max(ch):.2f}x (paper 1.26–3.17)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""§Roofline — read the dry-run JSONs and print the per-(arch × shape)
+three-term table (single-pod, per the brief)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        rows.append(rec)
+    return rows
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print(f"# no dry-run results under {RESULTS} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print("arch,cell,status,peak_GB,fits16G,t_compute_s,t_memory_s,"
+          "t_collective_s,dominant,model_flops_ratio,roofline_fraction")
+    for rec in rows:
+        if rec["status"] != "ok":
+            print(f"{rec['arch']},{rec['cell']},ERROR,,,,,,,,")
+            continue
+        r, m = rec["roofline"], rec["memory"]
+        print(f"{rec['arch']},{rec['cell']},ok,"
+              f"{m['peak_bytes']/1e9:.2f},{m['fits_16g']},"
+              f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f},{r['dominant']},"
+              f"{r['model_flops_ratio']:.3f},"
+              f"{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

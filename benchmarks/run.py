@@ -1,0 +1,38 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  single_layer   — Fig. 7  (RAM, 9 pointwise convs)
+  energy_proxy   — Fig. 8  (memory-traffic proxy for energy)
+  latency        — Table 3 (ring vs naive kernel cost, CPU-relative)
+  multi_layer    — Fig. 9/10 (inverted bottlenecks, S1–S8 / B1–B17)
+  capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
+  pool_footprint — XLA-measured ring-pool footprint (TPU adaptation)
+  roofline_table — §Roofline from dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import time
+
+from . import (capacity, energy_proxy, latency, multi_layer,
+               pool_footprint, roofline_table, single_layer)
+
+SECTIONS = [
+    ("Fig7_single_layer_ram", single_layer.main),
+    ("Fig8_energy_proxy", energy_proxy.main),
+    ("Table3_latency", latency.main),
+    ("Fig9_10_multi_layer_ram", multi_layer.main),
+    ("Fig11_12_capacity", capacity.main),
+    ("TPU_pool_footprint", pool_footprint.main),
+    ("TPU_roofline_table", roofline_table.main),
+]
+
+
+def main() -> None:
+    for name, fn in SECTIONS:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        fn()
+        print(f"# section time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

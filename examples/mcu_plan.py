@@ -1,0 +1,41 @@
+"""Reproduce the paper's deployment story end-to-end:
+
+Can MCUNet-320KB-ImageNet run on a 128 KB STM32-F411RE?  TinyEngine: no
+(247.8 KB bottleneck).  HMCOS: no.  vMCU: yes.
+
+Run:  PYTHONPATH=src python examples/mcu_plan.py [--ram-kb 128]
+"""
+import argparse
+
+from repro.core.graph_planner import (MCUNET_320KB_IMAGENET,
+                                      MCUNET_5FPS_VWW, hmcos_module_bytes,
+                                      tinyengine_module_bytes,
+                                      vmcu_module_bytes)
+
+
+def deploy(net, name: str, ram: int) -> None:
+    rows = [(c.name, vmcu_module_bytes(c), tinyengine_module_bytes(c),
+             hmcos_module_bytes(c)) for c in net]
+    bv = max(r[1] for r in rows)
+    bt = max(r[2] for r in rows)
+    bh = max(r[3] for r in rows)
+    print(f"\n{name} on a {ram//1000} KB device:")
+    for label, b in (("vMCU", bv), ("TinyEngine", bt), ("HMCOS", bh)):
+        verdict = "DEPLOYABLE" if b <= ram else "out of memory"
+        print(f"  {label:11s} bottleneck {b/1000:7.1f} KB -> {verdict}")
+    mod = max(rows, key=lambda r: r[1])
+    print(f"  (vMCU bottleneck module: {mod[0]}; reduction vs TinyEngine "
+          f"{100 * (1 - bv / bt):.1f}%)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ram-kb", type=int, default=128)
+    args = ap.parse_args()
+    ram = args.ram_kb * 1000
+    deploy(MCUNET_5FPS_VWW, "MCUNet-5fps-VWW", ram)
+    deploy(MCUNET_320KB_IMAGENET, "MCUNet-320KB-ImageNet", ram)
+
+
+if __name__ == "__main__":
+    main()

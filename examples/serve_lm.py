@@ -1,0 +1,42 @@
+"""Batched serving with vMCU ring KV caches: prefill a batch of prompts,
+decode in lockstep; the sliding-window layers hold exactly `window` KV
+slots in a circular buffer (the paper's pool, as a cache).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()  # CPU-sized, same architecture
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params,
+                           cache_len=args.prompt_len + args.max_new + 8)
+    prompts = [[(13 * i + j) % cfg.vocab for j in range(args.prompt_len)]
+               for i in range(args.batch)]
+    t0 = time.time()
+    outs = engine.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    n = args.batch * args.max_new
+    print(f"{args.arch}: window={cfg.window} ring slots per local layer")
+    print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    print(f"sample: {outs[0][:10]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""vMCU core: segment-level memory management (paper §4–§5), TPU-adapted.
+
+Public surface:
+  * planner       — Eq. (1) offset solver (exact scan + closed forms)
+  * graph_planner — Eq. (2) fused multi-layer plans (inverted bottleneck,
+                    FC chains) + TinyEngine/HMCOS module baselines
+  * pool          — circular segment-pool simulator (correctness oracle)
+  * baselines     — single-layer tensor-level baselines
+  * ring_buffer   — the jit-able donated ring pool (HBM-level integration)
+"""
+from .affine import AccessFn, IterDomain
+from .planner import (SegmentPlan, gemm_min_footprint_segments,
+                      gemm_offset_closed_form, motivational_example,
+                      plan_affine, plan_gemm, plan_pointwise_conv,
+                      solve_offset_bruteforce, solve_offset_scan)
+from .graph_planner import (FusedPlan, MCUNET_5FPS_VWW,
+                            MCUNET_320KB_IMAGENET, ModuleConfig,
+                            hmcos_module_bytes, plan_fc_chain,
+                            plan_inverted_bottleneck, solve_stream_offset,
+                            tinyengine_module_bytes)
+from .pool import PoolClobberError, SegmentPool, run_gemm_schedule
+from .baselines import (FIG7_CASES, LayerShape, hmcos_bytes,
+                        pointwise_conv_layer, tinyengine_bytes)
+from .ring_buffer import (ChainPlan, init_chain_params, naive_chain_apply,
+                          plan_chain, ring_chain_apply, run_chain_via_ring)
+
+__all__ = [
+    "AccessFn", "IterDomain", "SegmentPlan", "FusedPlan", "ModuleConfig",
+    "SegmentPool", "PoolClobberError", "ChainPlan", "LayerShape",
+    "FIG7_CASES", "MCUNET_5FPS_VWW", "MCUNET_320KB_IMAGENET",
+    "gemm_min_footprint_segments", "gemm_offset_closed_form",
+    "motivational_example", "plan_affine", "plan_gemm",
+    "plan_pointwise_conv", "solve_offset_bruteforce", "solve_offset_scan",
+    "solve_stream_offset", "plan_inverted_bottleneck", "plan_fc_chain",
+    "tinyengine_module_bytes", "hmcos_module_bytes", "run_gemm_schedule",
+    "hmcos_bytes", "tinyengine_bytes", "pointwise_conv_layer",
+    "plan_chain", "ring_chain_apply", "naive_chain_apply",
+    "run_chain_via_ring", "init_chain_params",
+]

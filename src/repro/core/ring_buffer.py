@@ -1,0 +1,175 @@
+"""JAX HBM ring pool — vMCU's circular segment buffer as a jit-able module.
+
+On MCU the kernel owns raw pointers; under XLA we recover the same effect
+with (a) ONE pool array ``[n_segments, seg_width]`` threaded through the
+layer chain and donated at the jit boundary, and (b) modular segment
+indexing (``jnp.take`` / scatter with ``% n_segments`` indices) — the
+paper's `addr % (MemCap/Seg)` bounds check, verbatim.
+
+``memory_analysis()`` of the compiled chain shows the activation footprint
+collapsing to the pool size (benchmarks/pool_footprint.py); numerics are
+bit-identical to the naive chain (tests/test_ring_buffer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .planner import gemm_offset_closed_form
+
+# TPU lane width; segments are padded to it so MXU tiles stay aligned.
+LANE = 128
+
+
+def _segs(dim: int, seg_width: int) -> int:
+    return -(-dim // seg_width)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """Static plan for an FC chain ``d0 -> d1 -> ... -> dL`` over M rows."""
+
+    m_rows: int
+    dims: tuple[int, ...]
+    seg_width: int
+    n_segments: int
+    # per layer: (in_ptr, out_ptr) segment offsets (virtual, pre-modulo)
+    layer_ptrs: tuple[tuple[int, int], ...]
+
+    @property
+    def pool_bytes(self) -> int:  # fp32 demo pool
+        return self.n_segments * self.seg_width * 4
+
+    @property
+    def naive_bytes(self) -> int:
+        """Tensor-level chain: worst adjacent in+out pair lives at once."""
+        per = [self.m_rows * _segs(d, self.seg_width) for d in self.dims]
+        worst = max(per[i] + per[i + 1] for i in range(len(per) - 1))
+        return worst * self.seg_width * 4
+
+
+def plan_chain(m_rows: int, dims: list[int], seg_width: int = LANE) -> ChainPlan:
+    """Solve Eq. (1) per layer and chain the pointers: layer i's output
+    pointer is shifted ``delta_i`` segments below its input pointer; the
+    next layer consumes it in place."""
+    ptrs = []
+    in_ptr = 0
+    max_span = 0
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        k_segs = _segs(d_in, seg_width)
+        n_segs = _segs(d_out, seg_width)
+        delta = gemm_offset_closed_form(m_rows, n_segs, k_segs)
+        out_ptr = in_ptr - delta
+        # Track the widest live span (in segments) this layer needs.
+        span = (max(in_ptr + m_rows * k_segs, out_ptr + m_rows * n_segs)
+                - min(in_ptr, out_ptr))
+        max_span = max(max_span, span)
+        ptrs.append((in_ptr, out_ptr))
+        in_ptr = out_ptr
+    return ChainPlan(m_rows=m_rows, dims=tuple(dims), seg_width=seg_width,
+                     n_segments=max_span, layer_ptrs=tuple(ptrs))
+
+
+def write_rows(pool: jax.Array, rows: jax.Array, ptr: int,
+               n_segments: int) -> jax.Array:
+    """Store ``rows [M, d]`` into the ring starting at segment ``ptr``."""
+    m, d = rows.shape
+    seg_w = pool.shape[1]
+    segs = _segs(d, seg_w)
+    padded = jnp.pad(rows, ((0, 0), (0, segs * seg_w - d)))
+    flat = padded.reshape(m * segs, seg_w)
+    idx = (ptr + jnp.arange(m * segs)) % n_segments
+    return pool.at[idx].set(flat.astype(pool.dtype))
+
+
+def read_rows(pool: jax.Array, ptr: int, m: int, d: int,
+              n_segments: int) -> jax.Array:
+    seg_w = pool.shape[1]
+    segs = _segs(d, seg_w)
+    idx = (ptr + jnp.arange(m * segs)) % n_segments
+    flat = jnp.take(pool, idx, axis=0)
+    return flat.reshape(m, segs * seg_w)[:, :d]
+
+
+def _layer_scan(pool: jax.Array, w: jax.Array, b: jax.Array, *,
+                in_ptr: int, out_ptr: int, m_rows: int, n_segments: int,
+                block_rows: int, activation) -> jax.Array:
+    """One FC layer streamed through the ring, ``block_rows`` rows per step.
+
+    Mirrors the paper's Fig.-4 kernel: RAMLoad a row-block of input
+    segments, Dot against the (un-pooled, "Flash") weight, RAMStore the
+    output row-block at the solved offset; the modulo on every index is the
+    circular-buffer bounds check.
+    """
+    d_in, d_out = w.shape
+    seg_w = pool.shape[1]
+    k_segs, n_segs = _segs(d_in, seg_w), _segs(d_out, seg_w)
+    n_blocks = m_rows // block_rows
+    if n_blocks * block_rows != m_rows:
+        raise ValueError("block_rows must divide m_rows")
+
+    def step(p, blk):
+        row0 = blk * block_rows
+        ridx = (in_ptr + row0 * k_segs
+                + jnp.arange(block_rows * k_segs)) % n_segments
+        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
+        x = x[:, :d_in]
+        y = activation(x @ w.astype(x.dtype) + b.astype(x.dtype))
+        pad = jnp.pad(y, ((0, 0), (0, n_segs * seg_w - d_out)))
+        widx = (out_ptr + row0 * n_segs
+                + jnp.arange(block_rows * n_segs)) % n_segments
+        return p.at[widx].set(pad.reshape(block_rows * n_segs, seg_w)), None
+
+    pool, _ = jax.lax.scan(step, pool, jnp.arange(n_blocks))
+    return pool
+
+
+def init_chain_params(key: jax.Array, dims: list[int],
+                      dtype=jnp.float32) -> list[tuple[jax.Array, jax.Array]]:
+    params = []
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (d_in, d_out), dtype) / math.sqrt(d_in)
+        params.append((w, jnp.zeros((d_out,), dtype)))
+    return params
+
+
+@partial(jax.jit, static_argnames=("plan", "block_rows"), donate_argnums=(0,))
+def ring_chain_apply(pool: jax.Array, params, plan: ChainPlan,
+                     block_rows: int = 1) -> jax.Array:
+    """Run the whole planned chain inside the donated pool buffer."""
+    base = plan.layer_ptrs[-1][1]  # most negative pointer; shift all >= 0
+    for (w, b), (in_ptr, out_ptr), is_last in zip(
+            params, plan.layer_ptrs,
+            [i == len(params) - 1 for i in range(len(params))]):
+        act = (lambda x: x) if is_last else jax.nn.gelu
+        pool = _layer_scan(pool, w, b,
+                           in_ptr=in_ptr - base, out_ptr=out_ptr - base,
+                           m_rows=plan.m_rows, n_segments=plan.n_segments,
+                           block_rows=block_rows, activation=act)
+    return pool
+
+
+def naive_chain_apply(x: jax.Array, params) -> jax.Array:
+    """Tensor-level reference: every intermediate fully materialized."""
+    for i, (w, b) in enumerate(params):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i != len(params) - 1:
+            x = jax.nn.gelu(x)
+    return x
+
+
+def run_chain_via_ring(x: jax.Array, params, plan: ChainPlan,
+                       block_rows: int = 1) -> jax.Array:
+    """Convenience wrapper: stage input into a fresh pool, run, read out."""
+    base = plan.layer_ptrs[-1][1]
+    pool = jnp.zeros((plan.n_segments, plan.seg_width), x.dtype)
+    pool = write_rows(pool, x, plan.layer_ptrs[0][0] - base, plan.n_segments)
+    pool = ring_chain_apply(pool, params, plan, block_rows)
+    return read_rows(pool, plan.layer_ptrs[-1][1] - base, plan.m_rows,
+                     plan.dims[-1], plan.n_segments)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for vMCU's compute hot-spots.
+
+  segment_matmul — ring-buffer GEMM (paper Fig. 4 FC kernel)
+  fused_mlp      — in-place streaming MLP (paper Fig. 6 inverted bottleneck)
+  ring_decode    — decode attention over a ring KV cache (sliding window)
+
+Validated in interpret mode against :mod:`repro.kernels.ref` oracles.
+"""
+from .ops import (SEG_WIDTH, decode_attention, fused_mlp, ring_cache_update,
+                  segment_gemm)

@@ -1,0 +1,140 @@
+"""Fused streaming MLP — the inverted-bottleneck kernel (paper Fig. 6) for
+transformers.
+
+The paper fuses PW-expand → DW → PW-project → add with an 11-segment
+workspace so intermediate tensors never exist in RAM.  The transformer
+analogue fuses up-projection → activation (optionally gated) → down-
+projection → residual-add: the ``[rows, d_ff]`` intermediate — the widest
+tensor in the network — never exists in HBM.  Per vMCU Eq. (2) this chain's
+input/output offset is ZERO (each output row depends only on its own input
+row), so the kernel runs fully **in place** in the ring pool: the output row
+block overwrites its own input row block, beating the single-layer 50% bound
+exactly as §5.2 promises.
+
+Grid = (row_blocks, ff_blocks); ff is the inner (fastest) axis so the
+``d_ff`` reduction accumulates in an fp32 VMEM scratch while weight tiles
+stream from HBM ("Flash").  The row block is the vMCU outer tile; the MXU
+tile is the inner tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .segment_matmul import SEG_WIDTH, _segs
+
+
+def _kernel(pool_ref, wg_ref, wu_ref, wd_ref, out_ref,
+            x_vmem, acc_vmem, sem_in, sem_out,
+            *, ptr: int, n_seg: int, block_rows: int, d_model: int,
+            gated: bool, residual: bool, activation: str):
+    m, f = pl.program_id(0), pl.program_id(1)
+    nf = pl.num_programs(1)
+    d_segs = _segs(d_model)
+    bd = block_rows * d_segs
+
+    # Load the input row-block once per row (first ff step).
+    @pl.when(f == 0)
+    def _load():
+        off = jax.lax.rem(ptr + m * bd, n_seg)
+        cp = pltpu.make_async_copy(pool_ref.at[pl.ds(off, bd)], x_vmem,
+                                   sem_in)
+        cp.start()
+        cp.wait()
+
+    x = x_vmem[...].reshape(block_rows, d_segs * SEG_WIDTH)[:, :d_model]
+    x = x.astype(jnp.float32)
+
+    # Workspace: one [block_rows, ff_tile] slice of the intermediate —
+    # the "11 segments" of Fig. 6; d_ff is never materialized.
+    up = jnp.dot(x, wu_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    if gated:
+        gate = jnp.dot(x, wg_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        if activation == "gelu":
+            h = jax.nn.gelu(gate) * up
+        else:
+            h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up) if activation == "gelu" else jax.nn.silu(up)
+    part = jnp.dot(h, wd_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_vmem[...] = jnp.zeros_like(acc_vmem)
+
+    acc_vmem[...] += part
+
+    # Final ff step: residual add and in-place RAMStore (delta == 0).
+    @pl.when(f == nf - 1)
+    def _store():
+        y = acc_vmem[...]
+        if residual:
+            y = y + x
+        y = y.astype(x_vmem.dtype)
+        pad = d_segs * SEG_WIDTH - d_model
+        if pad:
+            y = jnp.pad(y, ((0, 0), (0, pad)))
+        x_vmem[...] = y.reshape(bd, SEG_WIDTH)
+        off = jax.lax.rem(ptr + m * bd, n_seg)
+        cp = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off, bd)],
+                                   sem_out)
+        cp.start()
+        cp.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_rows", "d_model", "ptr", "block_rows", "ff_tile",
+                     "gated", "residual", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_fused_mlp(pool: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                   w_down: jax.Array, *, m_rows: int, d_model: int, ptr: int,
+                   block_rows: int = 8, ff_tile: int = 512,
+                   gated: bool = True, residual: bool = True,
+                   activation: str = "gelu",
+                   interpret: bool = False) -> jax.Array:
+    """In-place fused MLP over rows resident at ``ptr`` in the ring pool.
+
+    w_gate/w_up: [d_model, d_ff]; w_down: [d_ff, d_model].  The d_ff axis is
+    tiled by ``ff_tile``; each tile's weights stream HBM→VMEM via BlockSpec.
+    """
+    n_seg = pool.shape[0]
+    d_ff = w_up.shape[1]
+    d_segs = _segs(d_model)
+    bd = block_rows * d_segs
+    if m_rows % block_rows or d_ff % ff_tile:
+        raise ValueError("block_rows | m_rows and ff_tile | d_ff required")
+    if n_seg % bd or ptr % bd:
+        raise ValueError("pool/ptr must be row-block aligned")
+    grid = (m_rows // block_rows, d_ff // ff_tile)
+    kernel = functools.partial(
+        _kernel, ptr=ptr, n_seg=n_seg, block_rows=block_rows,
+        d_model=d_model, gated=gated, residual=residual,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),          # ring pool
+            pl.BlockSpec((d_model, ff_tile), lambda m, f: (0, f)),
+            pl.BlockSpec((d_model, ff_tile), lambda m, f: (0, f)),
+            pl.BlockSpec((ff_tile, d_model), lambda m, f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bd, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((block_rows, d_model), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w_gate, w_up, w_down)

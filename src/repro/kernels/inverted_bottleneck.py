@@ -1,0 +1,162 @@
+"""Fused inverted-bottleneck kernel — the paper's Fig. 6, on TPU.
+
+PW-expand → DW 3x3 → PW-project → (+residual), streamed row-by-row through
+the ring pool: tensor B (the C_mid-wide expansion) exists only as a
+(RS+ ) row workspace in VMEM — never in HBM — and output rows of E
+overwrite consumed rows of A at the Eq.-2 offset.
+
+Layout: NHWC with N folded into rows; one grid step produces one output
+row (W × C_out).  The workspace holds RS rows of B (the DW halo) — the
+row-cache variant of the paper's 11-segment workspace (DESIGN.md §1).
+Stride-1, 'same' padding (MCUNet's dominant configuration; the planner in
+:mod:`repro.core.graph_planner` handles the general case analytically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pool_ref, w1_ref, wd_ref, w2_ref, out_ref,
+            b_rows, y_row, sem_in, sem_out, *,
+            in_ptr: int, out_ptr: int, n_seg: int, H: int, W: int,
+            C_in: int, C_mid: int, C_out: int, RS: int, residual: bool):
+    """Grid step p computes output row p (W x C_out segments)."""
+    p = pl.program_id(0)
+    pad = (RS - 1) // 2
+
+    # --- load the A rows this output row needs (halo) and expand to B ----
+    # b_rows: VMEM [RS, W, C_mid] ring of expanded rows; row r of the halo
+    # lives at slot (p + r) % RS — a second, inner vMCU ring.
+    def expand_row(h_idx, slot):
+        """PW1: A[h_idx] (W x C_in) -> B slot (W x C_mid)."""
+        a_row = y_row  # reuse scratch? no — separate load target
+        off = jax.lax.rem(in_ptr + h_idx * W, n_seg)
+        cp = pltpu.make_async_copy(pool_ref.at[pl.ds(off, W)],
+                                   a_row.at[pl.ds(0, W)], sem_in)
+        cp.start()
+        cp.wait()
+        a = a_row[pl.ds(0, W), pl.ds(0, C_in)].astype(jnp.float32)
+        b = jnp.dot(a, w1_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        b_rows[slot] = jnp.maximum(b, 0.0).astype(b_rows.dtype)  # ReLU
+
+    # Invariant: A-row h (expanded to B) lives at halo slot h % RS.
+    # First output row primes rows 0..pad; each later row expands exactly
+    # one new row (p + pad).  Writes past H land in slots whose reads are
+    # always masked (src_h >= H), so the invariant holds for live rows.
+    @pl.when(p == 0)
+    def _prime():
+        for r in range(pad + 1):
+            expand_row(min(r, H - 1), r % RS)
+
+    @pl.when(p > 0)
+    def _advance():
+        h = jnp.clip(p + pad, 0, H - 1)
+        expand_row(h, jax.lax.rem(p + pad, RS))
+
+    # --- DW RSxRS over the halo + PW2, one output row ---------------------
+    acc = jnp.zeros((W, C_mid), jnp.float32)
+    for r in range(RS):
+        src_h = p + r - pad
+        slot = jax.lax.rem(jnp.clip(src_h, 0, H - 1), RS)
+        row = b_rows[slot].astype(jnp.float32)          # [W, C_mid]
+        for s in range(RS):
+            shift = s - pad
+            shifted = jnp.roll(row, -shift, axis=0)
+            # zero the wrapped columns ('same' padding)
+            col = jax.lax.broadcasted_iota(jnp.int32, (W, 1), 0)
+            ok = ((col + shift >= 0) & (col + shift < W)
+                  & (src_h >= 0) & (src_h < H))
+            acc += jnp.where(ok, shifted, 0.0) \
+                * wd_ref[r, s].astype(jnp.float32)[None, :]
+    c_row = jnp.maximum(acc, 0.0)                       # [W, C_mid]
+    d_row = jnp.dot(c_row, w2_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)  # [W, C_out]
+
+    if residual:
+        off = jax.lax.rem(in_ptr + p * W, n_seg)
+        cp = pltpu.make_async_copy(pool_ref.at[pl.ds(off, W)],
+                                   y_row.at[pl.ds(0, W)], sem_in)
+        cp.start()
+        cp.wait()
+        d_row = d_row + y_row[pl.ds(0, W), pl.ds(0, C_out)] \
+            .astype(jnp.float32)
+
+    pad_c = y_row.shape[1] - C_out
+    e = d_row.astype(y_row.dtype)
+    if pad_c:
+        e = jnp.pad(e, ((0, 0), (0, pad_c)))
+    y_row[pl.ds(0, W)] = e
+    off = jax.lax.rem(out_ptr + p * W, n_seg)
+    st = pltpu.make_async_copy(y_row.at[pl.ds(0, W)],
+                               out_ref.at[pl.ds(off, W)], sem_out)
+    st.start()
+    st.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("H", "W", "C_in", "C_mid", "C_out", "RS", "in_ptr",
+                     "out_ptr", "residual", "interpret"),
+    donate_argnums=(0,))
+def ring_inverted_bottleneck(pool: jax.Array, w1: jax.Array, wd: jax.Array,
+                             w2: jax.Array, *, H: int, W: int, C_in: int,
+                             C_mid: int, C_out: int, RS: int = 3,
+                             in_ptr: int = 0, out_ptr: int = 0,
+                             residual: bool = True,
+                             interpret: bool = False) -> jax.Array:
+    """pool: [n_segments, seg_width] with A resident at ``in_ptr`` (one
+    segment per pixel, row-major).  w1: [C_in, C_mid]; wd: [RS, RS, C_mid]
+    depthwise; w2: [C_mid, C_out].  Returns the pool with E at ``out_ptr``.
+    """
+    n_seg, seg_w = pool.shape
+    if max(C_in, C_out) > seg_w or C_mid > 8 * seg_w:
+        raise ValueError("channel widths exceed segment geometry")
+    kernel = functools.partial(
+        _kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg, H=H, W=W,
+        C_in=C_in, C_mid=C_mid, C_out=C_out, RS=RS, residual=residual)
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((C_in, C_mid), lambda p: (0, 0)),
+            pl.BlockSpec((RS, RS, C_mid), lambda p: (0, 0, 0)),
+            pl.BlockSpec((C_mid, C_out), lambda p: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((RS, W, C_mid), pool.dtype),   # B halo ring
+            pltpu.VMEM((W, seg_w), pool.dtype),       # row I/O staging
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w1, wd, w2)
+
+
+def inverted_bottleneck_ref(a: jax.Array, w1: jax.Array, wd: jax.Array,
+                            w2: jax.Array, *, residual: bool = True
+                            ) -> jax.Array:
+    """Oracle: A [H,W,C_in] -> E [H,W,C_out], stride 1, 'same' padding,
+    ReLU after PW1 and DW (matching the kernel)."""
+    H, W, C_in = a.shape
+    RS = wd.shape[0]
+    pad = (RS - 1) // 2
+    b = jnp.maximum(jnp.einsum("hwc,cm->hwm", a.astype(jnp.float32),
+                               w1.astype(jnp.float32)), 0.0)
+    bp = jnp.pad(b, ((pad, pad), (pad, pad), (0, 0)))
+    c = sum(bp[r:r + H, s:s + W] * wd[r, s].astype(jnp.float32)[None, None]
+            for r in range(RS) for s in range(RS))
+    c = jnp.maximum(c, 0.0)
+    e = jnp.einsum("hwm,mo->hwo", c, w2.astype(jnp.float32))
+    if residual:
+        e = e + a.astype(jnp.float32)
+    return e.astype(a.dtype)

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) every kernel runs in ``interpret=True`` mode — the
+kernel body executes in Python, validating ring logic and numerics; on a TPU
+backend the same call sites compile through Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .segment_matmul import (SEG_WIDTH, aligned_pool_geometry, fetch_rows,
+                             ring_gemm, stage_rows)
+from .fused_mlp import ring_fused_mlp
+from .ring_decode import ring_cache_update, ring_decode_attention
+from ..core.planner import gemm_offset_closed_form
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_gemm(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                 block_rows: int = 8) -> tuple[jax.Array, dict]:
+    """Plan + stage + run the ring GEMM; returns (result, plan_info).
+
+    This is the one-call demonstration path; production code keeps the pool
+    alive across layers (see examples/quickstart.py).
+    """
+    m, d_in = x.shape
+    d_out = w.shape[1]
+    if b is None:
+        b = jnp.zeros((d_out,), w.dtype)
+    k_segs = -(-d_in // SEG_WIDTH)
+    n_segs = -(-d_out // SEG_WIDTH)
+    delta = gemm_offset_closed_form(m, n_segs, k_segs)
+    n_seg, in_ptr, out_ptr = aligned_pool_geometry(
+        m, d_in, d_out, delta, block_rows)
+    pool = jnp.zeros((n_seg, SEG_WIDTH), x.dtype)
+    pool = stage_rows(pool, x, in_ptr)
+    pool = ring_gemm(pool, w, b, m_rows=m, d_in=d_in, d_out=d_out,
+                     in_ptr=in_ptr, out_ptr=out_ptr, block_rows=block_rows,
+                     interpret=_interpret())
+    y = fetch_rows(pool, out_ptr, m, d_out)
+    info = dict(n_segments=n_seg, in_ptr=in_ptr, out_ptr=out_ptr,
+                delta=delta,
+                pool_bytes=n_seg * SEG_WIDTH * x.dtype.itemsize,
+                naive_bytes=(m * k_segs + m * n_segs) * SEG_WIDTH
+                * x.dtype.itemsize)
+    return y, info
+
+
+def fused_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, *, block_rows: int = 8, ff_tile: int = 512,
+              gated: bool = True, residual: bool = True,
+              activation: str = "gelu") -> jax.Array:
+    """In-place fused MLP through a fresh ring pool (delta == 0)."""
+    m, d = x.shape
+    d_segs = -(-d // SEG_WIDTH)
+    bd = block_rows * d_segs
+    n_seg = -(-(m * d_segs) // bd) * bd
+    pool = jnp.zeros((n_seg, SEG_WIDTH), x.dtype)
+    pool = stage_rows(pool, x, 0)
+    pool = ring_fused_mlp(pool, w_gate, w_up, w_down, m_rows=m, d_model=d,
+                          ptr=0, block_rows=block_rows, ff_tile=ff_tile,
+                          gated=gated, residual=residual,
+                          activation=activation, interpret=_interpret())
+    return fetch_rows(pool, 0, m, d)
+
+
+def decode_attention(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                     seq_len: jax.Array, *, window: int, block: int = 128,
+                     softcap: float | None = None) -> jax.Array:
+    return ring_decode_attention(q, k_ring, v_ring,
+                                 jnp.asarray(seq_len, jnp.int32),
+                                 window=window, block=block, softcap=softcap,
+                                 interpret=_interpret())
+
+
+__all__ = [
+    "segment_gemm", "fused_mlp", "decode_attention", "ring_cache_update",
+    "ring_gemm", "ring_fused_mlp", "ring_decode_attention",
+    "aligned_pool_geometry", "stage_rows", "fetch_rows", "SEG_WIDTH", "ref",
+]

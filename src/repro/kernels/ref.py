@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each oracle computes the mathematical result with no ring/pool mechanics;
+tests stage inputs into a ring, run the kernel, fetch outputs, and
+``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_mlp_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array, *, gated: bool = True,
+                  residual: bool = True,
+                  activation: str = "gelu") -> jax.Array:
+    xf = x.astype(jnp.float32)
+    up = xf @ w_up.astype(jnp.float32)
+    if gated:
+        g = xf @ w_gate.astype(jnp.float32)
+        act = jax.nn.gelu(g) if activation == "gelu" else jax.nn.silu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up) if activation == "gelu" else jax.nn.silu(up)
+    y = h @ w_down.astype(jnp.float32)
+    if residual:
+        y = y + xf
+    return y.astype(x.dtype)
+
+
+def ring_decode_ref(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                    seq_len: int, *, window: int,
+                    softcap: float | None = None) -> jax.Array:
+    """Oracle decode attention over the *logical* (unrolled) window."""
+    q_heads, d = q.shape
+    kv_heads = k_ring.shape[1]
+    group = q_heads // kv_heads
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = k_ring.astype(jnp.float32)
+    vf = v_ring.astype(jnp.float32)
+    s = jnp.einsum("hd,skd->sh",
+                   qf.reshape(kv_heads, group, d).reshape(q_heads, d),
+                   jnp.repeat(kf, group, axis=1)
+                   .reshape(window, q_heads, d)[:, :, :]
+                   ).reshape(window, q_heads) if False else jnp.einsum(
+        "khd,skd->skh", qf.reshape(kv_heads, group, d), kf
+    ).reshape(window, q_heads)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    slot = jnp.arange(window)[:, None]
+    valid = (slot < seq_len) | (seq_len >= window)
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=0)
+    vg = jnp.repeat(vf, group, axis=1)
+    return jnp.einsum("sh,shd->hd", p, vg).astype(q.dtype)

@@ -1,0 +1,128 @@
+"""Ring KV-cache decode attention — vMCU's circular pool applied to
+sliding-window KV caches (gemma2/3, recurrentgemma local layers).
+
+A sliding-window cache IS a vMCU segment pool: slot ``t % window`` holds
+token ``t``'s K/V segment, the write pointer advances modulo the window, and
+"RAMFree" is the overwrite of the evicted token.  The decode kernel is a
+flash-decoding pass over the ring with an *online softmax* accumulated in
+VMEM scratch; slot validity (``t < seq_len`` before the ring fills) plays the
+role of the paper's boundary check.
+
+Layout: k_ring/v_ring ``[window, kv_heads, head_dim]``; q ``[q_heads,
+head_dim]`` (one decode step). GQA: q_heads = kv_heads * group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(seq_len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, window: int, block: int,
+            softcap: float | None):
+    b = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = seq_len_ref[0]
+    q = q_ref[...].astype(jnp.float32)            # [q_heads, d]
+    k = k_ref[...].astype(jnp.float32)            # [block, kv_heads, d]
+    v = v_ref[...].astype(jnp.float32)
+    q_heads, d = q.shape
+    kv_heads = k.shape[1]
+    group = q_heads // kv_heads
+
+    # scores[s, h] for ring slots s in this block
+    qg = q.reshape(kv_heads, group, d)
+    s = jnp.einsum("khd,bkd->bkh", qg * (d ** -0.5), k)   # [block, kv, group]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    # Ring validity: slot id < seq_len OR the ring has fully wrapped.
+    slot = b * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1, 1), 0)
+    valid = (slot < seq_len) | (seq_len >= window)
+    s = jnp.where(valid, s, NEG_INF)
+    s = s.reshape(block, q_heads)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]       # [q_heads]
+    m_cur = jnp.max(s, axis=0)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[None, :])               # [block, q_heads]
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=0)
+    vg = jnp.repeat(v, group, axis=1)             # [block, q_heads, d]
+    pv = jnp.einsum("bh,bhd->hd", p, vg)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(b == nb - 1)
+    def _done():
+        o_ref[...] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block", "softcap", "interpret"))
+def ring_decode_attention(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                          seq_len: jax.Array, *, window: int,
+                          block: int = 128, softcap: float | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """One decode step of attention over a ring KV cache.
+
+    q: [q_heads, head_dim]; k_ring/v_ring: [window, kv_heads, head_dim];
+    seq_len: int32 scalar array — tokens written so far (cache already
+    contains the current token).  Returns [q_heads, head_dim].
+    """
+    q_heads, d = q.shape
+    kv_heads = k_ring.shape[1]
+    if window % block:
+        raise ValueError("block must divide window")
+    grid = (window // block,)
+    kernel = functools.partial(_kernel, window=window, block=block,
+                               softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_heads, d), lambda b, *_: (0, 0)),
+            pl.BlockSpec((block, kv_heads, d), lambda b, *_: (b, 0, 0)),
+            pl.BlockSpec((block, kv_heads, d), lambda b, *_: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((q_heads, d), lambda b, *_: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_heads,), jnp.float32),
+            pltpu.VMEM((q_heads,), jnp.float32),
+            pltpu.VMEM((q_heads, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q_heads, d), q.dtype),
+        interpret=interpret,
+    )(seq_len.reshape(1), q, k_ring, v_ring)
+
+
+def ring_cache_update(k_ring: jax.Array, v_ring: jax.Array, k_new: jax.Array,
+                      v_new: jax.Array, seq_len: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Write one token's K/V into ring slot ``seq_len % window`` — the
+    paper's RAMStore-with-modulo, verbatim."""
+    window = k_ring.shape[0]
+    slot = jnp.asarray(seq_len, jnp.int32) % window
+    k_ring = jax.lax.dynamic_update_slice(
+        k_ring, k_new[None].astype(k_ring.dtype), (slot, 0, 0))
+    v_ring = jax.lax.dynamic_update_slice(
+        v_ring, v_new[None].astype(v_ring.dtype), (slot, 0, 0))
+    return k_ring, v_ring

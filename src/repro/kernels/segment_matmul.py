@@ -1,0 +1,154 @@
+"""Ring-buffer GEMM — the vMCU fully-connected kernel (paper Fig. 4), TPU-native.
+
+MCU mapping (paper)            → TPU mapping (here)
+  RAM segment pool             → HBM pool array [n_segments, SEG_WIDTH]
+                                 (memory_space=ARBITRARY, aliased in/out)
+  RAMLoad  (+ modulo check)    → async_copy pool→VMEM scratch at
+                                 (in_ptr + block·k_segs) % n_segments
+  FlashLoad (weights in Flash) → BlockSpec-streamed HBM→VMEM weight tiles
+  Dot (2x2x16 SADD16/SMLAD)    → MXU jnp.dot on the (block_rows, d_in) tile,
+                                 fp32 accumulation
+  RAMStore (+ modulo check)    → async_copy VMEM→pool at
+                                 (out_ptr + block·n_segs) % n_segments
+  RAMFree                      → implicit: the ring pointer advance IS the
+                                 free (dead segments are overwritten)
+
+Two-level tiling exactly as §5.1: the outer level walks `block_rows` rows of
+segments through the ring; the inner level is the MXU tile (the hardware
+"instruction lane").
+
+Alignment adaptation (DESIGN.md): DMA needs contiguous ranges, so the pool
+length is rounded to a multiple of both the input and output block segment
+counts and pointers are block-aligned — mid-block wrap never occurs.  The
+planner's delta is rounded up accordingly (never down: safety is preserved).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SEG_WIDTH = 128  # lane width; one pool segment row = 128 elements
+
+
+def _segs(d: int) -> int:
+    return -(-d // SEG_WIDTH)
+
+
+def _kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in, sem_out,
+            *, in_ptr: int, out_ptr: int, n_seg: int, block_rows: int,
+            d_in: int, d_out: int):
+    i = pl.program_id(0)
+    k_segs, n_segs = _segs(d_in), _segs(d_out)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+
+    # --- RAMLoad: ring → VMEM ------------------------------------------------
+    in_off = jax.lax.rem(in_ptr + i * bk, n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(in_off, bk)], x_vmem,
+                                 sem_in)
+    load.start()
+    load.wait()
+
+    # --- Dot: MXU on the segment block --------------------------------------
+    x = x_vmem[...].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
+    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...].astype(jnp.float32)
+    y = y.astype(x_vmem.dtype)
+    pad = n_segs * SEG_WIDTH - d_out
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    y_vmem[...] = y.reshape(bn, SEG_WIDTH)
+
+    # --- RAMStore: VMEM → ring (overwrites freed input segments) ------------
+    out_off = jax.lax.rem(out_ptr + i * bn, n_seg)
+    store = pltpu.make_async_copy(y_vmem, out_ref.at[pl.ds(out_off, bn)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+def aligned_pool_geometry(m_rows: int, d_in: int, d_out: int,
+                          delta_segments: int, block_rows: int
+                          ) -> tuple[int, int, int]:
+    """Round the planner's geometry to DMA-safe alignment.
+
+    Returns (n_segments, in_ptr, out_ptr) with in_ptr % bk == 0,
+    out_ptr % bn == 0, n_segments % lcm(bk, bn) == 0 and
+    in_ptr - out_ptr >= delta_segments.
+    """
+    k_segs, n_segs = _segs(d_in), _segs(d_out)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+    out_ptr = 0
+    # smallest bk-multiple >= delta (shifting In UP is always safe)
+    in_ptr = -(-delta_segments // bk) * bk
+    span = max(in_ptr + m_rows * k_segs, m_rows * n_segs)
+    align = math.lcm(bk, bn)
+    n_segments = -(-span // align) * align
+    return n_segments, in_ptr, out_ptr
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_rows", "d_in", "d_out", "in_ptr", "out_ptr",
+                     "block_rows", "interpret"),
+    donate_argnums=(0,))
+def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
+              d_in: int, d_out: int, in_ptr: int, out_ptr: int,
+              block_rows: int = 8, interpret: bool = False) -> jax.Array:
+    """Run ``Out[m_rows, d_out] = In[m_rows, d_in] @ w + b`` inside the ring.
+
+    ``pool``: [n_segments, SEG_WIDTH]; input rows resident at ``in_ptr``;
+    output lands at ``out_ptr`` (planner-solved, block-aligned).  Returns the
+    updated pool (same buffer — donated & aliased).
+    """
+    n_seg = pool.shape[0]
+    k_segs, n_segs = _segs(d_in), _segs(d_out)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+    if m_rows % block_rows:
+        raise ValueError("block_rows must divide m_rows")
+    if n_seg % math.lcm(bk, bn) or in_ptr % bk or out_ptr % bn:
+        raise ValueError("pool/pointers not block-aligned; use "
+                         "aligned_pool_geometry()")
+    grid = (m_rows // block_rows,)
+    kernel = functools.partial(
+        _kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        block_rows=block_rows, d_in=d_in, d_out=d_out)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),      # pool stays HBM
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),   # FlashLoad
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((bn, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b)
+
+
+def stage_rows(pool: jax.Array, rows: jax.Array, ptr: int) -> jax.Array:
+    """Place ``rows [M, d]`` into the ring at segment ``ptr`` (host-side)."""
+    m, d = rows.shape
+    segs = _segs(d)
+    padded = jnp.pad(rows, ((0, 0), (0, segs * SEG_WIDTH - d)))
+    idx = (ptr + jnp.arange(m * segs)) % pool.shape[0]
+    return pool.at[idx].set(padded.reshape(m * segs, SEG_WIDTH)
+                            .astype(pool.dtype))
+
+
+def fetch_rows(pool: jax.Array, ptr: int, m: int, d: int) -> jax.Array:
+    segs = _segs(d)
+    idx = (ptr + jnp.arange(m * segs)) % pool.shape[0]
+    return jnp.take(pool, idx, axis=0).reshape(m, segs * SEG_WIDTH)[:, :d]

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init).  For each cell this script:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. synthesizes ShapeDtypeStruct inputs with shardings (no allocation),
+  3. ``jit(step).lower(...)`` then ``.compile()`` — sharding mismatches,
+     unsupported collectives or compile-time OOM fail HERE,
+  4. records memory_analysis / cost_analysis / collective schedule to JSON
+     for §Dry-run and §Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --cell train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_REGISTRY, cells_for, get_config
+from ..configs.base import ALL_SHAPES
+from ..models.registry import build_model
+from ..roofline.analysis import analyze, model_flops
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+from .specs import input_specs, make_rules
+
+
+def build_step_fn(model, cfg, cell, rules, *, microbatches: int = 1,
+                  remat: str | None = None, cast_bf16: bool = False,
+                  rs_grads: bool = False, two_copy: bool = False):
+    if cell.kind == "train":
+        step = make_train_step(model, rules, microbatches=microbatches,
+                               remat_policy=remat,
+                               cast_params_bf16=cast_bf16,
+                               constrain_grads=rs_grads, two_copy=two_copy)
+        return step
+    if cell.kind == "prefill":
+        if cfg.family in ("vlm", "audio"):
+            def prefill(params, tokens, memory):
+                return model.prefill(params, tokens, rules, memory=memory,
+                                     cache_len=cell.seq_len)
+        else:
+            def prefill(params, tokens):
+                return model.prefill(params, tokens, rules,
+                                     cache_len=cell.seq_len)
+        return prefill
+
+    def decode(params, caches, token, cur_len):
+        return model.decode_step(params, caches, token, cur_len, rules)
+    return decode
+
+
+def _compile_cell(cfg, cell, mesh, rules, *, microbatches, remat,
+                  cast_bf16=False, rs_grads=False, serve_dtype=None,
+                  two_copy=False):
+    model = build_model(cfg)
+    specs = input_specs(model, cfg, cell, rules, serve_dtype=serve_dtype,
+                        two_copy=two_copy)
+    step = build_step_fn(model, cfg, cell, rules, microbatches=microbatches,
+                         remat=remat, cast_bf16=cast_bf16,
+                         rs_grads=rs_grads, two_copy=two_copy)
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=specs.donate).lower(
+            *specs.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _probe_costs(cfg, cell, mesh, rules, *, microbatches, remat,
+                 cast_bf16=False, rs_grads=False, two_copy=False):
+    """Exact per-group cost via two shallow UNROLLED probes.
+
+    XLA's cost_analysis counts a while-loop (scan) body once, so the full
+    scan compile under-reports FLOPs by ~n_groups×.  Probes at 1 and 2
+    unrolled groups give the per-group increment; the cell's true cost is
+    ``c1 + (G-1)·(c2 - c1)`` — exact because every per-group cost
+    (fwd/bwd/optimizer/collectives) is linear in depth."""
+    import dataclasses as _dc
+    p = len(cfg.pattern)
+    lead = cfg.first_dense_layers
+    rem = (cfg.n_layers - lead) % p
+    G = (cfg.n_layers - lead) // p
+    enc = cfg.encoder_layers
+
+    def probe(k_groups: int, k_enc: int):
+        pc = _dc.replace(cfg, scan_layers=False,
+                         n_layers=lead + k_groups * p + rem,
+                         encoder_layers=k_enc)
+        compiled = _compile_cell(pc, cell, mesh, rules,
+                                 microbatches=microbatches, remat=remat,
+                                 cast_bf16=cast_bf16, rs_grads=rs_grads,
+                                 two_copy=two_copy)
+        return analyze(compiled)
+
+    r1 = probe(1, min(enc, 1))
+    r2 = probe(2, min(enc, 2))
+
+    def lerp(a, b):
+        return a + (G - 1) * (b - a) if not enc else a + (G - 1) * (b - a)
+
+    flops = lerp(r1.flops_per_chip, r2.flops_per_chip)
+    byts = lerp(r1.hbm_bytes_per_chip, r2.hbm_bytes_per_chip)
+    colls = {}
+    for kind in set(r1.collectives) | set(r2.collectives):
+        c1 = r1.collectives.get(kind, {"count": 0, "bytes": 0.0})
+        c2 = r2.collectives.get(kind, {"count": 0, "bytes": 0.0})
+        colls[kind] = {
+            "count": int(lerp(c1["count"], c2["count"])),
+            "bytes": lerp(c1["bytes"], c2["bytes"]),
+        }
+    from ..roofline.analysis import Roofline
+    return Roofline(flops_per_chip=flops, hbm_bytes_per_chip=byts,
+                    collective_bytes_per_chip=sum(v["bytes"]
+                                                  for v in colls.values()),
+                    collectives=colls)
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, *,
+             microbatches: int = 1, remat: str | None = None,
+             unroll: bool = False, probe: bool = True,
+             cast_bf16: bool = False, rs_grads: bool = False,
+             moe_dispatch: str | None = None, serve_bf16: bool = False,
+             bf16_einsum: bool = False, two_copy: bool = False,
+             sp_residual: bool = False, kv_fp8: bool = False,
+             save_hlo: str | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if unroll:
+        cfg = _dc.replace(cfg, scan_layers=False)
+    if moe_dispatch:
+        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+    if bf16_einsum:
+        cfg = _dc.replace(cfg, bf16_einsum=True)
+    cell = next(c for c in ALL_SHAPES if c.name == cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh, cell, multi_pod=multi_pod)
+    import jax.numpy as _jnp
+    sdt = _jnp.bfloat16 if serve_bf16 else None
+    kdt = _jnp.float8_e4m3fn if kv_fp8 else _jnp.bfloat16
+    model = build_model(cfg)
+    specs = input_specs(model, cfg, cell, rules, serve_dtype=sdt,
+                        kv_dtype=kdt, two_copy=two_copy)
+    step = build_step_fn(model, cfg, cell, rules, microbatches=microbatches,
+                         remat=remat, cast_bf16=cast_bf16, rs_grads=rs_grads,
+                         two_copy=two_copy)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=specs.donate).lower(
+            *specs.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    if probe and not multi_pod:
+        # Roofline table is single-pod: probe-extrapolated exact costs.
+        # Probes always run microbatches=1 — the grad-accumulation scan is
+        # a while loop whose body cost_analysis counts once, but per-step
+        # totals are microbatch-invariant (only peak memory changes).
+        roof = _probe_costs(cfg, cell, mesh, rules,
+                            microbatches=1, remat=remat,
+                            cast_bf16=cast_bf16, rs_grads=rs_grads,
+                            two_copy=two_copy)
+    else:
+        roof = analyze(compiled, hlo)
+    n_chips = mesh.devices.size
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    useful = model_flops(cfg.param_count(), cfg.active_param_count(),
+                         tokens, cell.kind) / n_chips
+    rec = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": cfg.shard_mode,
+        "microbatches": microbatches,
+        "cast_bf16": cast_bf16,
+        "rs_grads": rs_grads,
+        "moe_dispatch": cfg.moe_dispatch,
+        "serve_bf16": serve_bf16,
+        "bf16_einsum": cfg.bf16_einsum,
+        "two_copy": two_copy,
+        "sp_residual": sp_residual,
+        "kv_fp8": kv_fp8,
+        "unrolled": unroll,
+        "remat": remat or cfg.remat_policy,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes),
+            "fits_16g": (mem.argument_size_in_bytes
+                         + mem.temp_size_in_bytes) < 16e9,
+        },
+        "roofline": {
+            "flops_per_chip": roof.flops_per_chip,
+            "hbm_bytes_per_chip": roof.hbm_bytes_per_chip,
+            "t_compute_s": roof.t_compute,
+            "t_memory_s": roof.t_memory,
+            "t_collective_s": roof.t_collective,
+            "dominant": roof.dominant,
+            "collectives": roof.collectives,
+            "useful_flops_per_chip": useful,
+            "model_flops_ratio": (useful / roof.flops_per_chip
+                                  if roof.flops_per_chip else 0.0),
+            "roofline_fraction": roof.fraction_of_roofline(useful),
+        },
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--cell", type=str)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer groups for exact cost_analysis")
+    ap.add_argument("--cast-bf16", action="store_true",
+                    help="hillclimb: bf16 shard-local param casting")
+    ap.add_argument("--rs-grads", action="store_true",
+                    help="hillclimb: reduce-scatter gradient constraint")
+    ap.add_argument("--moe-dispatch", type=str, default=None,
+                    help="hillclimb: MoE dispatch variant (scan)")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="hillclimb: bf16 weights for prefill/decode")
+    ap.add_argument("--two-copy", action="store_true",
+                    help="hillclimb: bf16 param copy in TrainState")
+    ap.add_argument("--sp-residual", action="store_true",
+                    help="hillclimb: Megatron-SP residual sharding (tp)")
+    ap.add_argument("--kv-fp8", action="store_true",
+                    help="hillclimb: fp8(e4m3) KV caches for decode")
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--save-hlo", type=str, default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch, cfg in ARCH_REGISTRY.items():
+            for cell in cells_for(cfg):
+                jobs.append((arch, cell.name, False))
+                jobs.append((arch, cell.name, True))
+    else:
+        jobs.append((args.arch, args.cell, args.multi_pod))
+
+    for arch, cell, mp in jobs:
+        tag = f"{arch}__{cell}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and args.all:
+            print(f"[skip] {tag}")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            rec = run_cell(arch, cell, mp, microbatches=args.microbatches,
+                           remat=args.remat, unroll=args.unroll,
+                           cast_bf16=args.cast_bf16, rs_grads=args.rs_grads,
+                           moe_dispatch=args.moe_dispatch,
+                           serve_bf16=args.serve_bf16,
+                           two_copy=args.two_copy,
+                           sp_residual=args.sp_residual,
+                           kv_fp8=args.kv_fp8,
+                           save_hlo=args.save_hlo)
+        except Exception as e:  # record failures — they are findings
+            rec = {"arch": arch, "cell": cell,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            m = rec["memory"]
+            r = rec["roofline"]
+            extra = (f"peak={m['peak_bytes']/1e9:.2f}GB "
+                     f"dom={r['dominant']} "
+                     f"frac={r['roofline_fraction']:.3f} "
+                     f"compile={rec['compile_s']:.0f}s")
+        print(f"[done] {tag}: {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

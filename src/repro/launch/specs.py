@@ -1,0 +1,163 @@
+"""ShapeDtypeStruct stand-ins (+ shardings) for every (arch × shape) cell.
+
+Nothing here allocates: params/state/caches come from ``jax.eval_shape`` and
+inputs are synthesized structs.  ``input_specs`` is the single entry point
+the dry-run, roofline and launch scripts share.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..models.transformer import Model
+from ..parallel.sharding import AxisRules
+from ..train.data import batch_spec
+from ..train.optimizer import TrainState
+from ..train.train_step import init_train_state
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh | None, cell: ShapeCell,
+               multi_pod: bool = False) -> AxisRules:
+    model_size = mesh.shape.get("model", 1) if mesh is not None else 1
+    return AxisRules(
+        mesh=mesh,
+        mode=cfg.shard_mode,
+        multi_pod=multi_pod,
+        decode=(cell.kind == "decode"),
+        long_context=(cell.kind == "decode" and cell.global_batch == 1),
+        kv_shardable=(model_size > 0
+                      and cfg.n_kv_heads % max(model_size, 1) == 0),
+    )
+
+
+def _with_sharding(shapes: Any, shardings: Any) -> Any:
+    def attach(s, ns):
+        if ns is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+    return jax.tree.map(attach, shapes, shardings)
+
+
+def state_specs(model: Model, rules: AxisRules, *,
+                two_copy: bool = False) -> TrainState:
+    shapes = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0),
+                                 two_copy=two_copy))
+    shardings = TrainState(
+        step=rules.sharding() and NamedSharding(rules.mesh, P()),
+        params=rules.params_shardings(shapes.params),
+        mu=rules.params_shardings(shapes.mu),
+        nu=rules.params_shardings(shapes.nu),
+        cast=(rules.params_shardings(shapes.cast) if two_copy else None),
+    )
+    return _with_sharding(shapes, shardings)
+
+
+def params_specs(model: Model, rules: AxisRules, *,
+                 dtype=None) -> Any:
+    """Param ShapeDtypeStructs; ``dtype`` overrides float leaves (serving
+    runs bf16 weights — §Perf global improvement)."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if s.dtype == jnp.float32 else s.dtype),
+            shapes)
+    return _with_sharding(shapes, rules.params_shardings(shapes))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, rules: AxisRules) -> dict:
+    spec = batch_spec(cfg, cell)
+    out = {}
+    for name, s in spec.items():
+        dims = ("batch",) + (None,) * (len(s.shape) - 1)
+        ns = rules.sharding(*dims)
+        out[name] = (jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+                     if ns is not None else s)
+    return out
+
+
+def cache_specs(model: Model, cfg: ModelConfig, rules: AxisRules,
+                batch: int, cache_len: int, dtype=jnp.bfloat16) -> Any:
+    shapes = jax.eval_shape(
+        lambda: model.init_caches(batch, cache_len, dtype))
+
+    def classify(s: jax.ShapeDtypeStruct):
+        shp = s.shape
+        nd = len(shp)
+        kv_sig = (cfg.n_kv_heads, cfg.head_dim)
+        if nd >= 4 and shp[-2:] == kv_sig:
+            seq = shp[-3]
+            lead = (None,) * (nd - 4)
+            if seq == cache_len and cache_len != cfg.window:
+                dims = lead + ("batch", "kv_seq", "kv_heads", None)
+            else:  # ring window or cross-memory KV — small, seq-replicated
+                dims = lead + ("batch", None, "kv_heads", None)
+            return rules.sharding(*dims)
+        if cfg.ssm_state and nd >= 4 and shp[-2:] == (cfg.ssm_head_dim,
+                                                      cfg.ssm_state):
+            lead = (None,) * (nd - 4)
+            return rules.sharding(*(lead + ("batch", "heads", None, None)))
+        if shp[-1] == (cfg.lru_width or -1):
+            if nd >= 3 and shp[-2] == cfg.ssm_conv - 1:   # conv [..,B,K-1,W]
+                lead = (None,) * (nd - 3)
+                return rules.sharding(*(lead + ("batch", None, "tp")))
+            if nd >= 2 and shp[-2] == batch:              # h state [..,B,W]
+                lead = (None,) * (nd - 2)
+                return rules.sharding(*(lead + ("batch", "tp")))
+        # conv states & misc: batch-shard only
+        lead = (None,) * (len(shp) - 1)
+        bdim = next((i for i, d in enumerate(shp) if d == batch), None)
+        dims = tuple("batch" if i == bdim else None for i in range(nd))
+        return rules.sharding(*dims)
+
+    shardings = jax.tree.map(classify, shapes)
+    return _with_sharding(shapes, shardings)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpecs:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    kind: str
+    args: tuple            # positional ShapeDtypeStructs for the step fn
+    donate: tuple[int, ...]
+
+
+def input_specs(model: Model, cfg: ModelConfig, cell: ShapeCell,
+                rules: AxisRules, *, serve_dtype=None,
+                kv_dtype=jnp.bfloat16,
+                two_copy: bool = False) -> CellSpecs:
+    if cell.kind == "train":
+        return CellSpecs(
+            kind="train",
+            args=(state_specs(model, rules, two_copy=two_copy),
+                  batch_specs(cfg, cell, rules)),
+            donate=(0,),
+        )
+    if cell.kind == "prefill":
+        params = params_specs(model, rules, dtype=serve_dtype)
+        toks = jax.ShapeDtypeStruct(
+            (cell.global_batch, cell.seq_len), jnp.int32,
+            sharding=rules.sharding("batch", None))
+        args = [params, toks]
+        if cfg.family in ("vlm", "audio"):
+            L = (cfg.n_image_tokens if cfg.family == "vlm"
+                 else cfg.encoder_seq)
+            args.append(jax.ShapeDtypeStruct(
+                (cell.global_batch, L, cfg.d_model), jnp.bfloat16,
+                sharding=rules.sharding("batch", None, None)))
+        return CellSpecs(kind="prefill", args=tuple(args), donate=())
+    # decode
+    params = params_specs(model, rules, dtype=serve_dtype)
+    caches = cache_specs(model, cfg, rules, cell.global_batch,
+                         cell.seq_len, dtype=kv_dtype)
+    token = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32,
+                                 sharding=rules.sharding("batch"))
+    cur = jax.ShapeDtypeStruct((), jnp.int32, sharding=rules.sharding())
+    return CellSpecs(kind="decode", args=(params, caches, token, cur),
+                     donate=(1,))

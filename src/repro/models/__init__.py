@@ -1,0 +1,2 @@
+"""Model zoo: one scan-over-groups engine (transformer.py) + family blocks."""
+from .transformer import Model, init_block, block_forward, block_step

@@ -1,0 +1,266 @@
+"""Shared layers: norms, RoPE, attention (full / sliding / cross / decode),
+dense MLPs.  Pure JAX, mesh-agnostic (sharding via AxisRules callbacks).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import AxisRules
+
+NEG_INF = -2.3819763e38  # large negative for masking (bf16-safe)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (training / prefill): chunked-query softmax attention.
+# --------------------------------------------------------------------------
+
+def _softcap(s: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return s
+    return jnp.tanh(s / cap) * cap
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat KV heads to the full head count.  Keeping the head axis
+    FLAT (no [KV, group] reshape) lets GSPMD carry the head sharding through
+    every einsum — with kv-heads sharded the repeat stays shard-local, with
+    kv replicated only the q heads shard (Megatron GQA)."""
+    group = n_heads // k.shape[2]
+    return jnp.repeat(k, group, axis=2) if group > 1 else k
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool, window: int | None,
+              softcap: float | None, q_offset: int = 0,
+              chunk: int = 2048, bf16_einsum: bool = False) -> jax.Array:
+    """q: [B,Sq,H,D]; k/v: [B,Skv,KV,D] (GQA).  Query-chunked so the score
+    matrix never exceeds [B,H,chunk,Skv] — XLA keeps one chunk live.
+
+    ``bf16_einsum`` (§Perf): feed the MXU bf16 operands with fp32
+    accumulation (preferred_element_type) instead of materializing fp32
+    copies of K/V — XLA otherwise places the seq all-gather AFTER the
+    upcast, doubling collective and HBM bytes.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    qs = q * (D ** -0.5)
+
+    def chunk_attn(qc: jax.Array, cstart) -> jax.Array:
+        if bf16_einsum:
+            # bf16 score pipeline with fp32 reductions: the [B,H,chunk,S]
+            # score matrix — the largest recurring HBM tensor in training —
+            # stays bf16 end-to-end; max/sum accumulate fp32.  Halves the
+            # dominant memory-roofline term (§Perf A3).
+            s = jnp.einsum("bqhd,bshd->bhqs", qc, k,
+                           preferred_element_type=jnp.float32
+                           ).astype(q.dtype)
+        else:
+            s = jnp.einsum("bqhd,bshd->bhqs", qc.astype(jnp.float32),
+                           k.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        qpos = (cstart + q_offset
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2))
+        kpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF if s.dtype == jnp.float32
+                      else jnp.finfo(s.dtype).min)
+        if bf16_einsum:
+            m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+            p = jnp.exp(s - m.astype(s.dtype))          # bf16, max-shifted
+            l = jnp.sum(p, axis=-1, keepdims=True,
+                        dtype=jnp.float32)              # fp32 accumulation
+            p = (p / l.astype(s.dtype))
+            return jnp.einsum("bhqs,bshd->bqhd", p, v,
+                              preferred_element_type=jnp.float32
+                              ).astype(q.dtype)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    if Sq <= chunk:
+        return chunk_attn(qs, 0)
+    n = -(-Sq // chunk)
+    pad = n * chunk - Sq
+    qp = jnp.pad(qs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qp = qp.reshape(B, n, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    outs = jax.lax.map(
+        lambda args: chunk_attn(args[0], args[1] * chunk),
+        (qp, jnp.arange(n)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cur_len: jax.Array, *, softcap: float | None,
+                     ring: bool = False, window: int = 0) -> jax.Array:
+    """Single-step decode.  q: [B,1,H,D]; k/v: [B,S,KV,D] (S = max seq or
+    ring window).  ``cur_len``: tokens so far *including* the current one.
+    For ``ring`` caches, slot validity is the vMCU boundary check.
+
+    GROUPED einsums, no KV expansion: decode caches are sharded on the
+    sequence (or kv-head) axis, which the grouped contraction preserves;
+    expanding KV to H heads would multiply cache-sized temporaries by the
+    GQA group (8x for llama-90b — §Perf global improvement)."""
+    B, _, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = (q.astype(jnp.float32) * D ** -0.5).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    slot = jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    if ring:
+        valid = (slot < cur_len) | (cur_len >= window)
+    else:
+        valid = slot < cur_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention block params + forward
+# --------------------------------------------------------------------------
+
+def init_attn(key: jax.Array, cfg: ModelConfig, *, cross: bool = False
+              ) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "ln": init_norm(cfg),
+        "w_q": jax.random.normal(k1, (d, qd), jnp.float32) * s,
+        "w_k": jax.random.normal(k2, (d, kvd), jnp.float32) * s,
+        "w_v": jax.random.normal(k3, (d, kvd), jnp.float32) * s,
+        "w_o": jax.random.normal(k4, (qd, d), jnp.float32) * s,
+    }
+    if cfg.post_norms:
+        p["post_ln"] = init_norm(cfg)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, S_or_window, KV, D]
+    v: jax.Array
+
+
+def project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+                positions: jax.Array, *, rope_q: bool = True,
+                rope_k: bool = True):
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = (x @ p["w_q"].astype(dt)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["w_k"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["w_v"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if rope_q:
+        q = rope(q, positions, cfg.rope_theta)
+    if rope_k:
+        k = rope(k, positions, cfg.rope_theta)
+    q = rules.act(q, "batch", "seq", "heads", None)
+    # K/V replicated over seq shards (explicit all-gather point in fsdp_sp)
+    k = rules.act(k, "batch", None, "kv_heads", None)
+    v = rules.act(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Dense MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None
+             ) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "ln": init_norm(cfg),
+        "w_up": jax.random.normal(k2, (d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (f, d), jnp.float32) * s_out,
+    }
+    if cfg.mlp in ("geglu", "swiglu"):
+        p["w_gate"] = jax.random.normal(k1, (d, f), jnp.float32) * s_in
+    if cfg.post_norms:
+        p["post_ln"] = init_norm(cfg)
+    return p
+
+
+def mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules
+                ) -> jax.Array:
+    dt = x.dtype
+    h = apply_norm(p["ln"], x, cfg)
+    up = h @ p["w_up"].astype(dt)
+    up = rules.act(up, "batch", "seq", "ff")
+    if cfg.mlp == "geglu":
+        g = h @ p["w_gate"].astype(dt)
+        up = jax.nn.gelu(g) * up
+    elif cfg.mlp == "swiglu":
+        g = h @ p["w_gate"].astype(dt)
+        up = jax.nn.silu(g) * up
+    else:
+        up = jax.nn.gelu(up)
+    out = up @ p["w_down"].astype(dt)
+    out = rules.act(out, "batch", "res_seq", None)
+    if cfg.post_norms:
+        out = apply_norm(p["post_ln"], out, cfg)
+    return out

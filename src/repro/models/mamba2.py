@@ -1,0 +1,206 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: sequence is split into chunks; within a chunk the quadratic
+(attention-like) form runs on the MXU, across chunks a small state
+[H, P, N] recurrence is scanned — the asymptotically-linear part.  The
+recurrent state is the ultimate vMCU ring: O(1) segments regardless of
+context length (why mamba2 runs the long_500k cell).
+
+Single-token ``step`` drives decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import AxisRules
+from .common import apply_norm, init_norm, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # [B, H, P, N]
+    conv: jax.Array        # [B, K-1, conv_dim]
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    conv_dim = di + 2 * G * N
+    return {
+        "ln": init_norm(cfg),
+        "ssm_w_z": jax.random.normal(ks[0], (d, di), jnp.float32) * s,
+        "ssm_w_x": jax.random.normal(ks[1], (d, di), jnp.float32) * s,
+        "ssm_w_b": jax.random.normal(ks[2], (d, G * N), jnp.float32) * s,
+        "ssm_w_c": jax.random.normal(ks[3], (d, G * N), jnp.float32) * s,
+        "ssm_w_dt": jax.random.normal(ks[4], (d, H), jnp.float32) * s,
+        "ssm_conv": jax.random.normal(ks[5], (cfg.ssm_conv, conv_dim),
+                                      jnp.float32) * 0.1,
+        "ssm_a_log": jnp.zeros((H,), jnp.float32),
+        "ssm_dt_bias": jnp.zeros((H,), jnp.float32),
+        "ssm_d": jnp.ones((H,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), jnp.float32),
+        "ssm_out": jax.random.normal(ks[6], (di, d), jnp.float32)
+        / math.sqrt(di),
+    }
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv1d.  seq: [B,S,C]; w: [K,C]; state: [B,K-1,C]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(seq[:, : K - 1])
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i].astype(seq.dtype)
+              for i in range(K))
+    return jax.nn.silu(out), full[:, -(K - 1):]
+
+
+def _ssd_chunked(x, dt, A, B_, C, chunk: int):
+    """Chunked SSD scan.  x: [B,S,H,P]; dt: [B,S,H]; A: [H];
+    B_/C: [B,S,G,N].  Returns y [B,S,H,P]."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    nc = S // chunk
+    rep = H // G
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = jnp.repeat(B_.reshape(Bb, nc, chunk, G, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(Bb, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]          # [B,nc,c,H] (<0)
+    seg = jnp.cumsum(dA, axis=2)                           # within-chunk sums
+    total = seg[:, :, -1]                                  # [B,nc,H]
+
+    # --- intra-chunk (quadratic within chunk) ---------------------------------
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]     # [B,nc,ci,cj,H]
+    mask = jax.lax.broadcasted_iota(jnp.int32, li.shape, 2) >= \
+        jax.lax.broadcasted_iota(jnp.int32, li.shape, 3)
+    decay = jnp.where(mask, jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * decay
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # --- chunk states + inter-chunk recurrence --------------------------------
+    decay_in = jnp.exp(total[:, :, None, :] - seg)         # [B,nc,c,H]
+    chunk_state = jnp.einsum("bcjhn,bcjh,bcjh,bcjhp->bchpn",
+                             Bc, decay_in, dtc, xc)
+
+    def scan_fn(carry, inp):
+        st_prev = carry
+        tot, cs = inp
+        st = st_prev * jnp.exp(tot)[..., None, None] + cs
+        return st, st_prev
+
+    init = jnp.zeros((Bb, H, P, N), x.dtype)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (total.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
+
+    decay_out = jnp.exp(seg)                               # [B,nc,c,H]
+    y_inter = jnp.einsum("bcihn,bcih,bchpn->bcihp",
+                         Cc, decay_out, prev_states)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+                cache: SSMCache | None = None, *, return_cache: bool = False):
+    """Full-sequence forward (train / prefill)."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    h = apply_norm(p["ln"], x, cfg)
+    z = h @ p["ssm_w_z"].astype(dt_)
+    xs = h @ p["ssm_w_x"].astype(dt_)
+    Bp = h @ p["ssm_w_b"].astype(dt_)
+    Cp = h @ p["ssm_w_c"].astype(dt_)
+    dt = jax.nn.softplus((h @ p["ssm_w_dt"].astype(dt_)).astype(jnp.float32)
+                         + p["ssm_dt_bias"])
+    conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["ssm_conv"], None)
+    xs, Bp, Cp = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    xs = rules.act(xs.reshape(B, S, H, P), "batch", "seq", "heads", None)
+    Bp = Bp.reshape(B, S, G, N).astype(jnp.float32)
+    Cp = Cp.reshape(B, S, G, N).astype(jnp.float32)
+
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad:  # zero-dt padding is a no-op on the state recurrence
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bp = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cp = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y = _ssd_chunked(xs.astype(jnp.float32), dt, p["ssm_a_log"], Bp, Cp,
+                     chunk)
+    if pad:
+        y, xs, Bp, dt = (a[:, :S] for a in (y, xs, Bp, dt))
+    y = y + xs.astype(jnp.float32) * p["ssm_d"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = y @ p["ssm_out"].astype(dt_)
+    out = rules.act(out, "batch", "res_seq", None)
+    if not return_cache:
+        return out, None
+    # final state for decode handoff
+    dA = dt * (-jnp.exp(p["ssm_a_log"]))[None, None]
+    seg = jnp.cumsum(dA, axis=1)
+    decay_in = jnp.exp(seg[:, -1:, :] - seg)
+    state = jnp.einsum("bshn,bsh,bsh,bshp->bhpn",
+                       jnp.repeat(Bp, H // G, axis=2), decay_in, dt,
+                       xs.astype(jnp.float32))
+    return out, SSMCache(state=state.astype(jnp.float32),
+                         conv=conv_state.astype(dt_))
+
+
+def ssm_step(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+             cache: SSMCache):
+    """One decode token.  x: [B,1,d]."""
+    B, _, d = x.shape
+    dt_ = x.dtype
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    h = apply_norm(p["ln"], x, cfg)[:, 0]
+    z = h @ p["ssm_w_z"].astype(dt_)
+    xs = h @ p["ssm_w_x"].astype(dt_)
+    Bp = h @ p["ssm_w_b"].astype(dt_)
+    Cp = h @ p["ssm_w_c"].astype(dt_)
+    dt = jax.nn.softplus((h @ p["ssm_w_dt"].astype(dt_)).astype(jnp.float32)
+                         + p["ssm_dt_bias"])                     # [B,H]
+    conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)             # [B,C]
+    K = cfg.ssm_conv
+    full = jnp.concatenate([cache.conv.astype(dt_), conv_in[:, None]], 1)
+    w = p["ssm_conv"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", full, w))
+    new_conv = full[:, 1:]
+    xs, Bp, Cp = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    Bp = jnp.repeat(Bp.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Cp = jnp.repeat(Cp.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * (-jnp.exp(p["ssm_a_log"]))[None])          # [B,H]
+    state = (cache.state * dA[..., None, None]
+             + jnp.einsum("bhn,bh,bhp->bhpn", Bp, dt, xs))
+    y = jnp.einsum("bhn,bhpn->bhp", Cp, state)
+    y = y + xs * p["ssm_d"][None, :, None]
+    y = y.reshape(B, di).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = (y @ p["ssm_out"].astype(dt_))[:, None]
+    return out, SSMCache(state=state, conv=new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                   ) -> SSMCache:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-free capacity dispatch.
+
+Dispatch is scatter-based (one-hot rank within expert → static-capacity
+slots), NOT dense-einsum-over-all-experts, so compiled FLOPs reflect only
+the *active* expert compute — required for an honest roofline (§Roofline
+counts MODEL_FLOPS = 6·N_active·D for MoE).
+
+Supports granite-moe (32e top-8) and deepseek-moe (2 shared + 64 routed
+top-6, fine-grained).  Experts are sharded on the ``model`` axis; the
+scatter/gather around the expert GEMMs is where XLA SPMD places the
+all-to-all — visible in the dry-run HLO.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import AxisRules
+from .common import apply_norm, init_norm
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 8)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "ln": init_norm(cfg),
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s_in,
+        "moe_gate": jax.random.normal(ks[1], (E, d, f), jnp.float32) * s_in,
+        "moe_up": jax.random.normal(ks[2], (E, d, f), jnp.float32) * s_in,
+        "moe_down": jax.random.normal(ks[3], (E, f, d), jnp.float32) * s_out,
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_gate"] = jax.random.normal(ks[4], (d, fs), jnp.float32) * s_in
+        p["shared_up"] = jax.random.normal(ks[5], (d, fs), jnp.float32) * s_in
+        p["shared_down"] = jax.random.normal(ks[6], (fs, d), jnp.float32) * s_out
+    return p
+
+
+def _act(cfg: ModelConfig, g: jax.Array, u: jax.Array) -> jax.Array:
+    return (jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g)) * u
+
+
+def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: [B,S,d] → (out [B,S,d], aux_loss scalar)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    h = apply_norm(p["ln"], x, cfg)
+    T = B * S
+    ht = h.reshape(T, d)
+    E, k = cfg.n_experts, cfg.top_k
+    # capacity: cf-scaled, but never dropping when T is tiny (decode steps —
+    # a token occupies at most one slot per expert, so cap >= T is lossless)
+    cap = max(1, int(cfg.capacity_factor * T * k / E), min(T, 16))
+
+    logits = (ht @ p["router"].astype(dt)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, k)                        # [T, k]
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+
+    # load-balance aux loss (Switch-style) + router z-loss
+    density = jnp.mean(jax.nn.one_hot(eidx[:, 0], E), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_prob)
+    aux = aux + 1e-3 * jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1)))
+
+    # rank within expert → capacity slot (scatter dispatch)
+    flat_e = eidx.reshape(-1)                                   # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    if cfg.moe_dispatch == "scan":
+        # log-depth prefix sum: jnp.cumsum lowers to reduce-window, which
+        # HLO costs (and TPU executes) as O(n·w) — quadratic in tokens.
+        # associative_scan is O(n log n) adds (§Perf hillclimb C, it. 1).
+        csum = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+    else:  # "cumsum" — the baseline recorded in §Roofline
+        csum = jnp.cumsum(onehot, axis=0)
+    rank = (csum * onehot).sum(-1) - 1                          # [T*k]
+    keep = rank < cap
+    xk = jnp.repeat(ht, k, axis=0)
+    if cfg.moe_dispatch == "scan":
+        # expert-major scatter target, constrained to the expert (model)
+        # axis BEFORE the scatter so the dispatch exchange is an
+        # all-to-all-sized reshard, not an all-reduce of the whole buffer
+        # (§Perf hillclimb C, it. 2).
+        rank_c = jnp.clip(rank, 0, cap - 1)
+        buf = jnp.zeros((E, cap, d), dt)
+        buf = rules.act(buf, "heads", None, None)
+        xe = buf.at[flat_e, rank_c].add(jnp.where(keep[:, None], xk, 0))
+    else:
+        slot = flat_e * cap + jnp.clip(rank, 0, cap - 1)
+        buf = jnp.zeros((E * cap, d), dt).at[slot].add(
+            jnp.where(keep[:, None], xk, 0))
+        xe = buf.reshape(E, cap, d)
+    xe = rules.act(xe, "heads", None, None)   # experts on model axis
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["moe_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["moe_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", _act(cfg, g, u),
+                   p["moe_down"].astype(dt))
+    y = rules.act(y, "heads", None, None)
+
+    if cfg.moe_dispatch == "scan":
+        out = y[flat_e, jnp.clip(rank, 0, cap - 1)] * keep[:, None]
+    else:
+        out = y.reshape(E * cap, d)[slot] * keep[:, None]
+    out = (out.reshape(T, k, d)
+           * gate[..., None].astype(dt)).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sg = ht @ p["shared_gate"].astype(dt)
+        su = ht @ p["shared_up"].astype(dt)
+        out = out + _act(cfg, sg, su) @ p["shared_down"].astype(dt)
+
+    out = rules.act(out.reshape(B, S, d), "batch", "res_seq", None)
+    return out, aux

@@ -1,0 +1,9 @@
+"""Config name → Model facade."""
+from ..configs import get_config
+from .transformer import Model
+
+
+def build_model(name_or_cfg) -> Model:
+    cfg = (name_or_cfg if not isinstance(name_or_cfg, str)
+           else get_config(name_or_cfg))
+    return Model(cfg)

@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: ``h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)`` with
+``a_t = exp(−c · softplus(Λ) · σ(r_t))``.  Full-sequence forward uses an
+associative scan (log-depth — the parallel form used for training); decode
+is the O(1)-state step.  Gates are diagonal (per-channel), a documented
+simplification of Griffin's block-diagonal gate matrices (DESIGN.md).
+
+Like the Mamba state, the LRU hidden state is a one-segment vMCU ring.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import AxisRules
+from .common import apply_norm, init_norm
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+class LRUCache(NamedTuple):
+    h: jax.Array       # [B, W]
+    conv: jax.Array    # [B, K-1, W]
+
+
+def init_rec(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln": init_norm(cfg),
+        "lru_w_y": jax.random.normal(ks[0], (d, w), jnp.float32) * s,  # gate
+        "lru_w_x": jax.random.normal(ks[1], (d, w), jnp.float32) * s,  # main
+        "lru_conv": jax.random.normal(ks[2], (cfg.ssm_conv, w),
+                                      jnp.float32) * 0.1,
+        "lru_lambda": jax.random.uniform(ks[3], (w,), jnp.float32,
+                                         0.9, 0.999),
+        "lru_gate_a": jax.random.normal(ks[4], (w,), jnp.float32) * 0.1,
+        "lru_gate_i": jax.random.normal(ks[5], (w,), jnp.float32) * 0.1,
+        "lru_out": jax.random.normal(jax.random.fold_in(key, 7), (w, d),
+                                     jnp.float32) / math.sqrt(w),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    """a_t, gated input — x: [..., W] fp32."""
+    log_lam = jax.nn.softplus(8.0 * p["lru_lambda"])
+    r = jax.nn.sigmoid(x * p["lru_gate_a"])
+    i = jax.nn.sigmoid(x * p["lru_gate_i"])
+    log_a = -_C * log_lam * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * x
+
+
+def _assoc_scan(a: jax.Array, bx: jax.Array, h0: jax.Array | None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over axis 1."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rec_forward(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+                cache: LRUCache | None = None, *,
+                return_cache: bool = False):
+    """x: [B,S,d] → mixed output (pre-residual)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    h = apply_norm(p["ln"], x, cfg)
+    y_gate = jax.nn.gelu(h @ p["lru_w_y"].astype(dt))
+    xs = h @ p["lru_w_x"].astype(dt)
+    # causal depthwise conv1d
+    K = p["lru_conv"].shape[0]
+    pad = (jnp.zeros_like(xs[:, : K - 1]) if cache is None
+           else cache.conv.astype(dt))
+    full = jnp.concatenate([pad, xs], axis=1)
+    xs = sum(full[:, i:i + S] * p["lru_conv"][i].astype(dt) for i in range(K))
+    xs = rules.act(xs, "batch", "seq", "tp")
+
+    a, bx = _gates(p, xs.astype(jnp.float32))
+    h0 = None if cache is None else cache.h
+    hseq = _assoc_scan(a, bx, h0)
+    out = (hseq.astype(dt) * y_gate) @ p["lru_out"].astype(dt)
+    out = rules.act(out, "batch", "res_seq", None)
+    if not return_cache:
+        return out, None
+    return out, LRUCache(h=hseq[:, -1], conv=full[:, -(K - 1):])
+
+
+def rec_step(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+             cache: LRUCache):
+    B, _, d = x.shape
+    dt = x.dtype
+    h = apply_norm(p["ln"], x, cfg)[:, 0]
+    y_gate = jax.nn.gelu(h @ p["lru_w_y"].astype(dt))
+    xs = h @ p["lru_w_x"].astype(dt)
+    K = p["lru_conv"].shape[0]
+    full = jnp.concatenate([cache.conv.astype(dt), xs[:, None]], axis=1)
+    xs = jnp.einsum("bkw,kw->bw", full, p["lru_conv"].astype(dt))
+    a, bx = _gates(p, xs.astype(jnp.float32))
+    h_new = a * cache.h + bx
+    out = ((h_new.astype(dt) * y_gate) @ p["lru_out"].astype(dt))[:, None]
+    return out, LRUCache(h=h_new, conv=full[:, 1:])
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                   ) -> LRUCache:
+    w = cfg.lru_width or cfg.d_model
+    return LRUCache(h=jnp.zeros((batch, w), jnp.float32),
+                    conv=jnp.zeros((batch, cfg.ssm_conv - 1, w), dtype))

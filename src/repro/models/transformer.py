@@ -1,0 +1,576 @@
+"""Unified model: decoder LM / MoE / hybrid / SSM / enc-dec / VLM.
+
+One scan-over-layer-groups engine serves all ten assigned architectures:
+``cfg.pattern`` names the repeating block kinds; full groups run under
+``jax.lax.scan`` (keeps HLO size depth-independent — critical for the
+100-layer × 512-device dry-run) and remainder layers run unrolled.
+
+Modes:
+  * ``forward``      full-sequence (training / encoder)
+  * ``prefill``      full-sequence + materialize KV/state caches
+  * ``decode_step``  one token against the caches
+
+Cache kinds: full attention → [B,S,KV,D] KV; sliding window → vMCU ring
+KV (window slots, modular write pointer); rec/ssm → O(1) state (the
+degenerate one-segment ring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import AxisRules, no_sharding
+from .common import (KVCache, apply_norm, attention, decode_attention,
+                     init_attn, init_mlp, init_norm, mlp_forward,
+                     project_qkv, rope, _softcap)
+from .mamba2 import (SSMCache, init_ssm, init_ssm_cache, ssm_forward,
+                     ssm_step)
+from .moe import init_moe, moe_forward
+from .rglru import (LRUCache, init_rec, init_rec_cache, rec_forward,
+                    rec_step)
+
+ATTN_KINDS = ("full", "local", "global", "cross")
+
+
+class CrossCache(NamedTuple):
+    self_kv: KVCache
+    mem_k: jax.Array    # [B, S_mem, KV, D]
+    mem_v: jax.Array
+
+
+# --------------------------------------------------------------------------
+# Block init
+# --------------------------------------------------------------------------
+
+def _ffn_init(key: jax.Array, cfg: ModelConfig, *, dense_ff: int | None = None
+              ) -> dict | None:
+    if cfg.d_ff == 0:
+        return None
+    if cfg.n_experts and dense_ff is None:
+        return init_moe(key, cfg)
+    return init_mlp(key, cfg, d_ff=dense_ff)
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str, *,
+               dense_ff: int | None = None) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("full", "local", "global"):
+        p = {"attn": init_attn(k1, cfg)}
+    elif kind == "cross":
+        p = {"attn": init_attn(k1, cfg),
+             "xattn": init_attn(k3, cfg)}
+    elif kind == "rec":
+        p = {"rec": init_rec(k1, cfg)}
+    elif kind == "ssm":
+        p = {"ssm": init_ssm(k1, cfg)}
+    else:
+        raise ValueError(kind)
+    ffn = _ffn_init(k2, cfg, dense_ff=dense_ff)
+    if ffn is not None:
+        p["ffn"] = ffn
+    return p
+
+
+# --------------------------------------------------------------------------
+# Block forward (full sequence) and step (decode)
+# --------------------------------------------------------------------------
+
+def _attn_sub(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+              kind: str, positions: jax.Array, *, memory=None,
+              make_cache: bool = False, cache_len: int = 0):
+    """Self (or cross) attention sub-layer, full sequence."""
+    B, S, _ = x.shape
+    h = apply_norm(p["ln"], x, cfg)
+    q, k, v = project_qkv(p, h, cfg, rules, positions)
+    window = cfg.window if kind == "local" else None
+    o = attention(q, k, v, causal=True, window=window,
+                  softcap=cfg.attn_softcap, bf16_einsum=cfg.bf16_einsum)
+    o = o.reshape(B, S, cfg.q_dim) @ p["w_o"].astype(x.dtype)
+    o = rules.act(o, "batch", "res_seq", None)
+    if cfg.post_norms:
+        o = apply_norm(p["post_ln"], o, cfg)
+    cache = None
+    if make_cache:
+        if kind == "local":
+            w = cfg.window
+            if S >= w:
+                ring_k = jnp.roll(k[:, S - w:], S % w, axis=1)
+                ring_v = jnp.roll(v[:, S - w:], S % w, axis=1)
+            else:
+                ring_k = jnp.pad(k, ((0, 0), (0, w - S), (0, 0), (0, 0)))
+                ring_v = jnp.pad(v, ((0, 0), (0, w - S), (0, 0), (0, 0)))
+            cache = KVCache(
+                rules.act(ring_k, "batch", None, "kv_heads", None),
+                rules.act(ring_v, "batch", None, "kv_heads", None))
+        else:
+            L = max(cache_len, S)
+            k = jnp.pad(k, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+            cache = KVCache(
+                rules.act(k, "batch", "kv_seq", "kv_heads", None),
+                rules.act(v, "batch", "kv_seq", "kv_heads", None))
+    return o, cache
+
+
+def _xattn_sub(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+               memory: jax.Array, *, make_cache: bool = False):
+    """Cross-attention to encoder/image memory (no causal mask, no rope on
+    memory)."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    h = apply_norm(p["ln"], x, cfg)
+    q = (h @ p["w_q"].astype(dt)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    mk = (memory @ p["w_k"].astype(dt)).reshape(
+        B, -1, cfg.n_kv_heads, cfg.head_dim)
+    mv = (memory @ p["w_v"].astype(dt)).reshape(
+        B, -1, cfg.n_kv_heads, cfg.head_dim)
+    q = rules.act(q, "batch", "seq", "heads", None)
+    mk = rules.act(mk, "batch", None, "kv_heads", None)
+    mv = rules.act(mv, "batch", None, "kv_heads", None)
+    o = attention(q, mk, mv, causal=False, window=None, softcap=None,
+                  bf16_einsum=cfg.bf16_einsum)
+    o = o.reshape(B, S, cfg.q_dim) @ p["w_o"].astype(dt)
+    o = rules.act(o, "batch", "res_seq", None)
+    return o, (mk, mv) if make_cache else None
+
+
+def _ffn_sub(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+             *, dense: bool = False):
+    if "ffn" not in p:
+        return jnp.zeros_like(x), 0.0
+    if cfg.n_experts and not dense and "router" in p["ffn"]:
+        return moe_forward(p["ffn"], x, cfg, rules)
+    return mlp_forward(p["ffn"], x, cfg, rules), 0.0
+
+
+def block_forward(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+                  kind: str, positions: jax.Array, *, memory=None,
+                  make_cache: bool = False, cache_len: int = 0):
+    """Residual block, full sequence → (x, cache, aux)."""
+    cache = None
+    if kind in ("full", "local", "global"):
+        o, cache = _attn_sub(p["attn"], x, cfg, rules, kind, positions,
+                             make_cache=make_cache, cache_len=cache_len)
+        x = x + o
+    elif kind == "cross":
+        o, sc = _attn_sub(p["attn"], x, cfg, rules, "full", positions,
+                          make_cache=make_cache, cache_len=cache_len)
+        x = x + o
+        xo, mkv = _xattn_sub(p["xattn"], x, cfg, rules, memory,
+                             make_cache=make_cache)
+        x = x + xo
+        if make_cache:
+            cache = CrossCache(self_kv=sc, mem_k=mkv[0], mem_v=mkv[1])
+    elif kind == "rec":
+        o, cache = rec_forward(p["rec"], x, cfg, rules,
+                               return_cache=make_cache)
+        x = x + o
+    elif kind == "ssm":
+        o, cache = ssm_forward(p["ssm"], x, cfg, rules,
+                               return_cache=make_cache)
+        x = x + o
+    else:
+        raise ValueError(kind)
+    o, aux = _ffn_sub(p, x, cfg, rules)
+    return x + o, cache, aux
+
+
+def block_step(p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules,
+               kind: str, cache, cur_len: jax.Array):
+    """One-token decode step → (x, new_cache)."""
+    B = x.shape[0]
+    dt = x.dtype
+    pos = (cur_len - 1)[None] if cur_len.ndim == 0 else cur_len - 1
+
+    def self_attn(ap, kv: KVCache, ring: bool):
+        h = apply_norm(ap["ln"], x, cfg)
+        q = (h @ ap["w_q"].astype(dt)).reshape(B, 1, cfg.n_heads,
+                                               cfg.head_dim)
+        kn = (h @ ap["w_k"].astype(dt)).reshape(B, 1, cfg.n_kv_heads,
+                                                cfg.head_dim)
+        vn = (h @ ap["w_v"].astype(dt)).reshape(B, 1, cfg.n_kv_heads,
+                                                cfg.head_dim)
+        q = rope(q, pos[None, :], cfg.rope_theta)
+        kn = rope(kn, pos[None, :], cfg.rope_theta)
+        slot = jnp.where(ring, pos[0] % cfg.window, pos[0])
+        # Token write via one-hot masked add, NOT dynamic_update_slice: a
+        # DUS with a traced index on a sequence-sharded cache makes GSPMD
+        # replicate the whole cache every step ("involuntary full
+        # rematerialization"); the masked add is elementwise → shard-local
+        # (§Perf global improvement; the vMCU RAMStore, GSPMD-safe).
+        S = kv.k.shape[1]
+        cache_dt = kv.k.dtype
+        # arithmetic in bf16 (fp8 caches have no full ALU support); the
+        # stored cache — the HBM-resident tensor — stays in cache_dt.
+        mdt = cache_dt if cache_dt in (jnp.bfloat16, jnp.float32) \
+            else jnp.bfloat16
+        hot = (jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, 1), 1)
+               == slot).astype(mdt)
+        k = (kv.k.astype(mdt) * (1 - hot)
+             + kn.astype(mdt) * hot).astype(cache_dt)
+        v = (kv.v.astype(mdt) * (1 - hot)
+             + vn.astype(mdt) * hot).astype(cache_dt)
+        o = decode_attention(q, k, v, cur_len, softcap=cfg.attn_softcap,
+                             ring=bool(ring), window=cfg.window)
+        o = o.reshape(B, 1, cfg.q_dim) @ ap["w_o"].astype(dt)
+        if cfg.post_norms:
+            o = apply_norm(ap["post_ln"], o, cfg)
+        return o, KVCache(k, v)
+
+    aux_cache = cache
+    if kind in ("full", "global"):
+        o, aux_cache = self_attn(p["attn"], cache, ring=False)
+        x_new = x + o
+    elif kind == "local":
+        o, aux_cache = self_attn(p["attn"], cache, ring=True)
+        x_new = x + o
+    elif kind == "cross":
+        o, skv = self_attn(p["attn"], cache.self_kv, ring=False)
+        x_new = x + o
+        h = apply_norm(p["xattn"]["ln"], x_new, cfg)
+        q = (h @ p["xattn"]["w_q"].astype(dt)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        o = decode_attention(q, cache.mem_k, cache.mem_v,
+                             jnp.asarray(cache.mem_k.shape[1]),
+                             softcap=None)
+        o = o.reshape(B, 1, cfg.q_dim) @ p["xattn"]["w_o"].astype(dt)
+        x_new = x_new + o
+        aux_cache = CrossCache(skv, cache.mem_k, cache.mem_v)
+    elif kind == "rec":
+        o, aux_cache = rec_step(p["rec"], x, cfg, rules, cache)
+        x_new = x + o
+    elif kind == "ssm":
+        o, aux_cache = ssm_step(p["ssm"], x, cfg, rules, cache)
+        x_new = x + o
+    else:
+        raise ValueError(kind)
+    o, _ = _ffn_sub(p, x_new, cfg, rules)
+    return x_new + o, aux_cache
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    if kind in ("full", "global"):
+        shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == "local":
+        shape = (batch, cfg.window, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == "cross":
+        shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        mshape = (batch, cfg.memory_len(), cfg.n_kv_heads, cfg.head_dim)
+        return CrossCache(
+            KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+            jnp.zeros(mshape, dtype), jnp.zeros(mshape, dtype))
+    if kind == "rec":
+        return init_rec_cache(cfg, batch, dtype)
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Whole-model
+# --------------------------------------------------------------------------
+
+def _memory_len(cfg: ModelConfig) -> int:
+    if cfg.family == "audio":
+        return cfg.encoder_seq
+    if cfg.family == "vlm":
+        return cfg.n_image_tokens
+    return 0
+
+
+# attach as method for cache init
+ModelConfig.memory_len = _memory_len  # type: ignore[attr-defined]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Pure-function model facade built from a ModelConfig."""
+
+    cfg: ModelConfig
+
+    # ---- init ---------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        g, rem = cfg.n_groups()
+        lead = cfg.first_dense_layers
+        if lead:  # deepseek: leading dense layers come out of the scan depth
+            g, rem = (cfg.n_layers - lead) // len(cfg.pattern), \
+                (cfg.n_layers - lead) % len(cfg.pattern)
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "final_ln": init_norm(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = jax.random.normal(
+                keys[1], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+        if lead:
+            dense_ff = cfg.d_ff * (cfg.top_k + cfg.n_shared_experts)
+            params["lead"] = tuple(
+                init_block(jax.random.fold_in(keys[2], i), cfg,
+                           cfg.pattern[0] if cfg.pattern else "full",
+                           dense_ff=dense_ff)
+                for i in range(lead))
+        # scan groups: tuple over pattern positions of stacked params
+        def stack_init(kind: str, base: jax.Array):
+            ks = jax.random.split(base, g)
+            return jax.vmap(lambda kk: init_block(kk, cfg, kind))(ks)
+        params["groups"] = tuple(
+            stack_init(kind, jax.random.fold_in(keys[3], i))
+            for i, kind in enumerate(cfg.pattern))
+        params["rem"] = tuple(
+            init_block(jax.random.fold_in(keys[4], i), cfg, cfg.pattern[i])
+            for i in range(rem))
+        if cfg.encoder_layers:
+            eks = jax.random.split(keys[5], cfg.encoder_layers)
+            params["encoder"] = {
+                "blocks": jax.vmap(
+                    lambda kk: init_block(kk, cfg, "full"))(eks),
+                "final_ln": init_norm(cfg),
+            }
+        return params
+
+    # ---- helpers --------------------------------------------------------------
+    def _embed(self, params, tokens, rules: AxisRules):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = (x * math.sqrt(self.cfg.d_model)).astype(jnp.bfloat16)
+        return rules.act(x, "batch", "res_seq", None)
+
+    def _unembed(self, params, x, rules: AxisRules):
+        w = params.get("unembed", params["embed"])
+        if self.cfg.bf16_einsum:
+            # bf16 operands, fp32 accumulation: the seq all-gather of x and
+            # the vocab matmul move bf16, not fp32 copies (§Perf).
+            logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = x.astype(jnp.float32) @ w.astype(jnp.float32).T
+        logits = _softcap(logits, self.cfg.logit_softcap)
+        return rules.act(logits, "batch", None, "vocab")
+
+    def _encode(self, params, frames, rules: AxisRules):
+        """Whisper encoder over precomputed conv-frontend frames (stub)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16)
+        pos = jnp.arange(x.shape[1])
+
+        def enc_block(x, bp):
+            h = apply_norm(bp["attn"]["ln"], x, cfg)
+            q, k, v = project_qkv(bp["attn"], h, cfg, rules, pos)
+            o = attention(q, k, v, causal=False, window=None, softcap=None,
+                          bf16_einsum=cfg.bf16_einsum)
+            o = o.reshape(*x.shape[:2], cfg.q_dim) \
+                @ bp["attn"]["w_o"].astype(x.dtype)
+            x = x + rules.act(o, "batch", "res_seq", None)
+            return x + mlp_forward(bp["ffn"], x, cfg, rules), None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(enc_block, x, params["encoder"]["blocks"])
+        else:
+            n_e = jax.tree.leaves(params["encoder"]["blocks"])[0].shape[0]
+            for ei in range(n_e):
+                bp = jax.tree.map(lambda a: a[ei],
+                                  params["encoder"]["blocks"])
+                x, _ = enc_block(x, bp)
+        return apply_norm(params["encoder"]["final_ln"], x, cfg)
+
+    def _scan_blocks(self, params, x, rules, positions, memory,
+                     remat_policy: str):
+        """Training/plain forward through lead + scan groups + remainder."""
+        cfg = self.cfg
+
+        def apply_pattern(carry, gparams):
+            x, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                x, _, a = block_forward(gparams[i], x, cfg, rules, kind,
+                                        positions, memory=memory)
+                aux = aux + a
+            return (x, aux), None
+
+        if remat_policy != "none":
+            policy = {
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "dots": jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable,
+            }.get(remat_policy, jax.checkpoint_policies.nothing_saveable)
+            apply_pattern = jax.checkpoint(apply_pattern, policy=policy)
+
+        aux = jnp.zeros((), jnp.float32)
+        for bp in params.get("lead", ()):
+            x, _, a = block_forward(bp, x, cfg, rules, cfg.pattern[0],
+                                    positions, memory=memory)
+            aux = aux + a
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(apply_pattern, (x, aux),
+                                       params["groups"])
+        else:  # unrolled: exact trip-count FLOPs in cost_analysis
+            n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+            for gi in range(n_g):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"])
+                (x, aux), _ = apply_pattern((x, aux), gp)
+        for i, bp in enumerate(params.get("rem", ())):
+            x, _, a = block_forward(bp, x, cfg, rules, cfg.pattern[i],
+                                    positions, memory=memory)
+            aux = aux + a
+        return x, aux
+
+    # ---- public: full-sequence forward ---------------------------------------
+    def forward(self, params, tokens, rules: AxisRules | None = None,
+                memory: jax.Array | None = None,
+                remat_policy: str | None = None):
+        rules = rules or no_sharding()
+        cfg = self.cfg
+        if cfg.encoder_layers and memory is not None:
+            memory = self._encode(params, memory, rules)
+        x = self._embed(params, tokens, rules)
+        positions = jnp.arange(tokens.shape[1])
+        x, aux = self._scan_blocks(params, x, rules, positions, memory,
+                                   remat_policy or cfg.remat_policy)
+        x = apply_norm(params["final_ln"], x, cfg)
+        return self._unembed(params, x, rules), aux
+
+    # ---- public: loss ----------------------------------------------------------
+    def loss(self, params, batch: dict, rules: AxisRules | None = None,
+             remat_policy: str | None = None):
+        logits, aux = self.forward(params, batch["tokens"], rules,
+                                   memory=batch.get("memory"),
+                                   remat_policy=remat_policy)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        # label log-prob via masked reduction, NOT take_along_axis: a gather
+        # over the vocab-sharded axis would all-gather the full [B,S,V]
+        # logits; the where+sum reduces shard-locally then psums a scalar.
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logp.shape,
+                                              logp.ndim - 1)
+        ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logp, 0.0),
+                     axis=-1)
+        loss = -jnp.mean(ll)
+        if self.cfg.n_experts:
+            loss = loss + 0.01 * aux
+        return loss, {"ce": -jnp.mean(ll), "aux": aux}
+
+    # ---- public: serving --------------------------------------------------------
+    def _layer_seq(self):
+        cfg = self.cfg
+        g, rem = cfg.n_groups()
+        lead = cfg.first_dense_layers
+        if lead:
+            g = (cfg.n_layers - lead) // len(cfg.pattern)
+            rem = (cfg.n_layers - lead) % len(cfg.pattern)
+        return lead, g, rem
+
+    def init_caches(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        lead, g, rem = self._layer_seq()
+        mk = lambda kind: init_block_cache(cfg, kind, batch, cache_len, dtype)
+        stack = lambda kind: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g,) + x.shape), mk(kind))
+        return {
+            "lead": tuple(mk(cfg.pattern[0]) for _ in range(lead)),
+            "groups": tuple(stack(kind) for kind in cfg.pattern),
+            "rem": tuple(mk(cfg.pattern[i]) for i in range(rem)),
+        }
+
+    def prefill(self, params, tokens, rules: AxisRules | None = None,
+                memory: jax.Array | None = None, cache_len: int = 0):
+        """Full-sequence pass materializing caches; returns (logits_last,
+        caches, cur_len)."""
+        rules = rules or no_sharding()
+        cfg = self.cfg
+        if cfg.encoder_layers and memory is not None:
+            memory = self._encode(params, memory, rules)
+        S = tokens.shape[1]
+        cache_len = max(cache_len, S)
+        x = self._embed(params, tokens, rules)
+        positions = jnp.arange(S)
+        caches = {"lead": [], "groups": [], "rem": []}
+
+        def run(bp, x, kind):
+            return block_forward(bp, x, cfg, rules, kind, positions,
+                                 memory=memory, make_cache=True,
+                                 cache_len=cache_len)
+
+        for bp in params.get("lead", ()):
+            x, c, _ = run(bp, x, cfg.pattern[0])
+            caches["lead"].append(c)
+
+        def scan_fn(x, gparams):
+            cs = []
+            for i, kind in enumerate(cfg.pattern):
+                x, c, _ = run(gparams[i], x, kind)
+                cs.append(c)
+            return x, tuple(cs)
+
+        if cfg.scan_layers:
+            x, gcaches = jax.lax.scan(scan_fn, x, params["groups"])
+        else:
+            n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+            outs = []
+            for gi in range(n_g):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"])
+                x, cs = scan_fn(x, gp)
+                outs.append(cs)
+            gcaches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        caches["groups"] = gcaches
+        for i, bp in enumerate(params.get("rem", ())):
+            x, c, _ = run(bp, x, cfg.pattern[i])
+            caches["rem"].append(c)
+        x = apply_norm(params["final_ln"], x, cfg)
+        logits = self._unembed(params, x[:, -1:], rules)
+        caches = {k: tuple(v) if isinstance(v, list) else v
+                  for k, v in caches.items()}
+        return logits[:, 0], caches, jnp.asarray(S, jnp.int32)
+
+    def decode_step(self, params, caches, token, cur_len,
+                    rules: AxisRules | None = None):
+        """token: [B] int32 → (logits [B,V], new caches, cur_len+1)."""
+        rules = rules or no_sharding()
+        cfg = self.cfg
+        x = self._embed(params, token[:, None], rules)
+        cur = cur_len + 1  # length including this token
+
+        new = {"lead": [], "rem": []}
+        for bp, c in zip(params.get("lead", ()), caches["lead"]):
+            x, nc = block_step(bp, x, cfg, rules, cfg.pattern[0], c, cur)
+            new["lead"].append(nc)
+
+        def scan_fn(x, inp):
+            gparams, gcaches = inp
+            ncs = []
+            for i, kind in enumerate(cfg.pattern):
+                x, nc = block_step(gparams[i], x, cfg, rules, kind,
+                                   gcaches[i], cur)
+                ncs.append(nc)
+            return x, tuple(ncs)
+
+        if cfg.scan_layers:
+            x, gcaches = jax.lax.scan(scan_fn, x,
+                                      (params["groups"], caches["groups"]))
+        else:
+            n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+            outs = []
+            for gi in range(n_g):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"])
+                gc = jax.tree.map(lambda a: a[gi], caches["groups"])
+                x, cs = scan_fn(x, (gp, gc))
+                outs.append(cs)
+            gcaches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        for i, (bp, c) in enumerate(zip(params.get("rem", ()),
+                                        caches["rem"])):
+            x, nc = block_step(bp, x, cfg, rules, cfg.pattern[i], c, cur)
+            new["rem"].append(nc)
+        x = apply_norm(params["final_ln"], x, cfg)
+        logits = self._unembed(params, x, rules)
+        caches = {"lead": tuple(new["lead"]), "groups": gcaches,
+                  "rem": tuple(new["rem"])}
+        return logits[:, 0], caches, cur

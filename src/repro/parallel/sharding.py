@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules for both mesh modes.
+
+Two modes (DESIGN.md §6):
+
+* ``tp``      — Megatron TP on the ``model`` axis (heads / d_ff / experts /
+                vocab) + ZeRO-3 FSDP on ``data`` + DP batch on (pod, data).
+                Used when ``n_heads % model_size == 0``.
+* ``fsdp_sp`` — small-head archs: params replicated on ``model`` (FSDP on
+                ``data``), activations *sequence*-sharded on ``model``
+                (context parallelism); vocab still TP on ``model``.
+
+Models never name physical axes — they call ``rules.act(x, "batch", "seq",
+None)`` and ``rules.param_spec(path, shape)``; on a plain CPU (no mesh) every
+call is a no-op so the same code runs in smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class AxisRules:
+    mesh: Mesh | None
+    mode: str = "tp"           # "tp" | "fsdp_sp"
+    multi_pod: bool = False
+    decode: bool = False       # decode steps: S==1, never shard "seq"
+    long_context: bool = False  # long_500k: batch==1, shard cache seq
+    kv_shardable: bool = True  # n_kv_heads % model_size == 0
+    sp_residual: bool = False  # tp mode: Megatron-SP — shard the residual
+                               # stream (and saved activations) on "model"
+
+    # -- logical -> physical ---------------------------------------------------
+    def _phys(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical == "batch":
+            if self.long_context:
+                return None    # batch == 1
+            return ("pod", "data") if self.multi_pod else "data"
+        if logical == "fsdp":
+            return "data"
+        if logical == "seq":
+            if self.decode:
+                return None    # decode: query length 1
+            return "model" if self.mode == "fsdp_sp" else None
+        if logical == "res_seq":   # residual stream between blocks
+            if self.decode:
+                return None
+            if self.mode == "fsdp_sp" or self.sp_residual:
+                return "model"
+            return None
+        if logical == "kv_seq":      # KV-cache sequence dim
+            if self.long_context:
+                # batch==1: spread the cache over everything available
+                return "data" if self.kv_shardable else ("data", "model")
+            if self.decode and not self.kv_shardable:
+                return "model"  # heads can't shard — shard cache seq instead
+            return None
+        if logical == "kv_heads":
+            return ("model" if self.mode == "tp" and self.kv_shardable
+                    else None)
+        if logical in ("heads", "ff", "experts", "tp"):
+            return "model" if self.mode == "tp" else None
+        if logical == "vocab":
+            return "model"
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self._phys(ax) for ax in logical))
+
+    def act(self, x: jax.Array, *logical: str | None) -> jax.Array:
+        """Constrain an activation; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical)))
+
+    def sharding(self, *logical: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    # -- parameter placement ---------------------------------------------------
+    # Path-pattern rules, first match wins. Trailing dims are matched right-
+    # aligned so stacked [n_groups, ...] params get None on the lead axis.
+    _PARAM_RULES: tuple[tuple[str, tuple[str | None, ...]], ...] = (
+        (r"embed|unembed", ("vocab", "fsdp")),
+        (r"\bw_(q|k|v)\b", ("fsdp", "heads")),
+        (r"\bw_o\b", ("heads", "fsdp")),
+        (r"\bw_(gate|up)\b$", ("fsdp", "ff")),
+        (r"\bw_down\b", ("ff", "fsdp")),
+        (r"moe_(gate|up)", ("experts", "fsdp", None)),
+        (r"moe_down", ("experts", None, "fsdp")),
+        (r"shared_(gate|up)", ("fsdp", "ff")),
+        (r"shared_down", ("ff", "fsdp")),
+        (r"router", ("fsdp", None)),
+        (r"ssm_w_(z|x)|ssm_conv_x", ("fsdp", "heads")),  # d_inner cols
+        (r"ssm_w_(b|c|dt)", ("fsdp", None)),
+        (r"ssm_out", ("heads", "fsdp")),
+        (r"ssm_(a_log|d|dt_bias|norm)", (None,)),
+        (r"lru_w_(x|y)", ("fsdp", "tp")),
+        (r"lru_out", ("tp", "fsdp")),
+        (r"lru_", (None,)),
+        (r"conv", (None, None)),
+        (r"ln|norm|scale|bias", (None,)),
+    )
+
+    def param_spec(self, path: str, ndim: int) -> P:
+        for pat, dims in self._PARAM_RULES:
+            if re.search(pat, path):
+                dims = tuple(d for d in dims)
+                if len(dims) > ndim:
+                    dims = dims[-ndim:]
+                lead = (None,) * (ndim - len(dims))
+                return P(*(self._phys(d) for d in (lead + dims)))
+        return P(*([None] * ndim))
+
+    def params_shardings(self, params) -> object:
+        """Map a param pytree to NamedShardings (None mesh → None tree)."""
+        if self.mesh is None:
+            return jax.tree.map(lambda _: None, params)
+
+        def leaf(path, x):
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            return NamedSharding(self.mesh,
+                                 self.param_spec(name, x.ndim))
+        return jax.tree_util.tree_map_with_path(leaf, params)
+
+    def constrain_tree(self, params):
+        """Pin every param (works on tracers) to its rule sharding.
+
+        Used inside the loss so the *cotangent* of each parameter is
+        resharded right here — XLA then forms reduce-scatters for the
+        gradient reduction instead of all-reduce + keep-replicated
+        (§Perf iteration 2)."""
+        if self.mesh is None:
+            return params
+
+        def leaf(path, x):
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, self.param_spec(name, x.ndim)))
+        return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def no_sharding() -> AxisRules:
+    return AxisRules(mesh=None)

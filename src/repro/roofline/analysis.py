@@ -1,0 +1,134 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = FLOPs_per_chip / peak_FLOPs           (197 TFLOP/s bf16, v5e)
+  memory     = HBM_bytes_per_chip / HBM_bw           (819 GB/s)
+  collective = Σ algo_factor·bytes_per_chip / ICI_bw (~50 GB/s/link)
+
+``cost_analysis()`` of the SPMD-partitioned executable reports per-device
+FLOPs/bytes.  Collectives are parsed from the post-optimization HLO text
+(they do not exist pre-partitioning); output shapes there are per-device.
+Ring-algorithm factors: all-reduce moves ≈2× its payload per chip,
+all-gather / reduce-scatter / all-to-all / permute ≈1×.  This is a
+structural model — no wall clock exists on this CPU container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_ALGO_FACTOR = {
+    "all-reduce": 2.0,       # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per-collective-kind {count, bytes} from post-optimization HLO."""
+    out: dict[str, dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shapes)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: dict
+    # while-loop (scan) trip counts are already folded into cost_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(_ALGO_FACTOR[k] * v["bytes"]
+                   for k, v in self.collectives.items()) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def fraction_of_roofline(self, useful_flops_per_chip: float) -> float:
+        """useful-FLOPs-time / achievable step time (perfect overlap)."""
+        if self.bound_time == 0:
+            return 0.0
+        return (useful_flops_per_chip / PEAK_FLOPS) / self.bound_time
+
+    def summary(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(compiled, hlo_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = parse_collectives(text)
+    cbytes = sum(v["bytes"] for v in colls.values())
+    return Roofline(flops_per_chip=flops, hbm_bytes_per_chip=byts,
+                    collective_bytes_per_chip=cbytes, collectives=colls)
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (N = active params)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_param_count * tokens

@@ -1,0 +1,99 @@
+"""Fill EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [results/dryrun]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["gemma2-2b", "gemma3-1b", "gemma2-27b", "granite-8b",
+              "granite-moe-1b-a400m", "deepseek-moe-16b",
+              "llama-3.2-vision-90b", "recurrentgemma-2b", "whisper-tiny",
+              "mamba2-780m"]
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str) -> list[dict]:
+    recs = [json.load(open(p))
+            for p in glob.glob(os.path.join(results_dir, "*.json"))]
+
+    def key(r):
+        return (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
+                else 99, CELL_ORDER.index(r["cell"]) if r["cell"]
+                in CELL_ORDER else 9, r.get("mesh", ""))
+    return sorted(recs, key=key)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | cell | mesh | status | compile | peak GB/chip | "
+             "fits 16G | dominant collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+                         f"ERROR: {r.get('error', '?')[:60]} | | | | |")
+            continue
+        m = r["memory"]
+        colls = r["roofline"]["collectives"]
+        top = sorted(colls.items(), key=lambda kv: -kv[1]["bytes"])[:2]
+        cstr = "; ".join(f"{k}×{int(v['count'])} "
+                         f"({v['bytes']/1e9:.2f}GB)" for k, v in top)
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f}s | {m['peak_bytes']/1e9:.2f} | "
+            f"{'✓' if m['fits_16g'] else '✗'} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = ["| arch | cell | t_comp s | t_mem s | t_coll s | dominant | "
+             "MODEL/HLO | fraction | one-line lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "16x16" or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        lever = _lever(r)
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {rf['t_compute_s']:.3f} | "
+            f"{rf['t_memory_s']:.3f} | {rf['t_collective_s']:.3f} | "
+            f"{rf['dominant']} | {rf['model_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} | {lever} |")
+    return "\n".join(lines)
+
+
+def _lever(r: dict) -> str:
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    if r["cell"].startswith("decode") or r["cell"].startswith("long"):
+        return ("decode is latency-bound: batch more requests per step or "
+                "quantize the KV cache to halve the %s term" % dom)
+    if dom == "collective":
+        return ("bf16 param gathers + reduce-scatter grads cut wire bytes "
+                "~3x (§Perf it.1/2)")
+    if dom == "memory":
+        if rf["model_flops_ratio"] < 0.05:
+            return "dispatch overhead dominates — see §Perf MoE iterations"
+        return ("cut HBM round-trips: bf16 gathers, fused-MLP streaming, "
+                "smaller remat window")
+    if rf["model_flops_ratio"] < 0.1:
+        return "HLO FLOPs are overhead, not model math — fix dispatch/scan"
+    return "MXU-bound: increase per-chip batch or reduce remat recompute"
+
+
+def fill(md_path: str, results_dir: str) -> None:
+    recs = load(results_dir)
+    text = open(md_path).read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table(recs))
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(recs))
+    open(md_path, "w").write(text)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    print(f"filled {md_path}: {ok}/{len(recs)} cells ok")
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    fill("EXPERIMENTS.md", d)

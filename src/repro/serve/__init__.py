@@ -1,0 +1,1 @@
+from .engine import ServingEngine, make_serve_fns

@@ -1,0 +1,73 @@
+"""Batched serving engine: continuous-batching decode over ring KV caches.
+
+The request loop is deliberately simple (this container is CPU-only) but the
+step functions are the exact ones the dry-run lowers at production shapes:
+``prefill`` materializes caches (full layers → [B,S,KV,D]; sliding-window
+layers → vMCU ring of ``window`` slots), ``decode_step`` advances every
+active slot one token, writing ring slots modulo the window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from ..parallel.sharding import AxisRules, no_sharding
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new: int = 16
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+def make_serve_fns(model: Model, rules: AxisRules | None = None, *,
+                   cache_len: int):
+    rules = rules or no_sharding()
+
+    @jax.jit
+    def prefill(params, tokens, memory=None):
+        return model.prefill(params, tokens, rules, memory=memory,
+                             cache_len=cache_len)
+
+    @jax.jit
+    def decode_step(params, caches, token, cur_len):
+        return model.decode_step(params, caches, token, cur_len, rules)
+
+    return prefill, decode_step
+
+
+class ServingEngine:
+    """Greedy batched generation; one prefill per batch, then lockstep
+    decode.  Real deployments interleave admission — the step functions
+    support it (per-slot cur_len would become a vector; kept scalar here
+    because all assigned decode cells are lockstep)."""
+
+    def __init__(self, model: Model, params: Any,
+                 rules: AxisRules | None = None, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.prefill, self.decode = make_serve_fns(model, rules,
+                                                   cache_len=cache_len)
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16,
+                 memory: jax.Array | None = None) -> list[list[int]]:
+        B = len(prompts)
+        L = max(len(p) for p in prompts)
+        toks = jnp.asarray([[0] * (L - len(p)) + p for p in prompts],
+                           jnp.int32)  # left-pad
+        logits, caches, cur = self.prefill(self.params, toks, memory)
+        out = [[] for _ in range(B)]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(max_new):
+            for i in range(B):
+                out[i].append(int(tok[i]))
+            logits, caches, cur = self.decode(self.params, caches, tok, cur)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out

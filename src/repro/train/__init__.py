@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, TrainState, adamw_update, init_state
+from .train_step import make_train_step, init_train_state

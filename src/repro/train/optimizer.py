@@ -1,0 +1,97 @@
+"""AdamW + schedules, pure JAX (no optax dependency).
+
+Master weights fp32; model code casts to bf16 at use sites, so the state
+layout is (params, mu, nu) fp32 — 12 bytes/param, matching the dry-run
+memory analysis assumptions in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any          # fp32 masters (sharded)
+    mu: Any
+    nu: Any
+    # Optional bf16 working copy (DeepSpeed-style two-copy scheme): the
+    # forward/backward consume THIS tree, so every FSDP all-gather moves
+    # bf16 by construction — the fp32 masters never cross the network.
+    # None when the scheme is off (§Perf iteration B1).
+    cast: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.peak_lr * (step + 1) / cfg.warmup_steps
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def cast_tree(params: Any) -> Any:
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p,
+        params)
+
+
+def init_state(params: Any, *, two_copy: bool = False) -> TrainState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                      cast=cast_tree(params) if two_copy else None)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(state: TrainState, grads: Any, cfg: AdamWConfig
+                 ) -> tuple[TrainState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    lr = lr_at(cfg, state.step)
+    t = (state.step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    class _Upd(NamedTuple):     # sentinel leaf (params contain plain tuples)
+        p: jax.Array
+        m: jax.Array
+        v: jax.Array
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat, vhat = m / bc1, v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p)
+        return _Upd(p, m, v)
+
+    out = jax.tree.map(upd, state.params, grads, state.mu, state.nu)
+    is_upd = lambda x: isinstance(x, _Upd)  # noqa: E731
+    params = jax.tree.map(lambda o: o.p, out, is_leaf=is_upd)
+    mu = jax.tree.map(lambda o: o.m, out, is_leaf=is_upd)
+    nu = jax.tree.map(lambda o: o.v, out, is_leaf=is_upd)
+    new_cast = cast_tree(params) if state.cast is not None else None
+    return (TrainState(state.step + 1, params, mu, nu, new_cast),
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,93 @@
+"""Train-step factory: microbatched grad accumulation, mixed precision,
+remat policy — the function the dry-run lowers for every train cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from ..parallel.sharding import AxisRules, no_sharding
+from .optimizer import AdamWConfig, TrainState, adamw_update, init_state
+
+
+def make_train_step(model: Model, rules: AxisRules | None = None, *,
+                    opt: AdamWConfig | None = None, microbatches: int = 1,
+                    remat_policy: str | None = None,
+                    cast_params_bf16: bool = False,
+                    constrain_grads: bool = False,
+                    two_copy: bool = False):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    Hillclimb levers (§Perf; all off in the baseline):
+      two_copy         — forward/backward consume a bf16 copy carried in
+        the TrainState (state.cast): FSDP gathers move bf16 by
+        construction; masters stay fp32 and local.  Gradients arrive in
+        bf16 and are upcast in the optimizer.
+      cast_params_bf16 — in-graph shard-local bf16 cast (refuted on this
+        XLA build: the partitioner re-hoists gathers to the fp32 point);
+      constrain_grads  — pin params inside the loss so gradient cotangents
+        reshard there (refuted: XLA CPU lowers it as the same
+        all-reduce + dynamic-slice it already emits).
+    """
+    rules = rules or no_sharding()
+    opt = opt or AdamWConfig()
+
+    def loss_fn(params, batch):
+        if constrain_grads:
+            params = rules.constrain_tree(params)
+        if cast_params_bf16:
+            params = jax.tree.map(
+                lambda p: (p.astype(jnp.bfloat16)
+                           if p.dtype == jnp.float32 else p), params)
+            if constrain_grads:   # keep the bf16 copies sharded too
+                params = rules.constrain_tree(params)
+        loss, metrics = model.loss(params, batch, rules,
+                                   remat_policy=remat_policy)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
+        fwd_params = state.cast if (two_copy and state.cast is not None) \
+            else state.params
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(fwd_params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(fwd_params, mbatch)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_fn, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+        new_state, opt_metrics = adamw_update(state, grads, opt)
+        return new_state, {"loss": loss, **opt_metrics}
+
+    return train_step
+
+
+def init_train_state(model: Model, key: jax.Array,
+                     two_copy: bool = False) -> TrainState:
+    return init_state(model.init(key), two_copy=two_copy)
+
+
+def eval_state_shapes(model: Model) -> Any:
+    """ShapeDtypeStruct tree of the train state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0)))

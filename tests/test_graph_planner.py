@@ -1,0 +1,96 @@
+"""Eq. (2) multi-layer plans vs the paper's published anchors."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph_planner import (MCUNET_5FPS_VWW, MCUNET_320KB_IMAGENET,
+                                      ModuleConfig, hmcos_module_bytes,
+                                      plan_fc_chain,
+                                      plan_inverted_bottleneck,
+                                      plan_module_fallback,
+                                      solve_stream_offset,
+                                      tinyengine_module_bytes,
+                                      vmcu_module_bytes)
+
+
+def test_tinyengine_b2_anchor():
+    """Paper §7.3 quotes TinyEngine's ImageNet bottleneck as 247.8 KB (B2).
+    Our tensor-level model reproduces it to the byte (KB = 1000 B)."""
+    b2 = MCUNET_320KB_IMAGENET[1]
+    assert tinyengine_module_bytes(b2) == 247_808
+
+
+def test_vmcu_beats_baselines_everywhere():
+    """Fused where it wins, per-layer fallback otherwise (paper's own
+    rule for modules where the DW kernel exceeds the image)."""
+    for cfg in MCUNET_5FPS_VWW + MCUNET_320KB_IMAGENET:
+        v = vmcu_module_bytes(cfg)
+        assert v < tinyengine_module_bytes(cfg), cfg.name
+        assert v < hmcos_module_bytes(cfg), cfg.name
+
+
+def test_fallback_engages_only_on_tiny_spatial_dims():
+    fused_losers = [c.name for c in MCUNET_5FPS_VWW + MCUNET_320KB_IMAGENET
+                    if plan_module_fallback(c)
+                    < plan_inverted_bottleneck(c).pool_bytes]
+    # S7/S8 (3x3 images) and B16 (7x7 kernel on 6x6) — the paper's cases
+    assert set(fused_losers) <= {"S7", "S8", "B16"}
+
+
+def test_network_bottleneck_reduction_vww():
+    """Paper: vMCU reduces the VWW memory bottleneck by 61.5% vs TinyEngine.
+    Our analytic lower-bound plan must reduce it by at least that much."""
+    te = max(tinyengine_module_bytes(c) for c in MCUNET_5FPS_VWW)
+    v = max(vmcu_module_bytes(c) for c in MCUNET_5FPS_VWW)
+    assert 1 - v / te >= 0.615
+
+
+def test_imagenet_fits_128kb_device():
+    """Paper: vMCU deploys MCUNet-320KB-ImageNet on a 128 KB MCU (B1
+    bottleneck 102.7 KB measured; our plan is a lower bound of that)."""
+    worst = max(vmcu_module_bytes(c) for c in MCUNET_320KB_IMAGENET)
+    assert worst <= 102_700
+    # ... while TinyEngine (247.8 KB) and HMCOS cannot fit
+    assert max(tinyengine_module_bytes(c)
+               for c in MCUNET_320KB_IMAGENET) > 128_000
+
+
+def test_workspace_is_paper_11_segments():
+    s1 = MCUNET_5FPS_VWW[0]
+    plan = plan_inverted_bottleneck(s1, workspace="paper_11seg")
+    # 3x3 B segments (c_mid each) + 1 C (c_mid) + 1 D (c_out)
+    assert plan.workspace_bytes == (9 * s1.c_mid + s1.c_mid + s1.c_out)
+
+
+@given(st.integers(4, 40), st.integers(1, 32), st.integers(8, 64),
+       st.integers(1, 32), st.sampled_from([1, 2]))
+@settings(max_examples=30, deadline=None)
+def test_fused_plan_never_worse_than_tensor_level(hw, cin, cmid, cout, s1):
+    cfg = ModuleConfig("x", hw, cin, cmid, cout, 3, (s1, 1, 1))
+    v = vmcu_module_bytes(cfg)
+    assert v <= tinyengine_module_bytes(cfg)
+
+
+def test_stream_offset_monotone_writes():
+    # writes strictly behind reads -> zero offset
+    we = np.arange(1, 11) * 4
+    rs = np.arange(10) * 8
+    assert solve_stream_offset(we, rs) == 0
+
+
+def test_fc_chain_is_inplace_when_dims_equal():
+    """Transformer MLP (d -> f -> d): Eq. 2 says zero extra segments —
+    the fused kernel runs in place (paper §5.2's >50% case)."""
+    plan = plan_fc_chain(64, [256, 1024, 256], elem_bytes=2)
+    assert plan.delta_bytes == 0
+    naive_two_layers = 64 * (256 + 1024) * 2
+    assert plan.pool_bytes < naive_two_layers
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_fc_chain_delta_matches_row_growth(m, din, dout):
+    plan = plan_fc_chain(m, [din * 16, dout * 16], elem_bytes=1)
+    # growth rate (dout-din) per row bounds the offset
+    assert plan.delta_bytes >= 0
+    assert plan.pool_bytes <= (m * max(din, dout) * 16
+                               + min(din, dout) * 16 * m)

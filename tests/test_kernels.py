@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.ring_decode import ring_cache_update
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(shape, dtype, key):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,d_in,d_out", [
+    (8, 128, 128), (16, 96, 64), (8, 256, 512), (24, 300, 130),
+    (32, 64, 640),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_gemm_matches_oracle(m, d_in, d_out, dtype):
+    ks = jax.random.split(KEY, 3)
+    x = _rand((m, d_in), dtype, ks[0])
+    w = (_rand((d_in, d_out), dtype, ks[1]) / np.sqrt(d_in)).astype(dtype)
+    b = _rand((d_out,), dtype, ks[2])
+    y, info = ops.segment_gemm(x, w, b, block_rows=8)
+    want = ref.gemm_ref(x, w, b)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert info["delta"] >= 0
+
+
+def test_ring_gemm_pool_saving_on_large_m():
+    """For M >> block, the ring saves ≈ min(N,K)/(N+K) of the naive pool."""
+    m, d = 512, 256
+    x = _rand((m, d), jnp.float32, KEY)
+    w = _rand((d, d), jnp.float32, KEY) / 16.0
+    y, info = ops.segment_gemm(x, w, None, block_rows=8)
+    saving = 1 - info["pool_bytes"] / info["naive_bytes"]
+    assert saving > 0.45  # paper's ~50% single-layer bound, minus alignment
+
+
+@pytest.mark.parametrize("m,d,f,ff_tile", [
+    (8, 128, 512, 128), (16, 256, 1024, 256), (8, 384, 768, 384),
+])
+@pytest.mark.parametrize("gated,act", [(True, "gelu"), (True, "silu"),
+                                       (False, "gelu")])
+def test_fused_mlp_matches_oracle(m, d, f, ff_tile, gated, act):
+    ks = jax.random.split(KEY, 4)
+    x = _rand((m, d), jnp.float32, ks[0])
+    wg = _rand((d, f), jnp.float32, ks[1]) / np.sqrt(d)
+    wu = _rand((d, f), jnp.float32, ks[2]) / np.sqrt(d)
+    wd = _rand((f, d), jnp.float32, ks[3]) / np.sqrt(f)
+    y = ops.fused_mlp(x, wg, wu, wd, ff_tile=ff_tile, gated=gated,
+                      activation=act)
+    want = ref.fused_mlp_ref(x, wg, wu, wd, gated=gated, activation=act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("qh,kvh,dh,window,block", [
+    (8, 2, 64, 256, 64), (4, 4, 128, 128, 128), (16, 1, 64, 512, 128),
+])
+@pytest.mark.parametrize("T", [7, 100, 256, 512, 5000])
+def test_ring_decode_matches_oracle(qh, kvh, dh, window, block, T):
+    if T > window and T % window == 0:
+        T += 1  # exercise unaligned wrap
+    ks = jax.random.split(KEY, 3)
+    q = _rand((qh, dh), jnp.float32, ks[0])
+    k = _rand((window, kvh, dh), jnp.float32, ks[1])
+    v = _rand((window, kvh, dh), jnp.float32, ks[2])
+    o = ops.decode_attention(q, k, v, T, window=window, block=block)
+    want = ref.ring_decode_ref(q, k, v, T, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ring_decode_softcap():
+    ks = jax.random.split(KEY, 3)
+    q = _rand((4, 64), jnp.float32, ks[0]) * 10
+    k = _rand((128, 2, 64), jnp.float32, ks[1])
+    v = _rand((128, 2, 64), jnp.float32, ks[2])
+    o = ops.decode_attention(q, k, v, 1000, window=128, block=64,
+                             softcap=50.0)
+    want = ref.ring_decode_ref(q, k, v, 1000, window=128, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_ring_cache_update_is_modular():
+    """RAMStore-with-modulo: slot t % window, the paper's boundary check."""
+    window, kvh, dh = 8, 2, 4
+    k_ring = jnp.zeros((window, kvh, dh))
+    v_ring = jnp.zeros((window, kvh, dh))
+    for t in range(19):
+        kn = jnp.full((kvh, dh), float(t))
+        k_ring, v_ring = ring_cache_update(k_ring, v_ring, kn, kn,
+                                           jnp.asarray(t))
+    # after 19 writes, slot s holds token  (largest t<19 with t%8==s)
+    for s in range(window):
+        expect = s + 16 if s + 16 < 19 else s + 8
+        assert float(k_ring[s, 0, 0]) == float(expect)
+
+
+def test_chained_ring_gemm_layers():
+    """Two GEMMs through one persistent pool — output of layer 1 consumed
+    in place by layer 2 (the vMCU whole-network mode)."""
+    from repro.kernels.segment_matmul import (aligned_pool_geometry,
+                                              fetch_rows, ring_gemm,
+                                              stage_rows, SEG_WIDTH)
+    from repro.core.planner import gemm_offset_closed_form
+    m, d0, d1, d2 = 16, 256, 512, 128
+    ks = jax.random.split(KEY, 3)
+    x = _rand((m, d0), jnp.float32, ks[0])
+    w1 = _rand((d0, d1), jnp.float32, ks[1]) / 16
+    w2 = _rand((d1, d2), jnp.float32, ks[2]) / 23
+
+    br = 8
+    segs = lambda d: -(-d // SEG_WIDTH)  # noqa: E731
+    d1_delta = gemm_offset_closed_form(m, segs(d1), segs(d0))
+    n_seg1, in1, out1 = aligned_pool_geometry(m, d0, d1, d1_delta, br)
+    # layer 2 writes d2_delta below its input (= layer 1's output at out1),
+    # block-aligned; the ring wraps negative pointers.
+    d2_delta = gemm_offset_closed_form(m, segs(d2), segs(d1))
+    out2 = out1 - (-(-d2_delta // (br * segs(d2)))) * (br * segs(d2))
+    align = br * segs(d0) * segs(d1) * segs(d2)
+    span = max(n_seg1, (out1 - out2) + m * segs(d1), m * segs(d2))
+    n_seg = -(-span // align) * align
+    shift = -(-max(0, -out2) // align) * align  # make all pointers >= 0
+    in1, out1, out2 = in1 + shift, out1 + shift, out2 + shift
+    pool = jnp.zeros((n_seg, SEG_WIDTH), jnp.float32)
+    pool = stage_rows(pool, x, in1)
+    zb1 = jnp.zeros((d1,), jnp.float32)
+    zb2 = jnp.zeros((d2,), jnp.float32)
+    pool = ring_gemm(pool, w1, zb1, m_rows=m, d_in=d0, d_out=d1,
+                     in_ptr=in1, out_ptr=out1, block_rows=br, interpret=True)
+    pool = ring_gemm(pool, w2, zb2, m_rows=m, d_in=d1, d_out=d2,
+                     in_ptr=out1, out_ptr=out2, block_rows=br,
+                     interpret=True)
+    got = fetch_rows(pool, out2, m, d2)
+    want = ref.gemm_ref(ref.gemm_ref(x, w1, zb1), w2, zb2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

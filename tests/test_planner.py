@@ -1,0 +1,102 @@
+"""Eq. (1) solver: paper closed forms, exact scans, pool tightness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affine import (AccessFn, IterDomain, gemm_domain,
+                               gemm_read_access, gemm_write_access)
+from repro.core.planner import (gemm_min_footprint_segments,
+                                gemm_offset_closed_form,
+                                motivational_example, plan_gemm,
+                                plan_pointwise_conv, solve_offset_bruteforce,
+                                solve_offset_scan)
+from repro.core.pool import PoolClobberError, SegmentPool, run_gemm_schedule
+
+dims = st.integers(min_value=1, max_value=7)
+
+
+def test_motivational_example_fig1c():
+    """Paper Fig. 1(c): segment-level needs 7 slots, tensor-level 10."""
+    assert motivational_example() == (7, 10)
+
+
+def test_paper_gemm_closed_form_cases():
+    # K=3, N=2 (the Fig. 1 example): one empty segment (N-1)
+    assert gemm_offset_closed_form(2, 2, 3) == 1
+    # N <= K: footprint = MK + N - 1
+    assert gemm_min_footprint_segments(4, 2, 5) == 4 * 5 + 2 - 1
+    # N > K: footprint = MN + K - 1
+    assert gemm_min_footprint_segments(4, 5, 2) == 4 * 5 + 2 - 1
+
+
+@given(dims, dims, dims)
+@settings(max_examples=60, deadline=None)
+def test_closed_form_matches_exact_scan(m, n, k):
+    d, r, w = gemm_domain(m, n, k), gemm_read_access(m, k), \
+        gemm_write_access(m, n)
+    assert gemm_offset_closed_form(m, n, k) == solve_offset_scan(d, r, w)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_scan_matches_bruteforce(m, n, k):
+    d, r, w = gemm_domain(m, n, k), gemm_read_access(m, k), \
+        gemm_write_access(m, n)
+    assert solve_offset_scan(d, r, w) == solve_offset_bruteforce(d, r, w)
+
+
+@given(dims, dims, dims)
+@settings(max_examples=40, deadline=None)
+def test_plan_is_safe_and_tight(m, n, k):
+    """The solved delta executes cleanly; delta-1 must clobber (tightness —
+    the paper's 'silent error' case)."""
+    plan = plan_gemm(m, n, k, segment_bytes=1, validate=True)
+    pool = SegmentPool(plan.pool_segments)
+    run_gemm_schedule(pool, m, n, k, b_out=0, b_in=plan.delta)
+    assert pool.peak_live <= plan.pool_segments
+    if plan.delta > 0:
+        with pytest.raises(PoolClobberError):
+            run_gemm_schedule(SegmentPool(plan.pool_segments), m, n, k,
+                              b_out=0, b_in=plan.delta - 1)
+
+
+@given(dims, dims, dims)
+@settings(max_examples=40, deadline=None)
+def test_footprint_beats_or_equals_naive(m, n, k):
+    plan = plan_gemm(m, n, k, segment_bytes=1)
+    assert plan.pool_segments <= plan.naive_segments
+    # paper's bound: single-layer saving is at most 50%
+    assert plan.pool_segments >= plan.naive_segments / 2
+
+
+def test_numerics_survive_the_ring():
+    """Payloads written through the ring are the payloads read back."""
+    m, n, k = 3, 2, 4
+    plan = plan_gemm(m, n, k, segment_bytes=1)
+    pool = SegmentPool(plan.pool_segments)
+    payload = np.arange(m * k).reshape(m, k)
+    run_gemm_schedule(pool, m, n, k, b_out=0, b_in=plan.delta,
+                      in_payload=payload)
+    for mm in range(m):
+        for nn in range(n):
+            got = pool.read(mm * n + nn, owner="out")
+            assert got[0] == mm and got[1] == nn
+            assert got[2] == tuple(payload[mm])
+
+
+@given(st.integers(2, 10), st.integers(1, 6), st.integers(1, 6),
+       st.sampled_from([1, 2]))
+@settings(max_examples=30, deadline=None)
+def test_pointwise_conv_plan_bounds(h, c, kk, stride):
+    plan = plan_pointwise_conv(h, h, c, kk, stride=stride)
+    naive = plan.in_segments + plan.out_segments
+    assert plan.pool_segments <= naive + 2  # alignment slack
+    assert plan.delta >= 0
+
+
+def test_affine_access_linearization():
+    a = AccessFn(A=((1, 0), (0, 1)), V=(2, 3), shape=(5, 7))
+    pts = IterDomain((2, 2)).points_lex()
+    addrs = a.addresses(pts)
+    assert addrs[0] == 2 * 7 + 3
+    assert addrs[-1] == 3 * 7 + 4

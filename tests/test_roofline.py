@@ -1,0 +1,47 @@
+"""Roofline analysis: HLO collective parsing + term arithmetic."""
+import numpy as np
+
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     model_flops, parse_collectives)
+
+HLO = """
+HloModule jit_train_step
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = bf16[256,4096]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%ag), to_apply=%add
+  %rs = bf16[64,64]{1,0} reduce-scatter(%ar), dimensions={0}
+  %a2a = bf16[32,32,8]{2,1,0} all-to-all(%rs), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%a2a), source_target_pairs={{0,1}}
+  ROOT %ar2 = (f32[512]{0}, f32[256]{0}) all-reduce(%cp, %cp), to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    c = parse_collectives(HLO)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 256 * 4096 * 2
+    assert c["all-reduce"]["count"] == 2
+    assert c["all-reduce"]["bytes"] == 1024 * 4 + (512 + 256) * 4
+    assert c["reduce-scatter"]["bytes"] == 64 * 64 * 2
+    assert c["all-to-all"]["bytes"] == 32 * 32 * 8 * 2
+    assert c["collective-permute"]["bytes"] == 8 * 4
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops_per_chip=PEAK_FLOPS,          # 1 s of compute
+                 hbm_bytes_per_chip=HBM_BW / 2,      # 0.5 s of memory
+                 collective_bytes_per_chip=0.0,
+                 collectives={"all-reduce": {"count": 1,
+                                             "bytes": ICI_BW / 4}})
+    assert np.isclose(r.t_compute, 1.0)
+    assert np.isclose(r.t_memory, 0.5)
+    assert np.isclose(r.t_collective, 0.5)  # all-reduce factor 2x
+    assert r.dominant == "compute"
+    assert np.isclose(r.fraction_of_roofline(PEAK_FLOPS / 2), 0.5)
+
+
+def test_model_flops_conventions():
+    assert model_flops(10, 10, 100, "train") == 6 * 10 * 100
+    assert model_flops(10, 4, 100, "prefill") == 2 * 4 * 100  # MoE active

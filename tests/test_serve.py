@@ -1,0 +1,73 @@
+"""Serving engine: batched generation, ring-cache equivalence, greedy
+determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_REGISTRY
+from repro.models.registry import build_model
+from repro.serve.engine import ServingEngine
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _engine(arch="gemma2-2b", cache_len=64):
+    cfg = ARCH_REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params, ServingEngine(model, params,
+                                             cache_len=cache_len)
+
+
+def test_batched_generation_runs():
+    cfg, model, params, eng = _engine()
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8, 9, 10]]
+    outs = eng.generate(prompts, max_new=6)
+    assert len(outs) == 2 and all(len(o) == 6 for o in outs)
+    assert all(0 <= t < cfg.vocab for o in outs for t in o)
+
+
+def test_generation_matches_teacher_forced_forward():
+    """Greedy decode == argmax over the full forward on the generated
+    sequence (same right-aligned prompt, no padding)."""
+    cfg, model, params, eng = _engine()
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+    out = eng.generate([prompt], max_new=5)[0]
+    seq = jnp.asarray([prompt + out], jnp.int32)
+    logits, _ = model.forward(params, seq)
+    for i in range(5):
+        pos = len(prompt) - 1 + i
+        want = int(jnp.argmax(logits[0, pos]))
+        assert out[i] == want, (i, out, want)
+
+
+def test_generation_deterministic():
+    _, _, _, eng = _engine()
+    a = eng.generate([[1, 2, 3]], max_new=4)
+    b = eng.generate([[1, 2, 3]], max_new=4)
+    assert a == b
+
+
+def test_ssm_engine_generation():
+    cfg, model, params, eng = _engine("mamba2-780m")
+    outs = eng.generate([[1, 2, 3, 4, 5]], max_new=4)
+    assert len(outs[0]) == 4
+
+
+def test_fp8_kv_cache_decode_accuracy():
+    """fp8(e4m3) KV caches: rel. logit error bounded — the memory-halving
+    serving mode used for the llama-90b decode cell (§Perf X5)."""
+    import jax.numpy as jnp
+    cfg, model, params, _ = _engine("gemma2-2b")
+    B, S = 2, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    lf, _ = model.forward(params, tokens)
+    _, caches, cur = model.prefill(params, tokens[:, :S - 1],
+                                   cache_len=S + 4)
+    caches8 = jax.tree.map(
+        lambda a: (a.astype(jnp.float8_e4m3fn)
+                   if a.dtype == jnp.bfloat16 else a), caches)
+    dl, _, _ = model.decode_step(params, caches8, tokens[:, S - 1], cur)
+    rel = float(jnp.max(jnp.abs(dl - lf[:, S - 1]))
+                / (jnp.max(jnp.abs(lf[:, S - 1])) + 1e-9))
+    assert rel < 0.15

@@ -1,0 +1,84 @@
+"""AxisRules logical→physical resolution and param-spec pattern rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_REGISTRY
+from repro.configs.base import DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K
+from repro.parallel.sharding import AxisRules, no_sharding
+
+
+def _mesh2():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_no_mesh_is_noop():
+    rules = no_sharding()
+    x = jax.numpy.ones((4, 4))
+    assert rules.act(x, "batch", None) is x
+    assert rules.sharding("batch") is None
+
+
+def test_tp_mode_resolution():
+    r = AxisRules(mesh=_mesh2(), mode="tp")
+    assert r.spec("batch", "seq", "heads") == P("data", None, "model")
+    assert r.spec("fsdp", "ff") == P("data", "model")
+    assert r.spec("vocab") == P("model")
+
+
+def test_fsdp_sp_mode_resolution():
+    r = AxisRules(mesh=_mesh2(), mode="fsdp_sp")
+    assert r.spec("batch", "seq", "heads") == P("data", "model", None)
+    assert r.spec("fsdp", "ff") == P("data", None)
+    assert r.spec("vocab") == P("model")  # vocab always TP
+
+
+def test_decode_never_shards_seq():
+    r = AxisRules(mesh=_mesh2(), mode="fsdp_sp", decode=True)
+    assert r.spec("batch", "seq", None) == P("data", None, None)
+
+
+def test_long_context_shards_cache_not_batch():
+    r = AxisRules(mesh=_mesh2(), mode="fsdp_sp", decode=True,
+                  long_context=True, kv_shardable=False)
+    assert r.spec("batch") == P(None)
+    assert r.spec("kv_seq") == P(("data", "model"))
+
+
+def test_kv_seq_fallback_when_heads_unshardable():
+    r = AxisRules(mesh=_mesh2(), mode="tp", decode=True, kv_shardable=False)
+    assert r.spec("kv_seq") == P("model")
+    assert r.spec("kv_heads") == P(None)
+
+
+def test_param_rules_cover_all_archs():
+    """Every parameter of every arch matches a rule that shards the big
+    dims and replicates norms."""
+    from repro.models.registry import build_model
+    r = AxisRules(mesh=_mesh2(), mode="tp")
+    for name, full in ARCH_REGISTRY.items():
+        cfg = full.reduced()
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = r.params_shardings(shapes)
+        for (path, s), ns in zip(
+                jax.tree_util.tree_flatten_with_path(shapes)[0],
+                jax.tree.leaves(specs)):
+            pathstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                               for k in path)
+            assert ns is not None, (name, pathstr)
+            assert len(ns.spec) <= len(s.shape), (name, pathstr, ns.spec)
+            if "embed" in pathstr:
+                assert "model" in jax.tree.leaves(tuple(ns.spec)), pathstr
+
+
+def test_make_rules_flags():
+    from repro.launch.specs import make_rules
+    cfg = ARCH_REGISTRY["gemma2-2b"]
+    mesh = _mesh2()
+    assert make_rules(cfg, mesh, TRAIN_4K).decode is False
+    assert make_rules(cfg, mesh, DECODE_32K).decode is True
+    assert make_rules(cfg, mesh, LONG_500K).long_context is True
+    assert make_rules(cfg, mesh, PREFILL_32K).long_context is False

@@ -1,0 +1,91 @@
+"""Dry-run spec machinery: cache classification, batch/state specs.
+
+Runs on a 1x1 ("data","model") mesh — shardings resolve without needing
+512 fake devices (the full-mesh path is exercised by the dry-run itself).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import ARCH_REGISTRY
+from repro.configs.base import DECODE_32K, LONG_500K, TRAIN_4K
+from repro.launch.specs import (batch_specs, cache_specs, input_specs,
+                                make_rules, params_specs, state_specs)
+from repro.models.registry import build_model
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", list(ARCH_REGISTRY))
+def test_cache_specs_cover_every_leaf(arch):
+    cfg = ARCH_REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    rules = make_rules(cfg, _mesh(), DECODE_32K)
+    specs = cache_specs(model, cfg, rules, batch=4, cache_len=64)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert leaf.sharding is not None
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-780m",
+                                  "whisper-tiny"])
+def test_input_specs_kinds(arch):
+    cfg = ARCH_REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    mesh = _mesh()
+    for cell in (TRAIN_4K, DECODE_32K):
+        rules = make_rules(cfg, mesh, cell)
+        specs = input_specs(model, cfg, cell, rules)
+        assert specs.kind == cell.kind
+        assert len(specs.args) >= 2
+        if cell.kind == "train":
+            assert specs.donate == (0,)
+        else:
+            assert specs.donate == (1,)
+
+
+def test_state_specs_two_copy_dtype():
+    cfg = ARCH_REGISTRY["gemma2-2b"].reduced()
+    model = build_model(cfg)
+    rules = make_rules(cfg, _mesh(), TRAIN_4K)
+    st = state_specs(model, rules, two_copy=True)
+    masters = jax.tree.leaves(st.params)
+    casts = jax.tree.leaves(st.cast)
+    assert all(x.dtype == jnp.float32 for x in masters
+               if jnp.issubdtype(x.dtype, jnp.floating))
+    assert all(x.dtype == jnp.bfloat16 for x in casts
+               if jnp.issubdtype(x.dtype, jnp.floating))
+    assert len(masters) == len(casts)
+
+
+def test_serve_dtype_override():
+    cfg = ARCH_REGISTRY["granite-8b"].reduced()
+    model = build_model(cfg)
+    rules = make_rules(cfg, _mesh(), DECODE_32K)
+    specs = params_specs(model, rules, dtype=jnp.bfloat16)
+    for leaf in jax.tree.leaves(specs):
+        assert leaf.dtype != jnp.float32
+
+
+def test_batch_specs_match_family():
+    mesh = _mesh()
+    for arch, has_memory in (("gemma2-2b", False),
+                             ("llama-3.2-vision-90b", True),
+                             ("whisper-tiny", True)):
+        cfg = ARCH_REGISTRY[arch]
+        rules = make_rules(cfg, mesh, TRAIN_4K)
+        bs = batch_specs(cfg, TRAIN_4K, rules)
+        assert ("memory" in bs) == has_memory
+        assert bs["tokens"].shape == (TRAIN_4K.global_batch,
+                                      TRAIN_4K.seq_len)
+
+
+def test_long_context_rules():
+    cfg = ARCH_REGISTRY["mamba2-780m"]
+    rules = make_rules(cfg, _mesh(), LONG_500K)
+    assert rules.long_context and rules.decode
