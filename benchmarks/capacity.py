@@ -45,8 +45,8 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
     print("module,image_scale,channel_scale")
     for r in rows:
         print(f"{r['module']},{r['image_scale']:.2f},"

@@ -31,8 +31,8 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
     print("case,vmcu_traffic_kb,tinyengine_traffic_kb,energy_proxy_saving")
     for r in rows:
         print(f"{r['case']},{r['vmcu_bytes']/1000:.1f},"

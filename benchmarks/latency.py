@@ -1,30 +1,24 @@
 """Paper Table 3 — latency: the ring kernels must cost ≈ the plain kernels.
 
 The paper's claim is that segment-level management adds only modular
-addressing (vMCU = 1.03x TinyEngine).  We time the jit'd ring-pool chain vs
-the naive chain on CPU (relative cost of the ring mechanics), plus the
-interpret-mode Pallas kernel vs its oracle at small shapes.
-Wall-times here are CPU-relative indicators, not TPU numbers.
+addressing (vMCU = 1.03x TinyEngine).  We time the jit'd ``jnp``-backend
+execution of a planned ``PoolProgram`` vs the naive chain on CPU (relative
+cost of the ring mechanics).  Wall-times here are CPU-relative indicators,
+not TPU numbers.
 """
 from __future__ import annotations
 
-import time
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.ring_buffer import (init_chain_params, naive_chain_apply,
-                                    plan_chain, ring_chain_apply,
-                                    write_rows)
+from repro.core import GemmSpec, VirtualPool, execute, plan_program
+from repro.core.ring_buffer import init_chain_params, naive_chain_apply
+
+from .timing import bench_us
 
 
-def _bench(fn, *args, iters=20) -> float:
-    fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+def _chain_specs(dims: list[int]) -> list[GemmSpec]:
+    return [GemmSpec(d, activation="gelu") for d in dims[1:-1]] + \
+        [GemmSpec(dims[-1])]
 
 
 def run() -> list[dict]:
@@ -33,25 +27,28 @@ def run() -> list[dict]:
                     (32, [384, 1536, 384])):
         params = init_chain_params(jax.random.PRNGKey(0), dims)
         x = jax.random.normal(jax.random.PRNGKey(1), (m, dims[0]))
-        plan = plan_chain(m, dims)
-        naive_us = _bench(jax.jit(lambda x: naive_chain_apply(x, params)), x)
+        program = plan_program(m, dims[0], _chain_specs(dims), block_rows=8)
+        naive_us = bench_us(jax.jit(lambda x: naive_chain_apply(x, params)),
+                            x)
 
-        pool0 = write_rows(jnp.zeros((plan.n_segments, plan.seg_width)),
-                           x, plan.layer_ptrs[0][0] - plan.layer_ptrs[-1][1],
-                           plan.n_segments)
+        pool0 = VirtualPool.alloc(program.spec(x.dtype)) \
+            .stage_rows(x, program.input_ptr)
 
-        def ring_fn(p):
-            return ring_chain_apply(p, params, plan, 8)
-        ring_us = _bench(lambda: ring_fn(pool0.copy()), iters=20)
+        def ring_fn():
+            return execute(program, VirtualPool(pool0.array.copy()),
+                           params, backend="jnp").array
+        ring_us = bench_us(ring_fn, iters=20)
         rows.append({"case": f"M{m}x{'x'.join(map(str, dims))}",
                      "naive_us": naive_us, "ring_us": ring_us,
                      "ratio": ring_us / naive_us,
-                     "pool_saving": 1 - plan.pool_bytes / plan.naive_bytes})
+                     "pool_bytes": program.pool_bytes,
+                     "naive_bytes": program.naive_bytes,
+                     "pool_saving": program.saving_fraction})
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
     print("case,naive_us,ring_us,ratio,pool_saving")
     for r in rows:
         print(f"{r['case']},{r['naive_us']:.0f},{r['ring_us']:.0f},"

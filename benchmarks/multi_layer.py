@@ -9,29 +9,31 @@ from __future__ import annotations
 from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       MCUNET_320KB_IMAGENET,
                                       hmcos_module_bytes,
-                                      plan_inverted_bottleneck,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
+from repro.core.program import plan_module_program
 
 
 def run(net) -> list[dict]:
     rows = []
     for cfg in net:
         v = vmcu_module_bytes(cfg)
+        fused = plan_module_program(cfg)  # one-op PoolProgram (Eq. 2 plan)
         rows.append({
             "module": cfg.name,
             "vmcu_kb": v / 1000,
-            "vmcu_fused_kb": plan_inverted_bottleneck(cfg).pool_bytes / 1000,
+            "vmcu_fused_kb": fused.pool_bytes / 1000,
             "tinyengine_kb": tinyengine_module_bytes(cfg) / 1000,
             "hmcos_kb": hmcos_module_bytes(cfg) / 1000,
         })
     return rows
 
 
-def main() -> None:
-    for name, net in (("MCUNet-5fps-VWW", MCUNET_5FPS_VWW),
-                      ("MCUNet-320KB-ImageNet", MCUNET_320KB_IMAGENET)):
-        rows = run(net)
+def main(rows_by_net: dict[str, list[dict]] | None = None) -> None:
+    for name, key, net in (("MCUNet-5fps-VWW", "vww", MCUNET_5FPS_VWW),
+                           ("MCUNet-320KB-ImageNet", "imagenet",
+                            MCUNET_320KB_IMAGENET)):
+        rows = run(net) if rows_by_net is None else rows_by_net[key]
         print(f"# {name}")
         print("module,vmcu_kb,tinyengine_kb,hmcos_kb,red_vs_te,red_vs_hmcos")
         for r in rows:

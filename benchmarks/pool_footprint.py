@@ -1,31 +1,35 @@
-"""TPU-level footprint proof: ``memory_analysis()`` of the compiled ring
-chain vs the naive chain — XLA's buffer assignment itself confirms the
-pool reuse (the HBM analogue of the paper's RAM measurements)."""
+"""TPU-level footprint proof: ``memory_analysis()`` of the compiled
+``jnp``-backend PoolProgram vs the naive chain — XLA's buffer assignment
+itself confirms the pool reuse (the HBM analogue of the paper's RAM
+measurements)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.ring_buffer import (init_chain_params, naive_chain_apply,
-                                    plan_chain, ring_chain_apply)
+from repro.core import GemmSpec, plan_program
+from repro.core.executors import _run_jnp
+from repro.core.ring_buffer import init_chain_params, naive_chain_apply
 
 
 def measure(m: int, dims: list[int]) -> dict:
     params = init_chain_params(jax.random.PRNGKey(0), dims)
-    plan = plan_chain(m, dims)
+    specs = [GemmSpec(d, activation="gelu") for d in dims[1:-1]] + \
+        [GemmSpec(dims[-1])]
+    # Tight (unaligned) geometry: the compiled pool then equals the
+    # planner's pool_bytes, so prediction and XLA measurement compare the
+    # same buffer (the jnp executor needs no DMA block alignment).
+    program = plan_program(m, dims[0], specs, block_rows=None)
 
-    naive = jax.jit(lambda x: naive_chain_apply(x, params))
-    c_naive = naive.lower(
-        jax.ShapeDtypeStruct((m, dims[0]), jnp.float32)).compile()
-    ring = jax.jit(lambda p: ring_chain_apply(p, params, plan, 8))
-    c_ring = ring.lower(jax.ShapeDtypeStruct(
-        (plan.n_segments, plan.seg_width), jnp.float32)).compile()
-
-    def peak(c, arg_is_donated):
-        ma = c.memory_analysis()
-        t = ma.temp_size_in_bytes
-        a = ma.argument_size_in_bytes
-        return t + (a if arg_is_donated else a)
+    # Params are real jit arguments (not closure constants) on both sides
+    # so argument_size_in_bytes accounts weights identically.
+    c_naive = jax.jit(naive_chain_apply).lower(
+        jax.ShapeDtypeStruct((m, dims[0]), jnp.float32), params).compile()
+    # _run_jnp is the jit'd executor body (donated pool, static program).
+    c_ring = _run_jnp.lower(
+        jax.ShapeDtypeStruct((program.n_segments, program.seg_width),
+                             jnp.float32),
+        [(w, b) for w, b in params], program).compile()
 
     m_naive = c_naive.memory_analysis()
     m_ring = c_ring.memory_analysis()
@@ -41,8 +45,10 @@ def measure(m: int, dims: list[int]) -> dict:
         "case": f"M{m}x{'x'.join(map(str, dims))}",
         "naive_activation_bytes": int(naive_act),
         "ring_activation_bytes": int(ring_act),
+        "pool_bytes": program.pool_bytes,
+        "naive_bytes": program.naive_bytes,
         "xla_measured_saving": 1 - ring_act / max(naive_act, 1),
-        "planner_predicted_saving": 1 - plan.pool_bytes / plan.naive_bytes,
+        "planner_predicted_saving": program.saving_fraction,
     }
 
 
@@ -52,9 +58,10 @@ def run() -> list[dict]:
             measure(128, [1024, 4096, 1024])]
 
 
-def main() -> None:
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
     print("case,naive_act_kb,ring_act_kb,xla_saving,planner_saving")
-    for r in run():
+    for r in rows:
         print(f"{r['case']},{r['naive_activation_bytes']/1000:.0f},"
               f"{r['ring_activation_bytes']/1000:.0f},"
               f"{100*r['xla_measured_saving']:.1f}%,"

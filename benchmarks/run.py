@@ -7,31 +7,119 @@
   capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
   pool_footprint — XLA-measured ring-pool footprint (TPU adaptation)
   roofline_table — §Roofline from dry-run artifacts (if present)
+
+Besides the human-readable stdout, the harness writes ``BENCH_vmcu.json``
+(machine-readable: per-op pool_bytes / naive_bytes / saving_fraction /
+wall-time records via the unified PoolProgram API, plus every section's
+row dump and wall-time) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
+
+import jax
 
 from . import (capacity, energy_proxy, latency, multi_layer,
                pool_footprint, roofline_table, single_layer)
+from .timing import bench_us
 
+BENCH_JSON = "BENCH_vmcu.json"
+
+
+def _multi_layer_rows():
+    from repro.core.graph_planner import (MCUNET_5FPS_VWW,
+                                          MCUNET_320KB_IMAGENET)
+    return {"vww": multi_layer.run(MCUNET_5FPS_VWW),
+            "imagenet": multi_layer.run(MCUNET_320KB_IMAGENET)}
+
+
+# (name, collector-or-None, printer).  Collectors run once; printers reuse
+# the collected rows where the section supports it.
 SECTIONS = [
-    ("Fig7_single_layer_ram", single_layer.main),
-    ("Fig8_energy_proxy", energy_proxy.main),
-    ("Table3_latency", latency.main),
-    ("Fig9_10_multi_layer_ram", multi_layer.main),
-    ("Fig11_12_capacity", capacity.main),
-    ("TPU_pool_footprint", pool_footprint.main),
-    ("TPU_roofline_table", roofline_table.main),
+    ("Fig7_single_layer_ram", single_layer.run, single_layer.main),
+    ("Fig8_energy_proxy", energy_proxy.run, energy_proxy.main),
+    ("Table3_latency", latency.run, latency.main),
+    ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main),
+    ("Fig11_12_capacity", capacity.run, capacity.main),
+    ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main),
+    ("TPU_roofline_table", None, lambda rows: roofline_table.main()),
 ]
 
 
+def bench_ops() -> list[dict]:
+    """Per-PoolOp trajectory records via the unified program API."""
+    import jax.numpy as jnp
+    from repro.core import (FusedMLPSpec, GemmSpec, VirtualPool, execute,
+                            plan_program)
+
+    key = jax.random.PRNGKey(0)
+    cases = [
+        ("gemm_128x384x256", 128, 384, [GemmSpec(256)]),
+        ("fused_mlp_64x512x2048", 64, 512,
+         [FusedMLPSpec(2048, ff_tile=512)]),
+        ("chain3_64x256x1024x256", 64, 256,
+         [GemmSpec(1024, "gelu"), GemmSpec(256)]),
+    ]
+    records = []
+    for name, m, d_in, specs in cases:
+        program = plan_program(m, d_in, specs, block_rows=8)
+        params = []
+        for op in program.ops:
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            if op.kind == "gemm":
+                params.append(
+                    (jax.random.normal(k1, (op.d_in, op.d_out)) / 16,
+                     jnp.zeros((op.d_out,))))
+            else:
+                params.append(
+                    (jax.random.normal(k1, (op.d_in, op.d_ff)) / 16,
+                     jax.random.normal(k2, (op.d_in, op.d_ff)) / 16,
+                     jax.random.normal(k3, (op.d_ff, op.d_in)) / 32))
+        x = jax.random.normal(key, (m, d_in))
+        pool0 = VirtualPool.alloc(program.spec(x.dtype)) \
+            .stage_rows(x, program.input_ptr)
+        wall_us = bench_us(
+            lambda: execute(program, VirtualPool(pool0.array.copy()),
+                            params, backend="jnp").array, iters=10)
+        records.append({
+            "name": name,
+            "ops": [op.kind for op in program.ops],
+            "m_rows": m,
+            "pool_bytes": program.pool_bytes,
+            "physical_pool_bytes": program.physical_pool_bytes,
+            "naive_bytes": program.naive_bytes,
+            "saving_fraction": program.saving_fraction,
+            "wall_us_jnp": wall_us,
+            "wall_us_per_op": wall_us / len(program.ops),
+        })
+    return records
+
+
 def main() -> None:
-    for name, fn in SECTIONS:
+    section_times = {}
+    section_rows = {}
+    for name, collect, show in SECTIONS:
         print(f"\n=== {name} ===")
         t0 = time.time()
-        fn()
-        print(f"# section time: {time.time() - t0:.1f}s")
+        rows = collect() if collect is not None else None
+        show(rows)
+        section_times[name] = round(time.time() - t0, 2)
+        if rows is not None:
+            section_rows[name] = rows
+        print(f"# section time: {section_times[name]:.1f}s")
+
+    ops = bench_ops()
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "ops": ops,
+        "section_time_s": section_times,
+        "sections": section_rows,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\n# wrote {BENCH_JSON} ({len(ops)} op records)")
 
 
 if __name__ == "__main__":

@@ -31,8 +31,8 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
     print("case,vmcu_kb,tinyengine_kb,reduction_vs_te,fits128,te_fits128")
     for r in rows:
         print(f"{r['case']},{r['vmcu_kb']:.1f},{r['tinyengine_kb']:.1f},"

@@ -1,0 +1,20 @@
+"""Shared wall-clock helper for the benchmark sections."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def bench_us(fn, *args, iters: int = 20) -> float:
+    """Mean wall-time of ``fn(*args)`` in microseconds.
+
+    The warmup call is blocked on before the clock starts so compile and
+    async dispatch never bleed into the timed region.
+    """
+    jax.block_until_ready(fn(*args))  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -2,11 +2,14 @@
 
 1. Solve the paper's Eq. (1) for a fully-connected layer (exact ILP optimum
    via lexicographic scan + closed form).
-2. Execute the layer *inside* a circular segment pool at that offset —
-   first in the byte-exact simulator, then as the Pallas ring-GEMM kernel
-   (interpret mode on CPU, Mosaic on TPU).
-3. Run a whole FC chain through one donated ring buffer in jitted JAX and
-   compare against the naive chain: same numerics, smaller footprint.
+2. Execute the layer *inside* a circular segment pool at that offset in the
+   byte-exact simulator.
+3. The unified API: ``plan_program`` one multi-op plan (gemm chain + fused
+   MLP) over a single ``VirtualPool`` and ``execute`` the SAME plan object
+   on all three backends — ``sim`` (clobber oracle), ``jnp`` (jitted ring
+   scans), ``pallas`` (TPU kernels; interpret mode on CPU).
+4. Legacy chain adapter: the original ``plan_chain`` API still works and is
+   now a thin wrapper over ``plan_program``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,11 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SegmentPool, motivational_example, plan_chain,
-                        plan_gemm, run_gemm_schedule)
+from repro.core import (FusedMLPSpec, GemmSpec, SegmentPool, execute,
+                        motivational_example, plan_chain, plan_gemm,
+                        plan_program, run_gemm_schedule, run_program)
 from repro.core.ring_buffer import (init_chain_params, naive_chain_apply,
                                     run_chain_via_ring)
-from repro.kernels import ops
 from repro.kernels import ref as kref
 
 print("=== 1. Eq. (1): plan a fully-connected layer ===")
@@ -38,17 +41,47 @@ run_gemm_schedule(pool, M, N, K, b_out=0, b_in=plan.delta)
 print(f"schedule OK: peak live = {pool.peak_live} segments "
       f"({pool.reads} reads, {pool.writes} writes) — no clobbers")
 
-print("\n=== 3. Pallas ring-GEMM kernel (vMCU Fig. 4 on TPU) ===")
-key = jax.random.PRNGKey(0)
-x = jax.random.normal(key, (128, 384), jnp.float32)
-w = jax.random.normal(key, (384, 256), jnp.float32) / 16
-y, info = ops.segment_gemm(x, w)
-err = float(jnp.max(jnp.abs(y - kref.gemm_ref(x, w, jnp.zeros(256)))))
-print(f"kernel vs oracle max err = {err:.2e}; pool {info['pool_bytes']} B "
-      f"vs naive {info['naive_bytes']} B "
-      f"({100 * (1 - info['pool_bytes'] / info['naive_bytes']):.1f}% saved)")
+print("\n=== 3. One PoolProgram, three backends ===")
+m, dims, d_ff = 16, [256, 384, 256], 512
+program = plan_program(m, dims[0],
+                       [GemmSpec(dims[1], activation="gelu"),
+                        GemmSpec(dims[2]),
+                        FusedMLPSpec(d_ff, ff_tile=256)],
+                       block_rows=8)
+print(f"program: {[op.kind for op in program.ops]} — tight pool "
+      f"{program.pool_bytes} B vs naive {program.naive_bytes} B "
+      f"({100 * program.saving_fraction:.1f}% saved); physical ring "
+      f"{program.physical_pool_bytes} B (DMA block padding)")
 
-print("\n=== 4. Whole chain in ONE donated ring buffer ===")
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 8)
+params = [
+    (jax.random.normal(ks[0], (dims[0], dims[1])) / 16,
+     jax.random.normal(ks[1], (dims[1],))),
+    (jax.random.normal(ks[2], (dims[1], dims[2])) / 19,
+     jax.random.normal(ks[3], (dims[2],))),
+    (jax.random.normal(ks[4], (dims[2], d_ff)) / 16,
+     jax.random.normal(ks[5], (dims[2], d_ff)) / 16,
+     jax.random.normal(ks[6], (d_ff, dims[2])) / 22),
+]
+x = jax.random.normal(ks[7], (m, dims[0]))
+
+sim = execute(program, backend="sim")  # clobber oracle: raises if unsafe
+print(f"sim backend: clobber-free, peak live {sim.peak_live}/"
+      f"{program.n_segments} segments, {sim.reads} reads")
+
+y_jnp, _ = run_program(program, x, params, backend="jnp")
+y_pal, _ = run_program(program, x, params, backend="pallas")
+np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pal),
+                           rtol=1e-5, atol=1e-5)
+h = jax.nn.gelu(kref.gemm_ref(x, *params[0]))
+h = kref.gemm_ref(h, *params[1])
+want = kref.fused_mlp_ref(h, *params[2])
+err = float(jnp.max(jnp.abs(y_jnp - want)))
+print(f"jnp == pallas from the same plan object; max err vs oracle "
+      f"{err:.2e}")
+
+print("\n=== 4. Legacy chain API (now an adapter over plan_program) ===")
 dims = [512, 2048, 512, 256]
 m = 32
 chain_plan = plan_chain(m, dims)

@@ -1,12 +1,17 @@
 """vMCU core: segment-level memory management (paper §4–§5), TPU-adapted.
 
-Public surface:
+Public surface (the unified pool/plan API — DESIGN.md §3):
+  * vpool     — VirtualPool / PoolSpec, THE stage/fetch + ceil-div helpers
+  * program   — PoolProgram IR + plan_program() single planning front-end
+  * executors — execute(program, pool, params, backend=sim|jnp|pallas)
+
+Solvers and legacy adapters:
   * planner       — Eq. (1) offset solver (exact scan + closed forms)
   * graph_planner — Eq. (2) fused multi-layer plans (inverted bottleneck,
                     FC chains) + TinyEngine/HMCOS module baselines
   * pool          — circular segment-pool simulator (correctness oracle)
   * baselines     — single-layer tensor-level baselines
-  * ring_buffer   — the jit-able donated ring pool (HBM-level integration)
+  * ring_buffer   — legacy ChainPlan adapters over plan_program
 """
 from .affine import AccessFn, IterDomain
 from .planner import (SegmentPlan, gemm_min_footprint_segments,
@@ -21,10 +26,30 @@ from .graph_planner import (FusedPlan, MCUNET_5FPS_VWW,
 from .pool import PoolClobberError, SegmentPool, run_gemm_schedule
 from .baselines import (FIG7_CASES, LayerShape, hmcos_bytes,
                         pointwise_conv_layer, tinyengine_bytes)
+from .vpool import (LANE, SEG_WIDTH, PoolSpec, VirtualPool, ceil_div,
+                    fetch_rows, segments_for, stage_rows)
+from .program import (ACTIVATIONS, ElementwiseSpec, FusedChainSpec,
+                      FusedMLPSpec, GemmSpec, InvertedBottleneckSpec,
+                      PoolOp, PoolProgram, plan_module_program,
+                      plan_program, plan_stream_chain_program,
+                      resolve_activation)
+from .executors import (execute, executor_names, register_executor,
+                        run_program, run_program_jnp, run_program_pallas,
+                        run_program_sim)
 from .ring_buffer import (ChainPlan, init_chain_params, naive_chain_apply,
                           plan_chain, ring_chain_apply, run_chain_via_ring)
 
 __all__ = [
+    # unified API
+    "PoolSpec", "VirtualPool", "SEG_WIDTH", "LANE", "ceil_div",
+    "segments_for", "stage_rows", "fetch_rows",
+    "PoolOp", "PoolProgram", "plan_program", "plan_module_program",
+    "plan_stream_chain_program", "GemmSpec", "FusedMLPSpec",
+    "ElementwiseSpec", "FusedChainSpec", "InvertedBottleneckSpec",
+    "ACTIVATIONS", "resolve_activation",
+    "execute", "executor_names", "register_executor", "run_program",
+    "run_program_sim", "run_program_jnp", "run_program_pallas",
+    # solvers + legacy adapters
     "AccessFn", "IterDomain", "SegmentPlan", "FusedPlan", "ModuleConfig",
     "SegmentPool", "PoolClobberError", "ChainPlan", "LayerShape",
     "FIG7_CASES", "MCUNET_5FPS_VWW", "MCUNET_320KB_IMAGENET",

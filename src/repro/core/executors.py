@@ -1,0 +1,342 @@
+"""Pluggable executors: run the SAME PoolProgram on interchangeable backends.
+
+  * ``sim``    — drives the byte-exact :class:`SegmentPool` clobber oracle
+                 with the paper-faithful fine-grained schedule (Fig. 4);
+                 raises :class:`PoolClobberError` iff the plan is unsafe.
+  * ``jnp``    — jit-able modular-indexing scans (the ring_buffer path);
+                 runs on any backend, any seg_width, aligned or not.
+  * ``pallas`` — the TPU ring kernels (segment_matmul / fused_mlp /
+                 elementwise); requires an aligned program
+                 (``block_rows`` set) and ``seg_width == SEG_WIDTH``.
+
+``jnp`` and ``pallas`` produce allclose results from one plan object; the
+``sim`` backend proves the plan clobber-free.  New backends register with
+:func:`register_executor` (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .pool import SegmentPool
+from .program import (EXECUTABLE_KINDS, PoolProgram, resolve_activation)
+from .vpool import VirtualPool, fetch_rows, segments_for, stage_rows
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_EXECUTORS: dict[str, Callable] = {}
+
+
+def register_executor(name: str):
+    """Register ``fn(program, pool, params, **kw)`` as backend ``name``."""
+    def deco(fn):
+        _EXECUTORS[name] = fn
+        return fn
+    return deco
+
+
+def executor_names() -> tuple[str, ...]:
+    return tuple(sorted(_EXECUTORS))
+
+
+def execute(program: PoolProgram, pool=None, params=None, *,
+            backend: str = "jnp", **kwargs):
+    """Run ``program`` on ``backend``.
+
+    ``pool`` is a :class:`VirtualPool` (or raw ``[n_segments, seg_width]``
+    array) with the program input already staged at ``program.input_ptr``;
+    ``params`` is one entry per op — ``(w, b)`` for gemm (``b`` may be
+    None), ``(w_gate, w_up, w_down)`` for fused_mlp, ``None`` for
+    elementwise.  Returns the updated pool handle (``sim`` ignores
+    pool/params and returns the SegmentPool with its access statistics).
+    """
+    try:
+        fn = _EXECUTORS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; registered: "
+                         f"{executor_names()}") from None
+    if not program.executable:
+        raise NotImplementedError(
+            f"program contains plan-only ops "
+            f"({[op.kind for op in program.ops]}); only kinds "
+            f"{EXECUTABLE_KINDS} are executable")
+    return fn(program, pool, params, **kwargs)
+
+
+def run_program(program: PoolProgram, x: jax.Array, params, *,
+                backend: str = "jnp", **kwargs):
+    """Convenience: alloc a pool, stage ``x``, execute, fetch the output.
+
+    Returns ``(y, pool)``.  Array backends only (use ``execute`` with
+    ``backend="sim"`` for the oracle)."""
+    pool = VirtualPool.alloc(program.spec(x.dtype))
+    pool = pool.stage_rows(x, program.input_ptr)
+    pool = execute(program, pool, params, backend=backend, **kwargs)
+    y = pool.fetch_rows(program.output_ptr, program.m_rows, program.out_dim)
+    return y, pool
+
+
+def _normalize_params(program: PoolProgram, params):
+    if params is None:
+        params = [None] * len(program.ops)
+    params = list(params)
+    if len(params) != len(program.ops):
+        raise ValueError(f"{len(params)} param entries for "
+                         f"{len(program.ops)} ops")
+    out = []
+    for op, p in zip(program.ops, params):
+        if op.kind == "gemm":
+            w, b = p
+            if b is None:
+                b = jnp.zeros((op.d_out,), w.dtype)
+            out.append((w, b))
+        elif op.kind == "fused_mlp":
+            wg, wu, wd = p
+            if wg is None:  # ungated MLPs may omit the gate projection
+                wg = wu
+            out.append((wg, wu, wd))
+        else:
+            if p is not None:
+                raise ValueError(f"{op.kind} op takes no params")
+            out.append(None)
+    return out
+
+
+def _as_array(pool):
+    return pool.array if isinstance(pool, VirtualPool) else pool
+
+
+def _like_input(pool, array):
+    return VirtualPool(array) if isinstance(pool, VirtualPool) else array
+
+
+# ---------------------------------------------------------------------------
+# jnp backend — shared with ring_buffer's chain apply.
+# ---------------------------------------------------------------------------
+
+def gemm_ring_scan(pool: jax.Array, w: jax.Array, b: jax.Array, *,
+                   in_ptr: int, out_ptr: int, m_rows: int, n_segments: int,
+                   block_rows: int, activation: str | None) -> jax.Array:
+    """One FC layer streamed through the ring, ``block_rows`` rows/step.
+
+    The jnp mirror of the Pallas ring-GEMM (paper Fig. 4): gather a
+    row-block of input segments at the modular index, MXU-dot against the
+    un-pooled ("Flash") weight in fp32, scatter the output row-block at the
+    solved offset.
+    """
+    d_in, d_out = w.shape
+    seg_w = pool.shape[1]
+    k_segs, n_segs = segments_for(d_in, seg_w), segments_for(d_out, seg_w)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+    if m_rows % block_rows:
+        raise ValueError("block_rows must divide m_rows")
+    act = resolve_activation(activation)
+
+    def step(p, i):
+        ridx = (in_ptr + i * bk + jnp.arange(bk)) % n_segments
+        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
+        x = x[:, :d_in]
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        y = act(y + b.astype(jnp.float32))
+        y = y.astype(p.dtype)
+        pad = n_segs * seg_w - d_out
+        if pad:
+            y = jnp.pad(y, ((0, 0), (0, pad)))
+        widx = (out_ptr + i * bn + jnp.arange(bn)) % n_segments
+        return p.at[widx].set(y.reshape(bn, seg_w)), None
+
+    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
+    return pool
+
+
+def mlp_ring_scan(pool: jax.Array, w_gate, w_up, w_down, *, ptr: int,
+                  m_rows: int, n_segments: int, block_rows: int,
+                  d_model: int, ff_tile: int, gated: bool, residual: bool,
+                  activation: str) -> jax.Array:
+    """In-place fused MLP, mirroring the Pallas kernel's per-``ff_tile``
+    accumulation order so the two backends agree to float tolerance."""
+    seg_w = pool.shape[1]
+    d_segs = segments_for(d_model, seg_w)
+    bd = block_rows * d_segs
+    d_ff = w_up.shape[1]
+    act = resolve_activation(activation)
+
+    def step(p, i):
+        idx = (ptr + i * bd + jnp.arange(bd)) % n_segments
+        x = jnp.take(p, idx, axis=0).reshape(block_rows, d_segs * seg_w)
+        x = x[:, :d_model].astype(jnp.float32)
+        acc = jnp.zeros((block_rows, d_model), jnp.float32)
+        for f in range(d_ff // ff_tile):
+            sl = slice(f * ff_tile, (f + 1) * ff_tile)
+            up = jnp.dot(x, w_up[:, sl].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+            if gated:
+                gate = jnp.dot(x, w_gate[:, sl].astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+                h = act(gate) * up
+            else:
+                h = act(up)
+            acc = acc + jnp.dot(h, w_down[sl, :].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+        y = acc + x if residual else acc
+        y = y.astype(p.dtype)
+        pad = d_segs * seg_w - d_model
+        if pad:
+            y = jnp.pad(y, ((0, 0), (0, pad)))
+        return p.at[idx].set(y.reshape(bd, seg_w)), None
+
+    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
+    return pool
+
+
+def elementwise_ring_scan(pool: jax.Array, *, ptr: int, m_rows: int,
+                          n_segments: int, block_rows: int, d: int,
+                          fn: str) -> jax.Array:
+    """In-place element-wise map over resident rows (applied to the whole
+    padded tile — every registered fn maps 0 to 0, preserving padding)."""
+    seg_w = pool.shape[1]
+    d_segs = segments_for(d, seg_w)
+    bd = block_rows * d_segs
+    f = resolve_activation(fn)
+
+    def step(p, i):
+        idx = (ptr + i * bd + jnp.arange(bd)) % n_segments
+        x = jnp.take(p, idx, axis=0).astype(jnp.float32)
+        return p.at[idx].set(f(x).astype(p.dtype)), None
+
+    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
+    return pool
+
+
+@functools.partial(jax.jit, static_argnames=("program",),
+                   donate_argnums=(0,))
+def _run_jnp(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
+    br = program.block_rows or 1
+    n = program.n_segments
+    for op, p in zip(program.ops, params):
+        if op.kind == "gemm":
+            w, b = p
+            pool = gemm_ring_scan(pool, w, b, in_ptr=op.in_ptr,
+                                  out_ptr=op.out_ptr, m_rows=program.m_rows,
+                                  n_segments=n, block_rows=br,
+                                  activation=op.activation)
+        elif op.kind == "fused_mlp":
+            wg, wu, wd = p
+            pool = mlp_ring_scan(pool, wg, wu, wd, ptr=op.in_ptr,
+                                 m_rows=program.m_rows, n_segments=n,
+                                 block_rows=br, d_model=op.d_in,
+                                 ff_tile=op.ff_tile, gated=op.gated,
+                                 residual=op.residual,
+                                 activation=op.activation)
+        else:
+            pool = elementwise_ring_scan(pool, ptr=op.in_ptr,
+                                         m_rows=program.m_rows,
+                                         n_segments=n, block_rows=br,
+                                         d=op.d_in, fn=op.activation)
+    return pool
+
+
+@register_executor("jnp")
+def run_program_jnp(program: PoolProgram, pool, params, **_kw):
+    arr = _run_jnp(_as_array(pool), _normalize_params(program, params),
+                   program)
+    return _like_input(pool, arr)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend.
+# ---------------------------------------------------------------------------
+
+@register_executor("pallas")
+def run_program_pallas(program: PoolProgram, pool, params, *,
+                       interpret: bool | None = None, **_kw):
+    # Lazy import: core must stay importable without the kernels package.
+    from ..kernels.elementwise import ring_elementwise
+    from ..kernels.fused_mlp import ring_fused_mlp
+    from ..kernels.segment_matmul import SEG_WIDTH as KSEG, ring_gemm
+
+    if program.block_rows is None:
+        raise ValueError("pallas backend needs an aligned program — plan "
+                         "with block_rows=<int>")
+    if program.seg_width != KSEG:
+        raise ValueError(f"pallas kernels use seg_width={KSEG}, program "
+                         f"has {program.seg_width}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    arr = _as_array(pool)
+    br = program.block_rows
+    for op, p in zip(program.ops, _normalize_params(program, params)):
+        if op.kind == "gemm":
+            w, b = p
+            arr = ring_gemm(arr, w, b, m_rows=program.m_rows, d_in=op.d_in,
+                            d_out=op.d_out, in_ptr=op.in_ptr,
+                            out_ptr=op.out_ptr, block_rows=br,
+                            activation=op.activation, interpret=interpret)
+        elif op.kind == "fused_mlp":
+            wg, wu, wd = p
+            arr = ring_fused_mlp(arr, wg, wu, wd, m_rows=program.m_rows,
+                                 d_model=op.d_in, ptr=op.in_ptr,
+                                 block_rows=br, ff_tile=op.ff_tile,
+                                 gated=op.gated, residual=op.residual,
+                                 activation=op.activation,
+                                 interpret=interpret)
+        else:
+            arr = ring_elementwise(arr, m_rows=program.m_rows, d=op.d_in,
+                                   ptr=op.in_ptr, fn=op.activation,
+                                   block_rows=br, interpret=interpret)
+    return _like_input(pool, arr)
+
+
+# ---------------------------------------------------------------------------
+# sim backend — the clobber oracle.
+# ---------------------------------------------------------------------------
+
+@register_executor("sim")
+def run_program_sim(program: PoolProgram, pool=None, params=None,
+                    **_kw) -> SegmentPool:
+    """Execute the program's schedule in the SegmentPool simulator.
+
+    GEMM ops run the paper's fine-grained Fig.-4 schedule (input segment
+    freed after its LAST read) — strictly harder than the block-granular
+    TPU schedule, so a clobber-free sim run certifies the kernels.
+    Returns the SegmentPool for access statistics (peak_live etc.).
+    """
+    sw = program.seg_width
+    sim = SegmentPool(program.n_segments,
+                      segment_bytes=sw * program.elem_bytes)
+    m = program.m_rows
+    first = program.ops[0]
+    for j in range(first.in_segments):
+        sim.write(first.in_ptr + j, owner=(0, j))
+    for i, op in enumerate(program.ops):
+        if op.kind == "gemm":
+            k_segs = segments_for(op.d_in, sw)
+            n_segs = segments_for(op.d_out, sw)
+            for r in range(m):
+                for n in range(n_segs):
+                    for k in range(k_segs):
+                        seg = r * k_segs + k
+                        sim.read(op.in_ptr + seg, owner=(i, seg))
+                        if n == n_segs - 1:  # last read — segment is dead
+                            sim.free(op.in_ptr + seg, owner=(i, seg))
+                    outseg = r * n_segs + n
+                    sim.write(op.out_ptr + outseg, owner=(i + 1, outseg))
+        else:  # fused_mlp / elementwise: per-row in-place at delta == 0
+            d_segs = segments_for(op.d_in, sw)
+            for r in range(m):
+                for s in range(d_segs):
+                    seg = r * d_segs + s
+                    sim.read(op.in_ptr + seg, owner=(i, seg))
+                    sim.free(op.in_ptr + seg, owner=(i, seg))
+                for s in range(d_segs):
+                    seg = r * d_segs + s
+                    sim.write(op.out_ptr + seg, owner=(i + 1, seg))
+    last = program.ops[-1]
+    for j in range(last.out_segments):  # outputs must survive the ring
+        sim.read(last.out_ptr + j, owner=(len(program.ops), j))
+    return sim

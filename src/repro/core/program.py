@@ -1,0 +1,474 @@
+"""PoolProgram — the plan-program IR over one :class:`VirtualPool`.
+
+``plan_program()`` is the single planning front-end (it subsumes the three
+previously separate APIs: ``plan_gemm``/``SegmentPlan``,
+``plan_chain``/``ChainPlan`` and ``plan_fc_chain``/
+``plan_inverted_bottleneck``/``FusedPlan`` — those dataclasses remain as
+thin adapters).  A program is an ordered list of :class:`PoolOp` steps,
+each carrying the solved Eq.-(1)/(2) geometry ``(in_ptr, out_ptr, delta,
+segment_bytes)``; executors (``repro.core.executors``) run the *same*
+program on interchangeable backends:
+
+  * ``sim``    — the :class:`repro.core.pool.SegmentPool` clobber oracle,
+  * ``jnp``    — the jit-able modular-indexing scan path,
+  * ``pallas`` — the TPU ring kernels (``segment_matmul``/``fused_mlp``).
+
+Two geometries per program (DESIGN.md §5):
+
+  * **tight** pointers — the exact Eq.-(1) chaining; ``pool_segments`` /
+    ``pool_bytes`` report this footprint and match the legacy planners
+    bit-for-bit.
+  * **physical** pointers — when ``block_rows`` is set, every pointer is
+    rounded to its op's DMA block and ``n_segments`` to the lcm of all
+    block sizes, so a contiguous async-copy block never wraps mid-block
+    (the alignment adaptation previously private to
+    ``segment_matmul.aligned_pool_geometry``).  ``block_rows=None``
+    programs keep the tight geometry and run on ``sim``/``jnp`` only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Union
+
+import jax
+
+from .planner import gemm_offset_closed_form
+from .vpool import PoolSpec, SEG_WIDTH, ceil_div, segments_for
+
+EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise")
+PLAN_ONLY_KINDS = ("fused_chain", "inverted_bottleneck")
+
+# Element-wise maps usable as gemm epilogues / elementwise ops.  Every fn
+# must map 0 -> 0 so segment padding columns stay zero through the ring.
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": lambda x: jax.numpy.maximum(x, 0.0),
+    "square": lambda x: x * x,
+    "identity": lambda x: x,
+}
+
+
+def resolve_activation(name: str | None):
+    if name is None:
+        return ACTIVATIONS["identity"]
+    try:
+        return ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(f"unknown activation {name!r}; "
+                         f"known: {sorted(ACTIVATIONS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Layer specs — the vocabulary plan_program() accepts.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """FC layer ``[M, d_in] @ [d_in, d_out] (+ bias, + activation)`` with
+    weights in "Flash" (un-pooled storage), paper Fig. 4."""
+
+    d_out: int
+    activation: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedMLPSpec:
+    """In-place fused (gated) MLP, the transformer analogue of the paper's
+    Fig.-6 inverted bottleneck: ``d_ff`` never materializes, delta == 0."""
+
+    d_ff: int
+    gated: bool = True
+    residual: bool = True
+    activation: str = "gelu"
+    ff_tile: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementwiseSpec:
+    """In-place element-wise map over the resident rows (delta == 0)."""
+
+    fn: str = "gelu"
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedChainSpec:
+    """Whole-FC-chain streaming fusion (Eq. 2, byte-granular, plan-only).
+
+    ``dims`` are the hidden dims *after* the program input dim."""
+
+    dims: tuple[int, ...]
+    rows_per_step: int = 1
+    elem_bytes: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedBottleneckSpec:
+    """Paper Fig.-6 PW->DW->PW(->add) module (byte-granular, plan-only)."""
+
+    cfg: object  # repro.core.graph_planner.ModuleConfig
+    workspace: str = "paper_11seg"
+
+
+LayerSpec = Union[GemmSpec, FusedMLPSpec, ElementwiseSpec, FusedChainSpec,
+                  InvertedBottleneckSpec]
+
+
+# ---------------------------------------------------------------------------
+# The IR.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolOp:
+    """One step of a PoolProgram with its solved pool geometry.
+
+    ``in_ptr``/``out_ptr`` are *physical* segment offsets (block-aligned
+    when the program was planned with ``block_rows``); ``delta`` is the
+    solved Eq.-(1)/(2) optimum ``b_In - b_Out`` (tight, pre-alignment).
+    For plan-only kinds all segment quantities are in bytes
+    (``segment_bytes == 1``).
+    """
+
+    kind: str
+    in_ptr: int
+    out_ptr: int
+    delta: int
+    in_segments: int
+    out_segments: int
+    segment_bytes: int
+    d_in: int = 0
+    d_out: int = 0
+    activation: str | None = None
+    gated: bool = False
+    residual: bool = False
+    d_ff: int = 0
+    ff_tile: int = 0
+    workspace_bytes: int = 0
+
+    @property
+    def span_segments(self) -> int:
+        """Width of the live In ∪ Out window while this op runs."""
+        lo = min(self.in_ptr, self.out_ptr)
+        hi = max(self.in_ptr + self.in_segments,
+                 self.out_ptr + self.out_segments)
+        return hi - lo
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolProgram:
+    """An ordered list of PoolOps over one VirtualPool.
+
+    ``pool_segments``/``pool_bytes`` — tight Eq.-(1) footprint (equals the
+    legacy planners for the same shapes).  ``n_segments`` /
+    ``physical_pool_bytes`` — the allocated ring length including DMA
+    block-alignment padding (identical to the tight value when
+    ``block_rows is None``).  Hashable, so executors jit with the program
+    as a static argument.
+    """
+
+    m_rows: int
+    seg_width: int
+    block_rows: int | None
+    n_segments: int
+    pool_segments: int
+    elem_bytes: int
+    ops: tuple[PoolOp, ...]
+
+    # -- classification ----------------------------------------------------
+    @property
+    def executable(self) -> bool:
+        return all(op.kind in EXECUTABLE_KINDS for op in self.ops)
+
+    @property
+    def aligned(self) -> bool:
+        return self.block_rows is not None
+
+    # -- footprint accounting ---------------------------------------------
+    @property
+    def pool_bytes(self) -> int:
+        op = self.ops[0]
+        if op.kind in PLAN_ONLY_KINDS:
+            return (max(op.in_segments + op.delta, op.out_segments)
+                    + op.workspace_bytes) * op.segment_bytes
+        return self.pool_segments * self.seg_width * self.elem_bytes
+
+    @property
+    def physical_pool_bytes(self) -> int:
+        op = self.ops[0]
+        if op.kind in PLAN_ONLY_KINDS:
+            return self.pool_bytes
+        return self.n_segments * self.seg_width * self.elem_bytes
+
+    @property
+    def naive_bytes(self) -> int:
+        """Tensor-level footprint: worst coexisting in+out pair."""
+        worst = max(op.in_segments + op.out_segments for op in self.ops)
+        op = self.ops[0]
+        if op.kind in PLAN_ONLY_KINDS:
+            return worst * op.segment_bytes
+        return worst * self.seg_width * self.elem_bytes
+
+    @property
+    def saving_fraction(self) -> float:
+        return 1.0 - self.pool_bytes / self.naive_bytes
+
+    # -- I/O geometry ------------------------------------------------------
+    @property
+    def in_dim(self) -> int:
+        return self.ops[0].d_in
+
+    @property
+    def out_dim(self) -> int:
+        return self.ops[-1].d_out
+
+    @property
+    def input_ptr(self) -> int:
+        return self.ops[0].in_ptr
+
+    @property
+    def output_ptr(self) -> int:
+        return self.ops[-1].out_ptr
+
+    def spec(self, dtype=None) -> PoolSpec:
+        import jax.numpy as jnp
+        return PoolSpec(self.n_segments, self.seg_width,
+                        jnp.float32 if dtype is None else dtype)
+
+    # -- validation --------------------------------------------------------
+    def check_alignment(self) -> None:
+        """Assert no contiguous DMA block of any op can wrap mid-block.
+
+        Sufficient condition (DESIGN.md §5): every pointer is a multiple of
+        its op's block segment count and ``n_segments`` is a multiple of
+        every block size — then ``(ptr + i*b) % n_segments`` is always
+        block-aligned and ``off + b <= n_segments``.
+        """
+        if not self.aligned:
+            raise ValueError("program was planned with block_rows=None "
+                             "(tight geometry) — not DMA-block aligned")
+        br = self.block_rows
+        for op in self.ops:
+            if op.kind not in EXECUTABLE_KINDS:
+                continue
+            bk = br * segments_for(op.d_in, self.seg_width)
+            bn = br * segments_for(op.d_out, self.seg_width)
+            if (op.in_ptr % bk or op.out_ptr % bn
+                    or self.n_segments % math.lcm(bk, bn)):
+                raise AssertionError(f"misaligned op {op.kind} "
+                                     f"({op.in_ptr},{op.out_ptr}) in pool "
+                                     f"of {self.n_segments}")
+            n_blocks = self.m_rows // br
+            for i in range(n_blocks):
+                off_in = (op.in_ptr + i * bk) % self.n_segments
+                off_out = (op.out_ptr + i * bn) % self.n_segments
+                assert off_in + bk <= self.n_segments, "mid-block wrap (in)"
+                assert off_out + bn <= self.n_segments, "mid-block wrap (out)"
+
+
+# ---------------------------------------------------------------------------
+# The single planning front-end.
+# ---------------------------------------------------------------------------
+
+def _floor_mult(x: int, b: int) -> int:
+    return (x // b) * b
+
+
+def _span(in_ptr: int, out_ptr: int, in_tot: int, out_tot: int) -> int:
+    return (max(in_ptr + in_tot, out_ptr + out_tot)
+            - min(in_ptr, out_ptr))
+
+
+def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
+                 seg_width: int = SEG_WIDTH, block_rows: int | None = None,
+                 elem_bytes: int = 4, delta_slack: int = 0) -> PoolProgram:
+    """Solve segment offsets for a layer sequence over ONE virtual pool.
+
+    ``block_rows=None`` keeps the exact Eq.-(1) geometry (``sim``/``jnp``
+    backends); an integer plans DMA-block-aligned geometry executable on
+    the ``pallas`` backend too (deltas only ever rounded *up* — safety is
+    preserved; ``pool_segments`` still reports the tight footprint).
+
+    ``delta_slack`` exists for tightness testing only: it shrinks every
+    solved delta, so ``delta_slack=1`` must make the ``sim`` backend raise
+    :class:`repro.core.pool.PoolClobberError` (the plans are exact optima).
+    """
+    layers = list(layers)
+    if not layers:
+        raise ValueError("need at least one layer spec")
+    if any(isinstance(s, (FusedChainSpec, InvertedBottleneckSpec))
+           for s in layers):
+        if len(layers) != 1:
+            raise ValueError("byte-granular plan-only specs (FusedChainSpec/"
+                             "InvertedBottleneckSpec) must be the sole layer")
+        return _plan_analytic(m_rows, d_in, layers[0])
+
+    aligned = block_rows is not None
+    br = block_rows if aligned else 1
+    if br <= 0 or m_rows % br:
+        raise ValueError(f"block_rows={block_rows} must divide "
+                         f"m_rows={m_rows}")
+
+    ops: list[PoolOp] = []
+    cur = d_in
+    pt = 0   # tight running pointer
+    pa = 0   # aligned running pointer
+    spans_a: list[int] = []
+    aligns: list[int] = [1]
+    for pos, spec in enumerate(layers):
+        if isinstance(spec, (GemmSpec, FusedMLPSpec)):
+            resolve_activation(spec.activation)  # fail at plan time
+        elif isinstance(spec, ElementwiseSpec):
+            resolve_activation(spec.fn)
+        if isinstance(spec, GemmSpec):
+            k_segs = segments_for(cur, seg_width)
+            n_segs = segments_for(spec.d_out, seg_width)
+            bk, bn = br * k_segs, br * n_segs
+            delta = (gemm_offset_closed_form(m_rows, n_segs, k_segs)
+                     - delta_slack)
+            ot = pt - delta
+            if not aligned:
+                ia, oa = pa, ot
+            elif pos == 0:
+                # First op: both tensors are still placeable — pick the
+                # cheaper of "shift In up to a bk multiple" (the legacy
+                # aligned_pool_geometry choice) and "shift Out down to a
+                # bn multiple".
+                gap_k = ceil_div(max(delta, 0), bk) * bk
+                gap_n = ceil_div(max(delta, 0), bn) * bn
+                ia, oa = ((gap_k, 0) if gap_k <= gap_n else (0, -gap_n))
+            else:
+                ia, oa = pa, _floor_mult(pa - delta, bn)
+            in_tot, out_tot = m_rows * k_segs, m_rows * n_segs
+            op = PoolOp(kind="gemm", in_ptr=ia, out_ptr=oa, delta=delta,
+                        in_segments=in_tot, out_segments=out_tot,
+                        segment_bytes=seg_width * elem_bytes,
+                        d_in=cur, d_out=spec.d_out,
+                        activation=spec.activation)
+            aligns.append(math.lcm(bk, bn))
+            pt, pa, cur = ot, oa, spec.d_out
+        elif isinstance(spec, (FusedMLPSpec, ElementwiseSpec)):
+            d_segs = segments_for(cur, seg_width)
+            bd = br * d_segs
+            delta = -delta_slack  # Eq.-(2) optimum for these chains is 0
+            ot = pt - delta
+            oa = pa if (not aligned or delta == 0) else pa - delta
+            tot = m_rows * d_segs
+            if isinstance(spec, FusedMLPSpec):
+                if spec.d_ff % spec.ff_tile:
+                    raise ValueError(f"ff_tile={spec.ff_tile} must divide "
+                                     f"d_ff={spec.d_ff}")
+                op = PoolOp(kind="fused_mlp", in_ptr=pa, out_ptr=oa,
+                            delta=delta, in_segments=tot, out_segments=tot,
+                            segment_bytes=seg_width * elem_bytes,
+                            d_in=cur, d_out=cur, activation=spec.activation,
+                            gated=spec.gated, residual=spec.residual,
+                            d_ff=spec.d_ff, ff_tile=spec.ff_tile)
+            else:
+                op = PoolOp(kind="elementwise", in_ptr=pa, out_ptr=oa,
+                            delta=delta, in_segments=tot, out_segments=tot,
+                            segment_bytes=seg_width * elem_bytes,
+                            d_in=cur, d_out=cur, activation=spec.fn)
+            ia = pa
+            in_tot = out_tot = tot
+            aligns.append(bd)
+            pt, pa = ot, oa
+        else:
+            raise TypeError(f"unknown layer spec {spec!r}")
+        spans_a.append(_span(ia, oa, in_tot, out_tot))
+        ops.append(op)
+
+    # Tight spans come from the tight chaining, not the aligned pointers.
+    pool_segments = max(_tight_spans(m_rows, d_in, layers, seg_width,
+                                     delta_slack))
+
+    if aligned:
+        align = math.lcm(*aligns)
+        n_segments = ceil_div(max(spans_a), align) * align
+        base = min(min(op.in_ptr, op.out_ptr) for op in ops)
+        shift = -_floor_mult(base, align) if base < 0 else 0
+    else:
+        n_segments = pool_segments
+        base = min(min(op.in_ptr, op.out_ptr) for op in ops)
+        shift = -base
+    if shift:
+        ops = [dataclasses.replace(op, in_ptr=op.in_ptr + shift,
+                                   out_ptr=op.out_ptr + shift)
+               for op in ops]
+
+    return PoolProgram(m_rows=m_rows, seg_width=seg_width,
+                       block_rows=block_rows, n_segments=n_segments,
+                       pool_segments=pool_segments, elem_bytes=elem_bytes,
+                       ops=tuple(ops))
+
+
+def _tight_spans(m_rows, d_in, layers, seg_width, delta_slack) -> list[int]:
+    """Exact (unaligned) per-op live spans — the legacy ChainPlan numbers."""
+    spans = []
+    cur, ptr = d_in, 0
+    for spec in layers:
+        if isinstance(spec, GemmSpec):
+            k_segs = segments_for(cur, seg_width)
+            n_segs = segments_for(spec.d_out, seg_width)
+            delta = (gemm_offset_closed_form(m_rows, n_segs, k_segs)
+                     - delta_slack)
+            out = ptr - delta
+            spans.append(_span(ptr, out, m_rows * k_segs, m_rows * n_segs))
+            ptr, cur = out, spec.d_out
+        else:
+            d_segs = segments_for(cur, seg_width)
+            out = ptr + delta_slack
+            tot = m_rows * d_segs
+            spans.append(_span(ptr, out, tot, tot))
+            ptr = out
+    return spans
+
+
+# ---------------------------------------------------------------------------
+# Byte-granular plan-only programs (Eq. 2 analytic plans).
+# ---------------------------------------------------------------------------
+
+def _plan_analytic(m_rows: int, d_in: int, spec) -> PoolProgram:
+    from .graph_planner import plan_fc_chain, plan_inverted_bottleneck
+    if isinstance(spec, FusedChainSpec):
+        dims = [d_in, *spec.dims]
+        fp = plan_fc_chain(m_rows, dims, elem_bytes=spec.elem_bytes,
+                           rows_per_step=spec.rows_per_step)
+        op = PoolOp(kind="fused_chain", in_ptr=fp.delta_bytes, out_ptr=0,
+                    delta=fp.delta_bytes, in_segments=fp.input_bytes,
+                    out_segments=fp.output_bytes, segment_bytes=1,
+                    d_in=d_in, d_out=dims[-1],
+                    workspace_bytes=fp.workspace_bytes)
+    else:
+        fp = plan_inverted_bottleneck(spec.cfg, spec.workspace)
+        op = PoolOp(kind="inverted_bottleneck", in_ptr=fp.delta_bytes,
+                    out_ptr=0, delta=fp.delta_bytes,
+                    in_segments=fp.input_bytes,
+                    out_segments=fp.output_bytes, segment_bytes=1,
+                    d_in=spec.cfg.c_in, d_out=spec.cfg.c_out,
+                    workspace_bytes=fp.workspace_bytes)
+    pool_bytes = (max(op.in_segments + op.delta, op.out_segments)
+                  + op.workspace_bytes)
+    return PoolProgram(m_rows=m_rows, seg_width=1, block_rows=None,
+                       n_segments=pool_bytes, pool_segments=pool_bytes,
+                       elem_bytes=1, ops=(op,))
+
+
+def plan_module_program(cfg, workspace: str = "paper_11seg") -> PoolProgram:
+    """One-op program for a fused inverted-bottleneck module (Fig. 6).
+
+    ``pool_bytes`` equals ``plan_inverted_bottleneck(cfg).pool_bytes``."""
+    return plan_program(cfg.hw * cfg.hw, cfg.c_in,
+                        [InvertedBottleneckSpec(cfg, workspace)])
+
+
+def plan_stream_chain_program(m_rows: int, dims: Sequence[int], *,
+                              rows_per_step: int = 1,
+                              elem_bytes: int = 2) -> PoolProgram:
+    """One-op program for a whole-chain streaming fusion (Eq. 2).
+
+    ``pool_bytes`` equals ``plan_fc_chain(m_rows, dims, ...).pool_bytes``."""
+    return plan_program(m_rows, dims[0],
+                        [FusedChainSpec(tuple(dims[1:]),
+                                        rows_per_step=rows_per_step,
+                                        elem_bytes=elem_bytes)])

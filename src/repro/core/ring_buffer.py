@@ -1,14 +1,14 @@
-"""JAX HBM ring pool — vMCU's circular segment buffer as a jit-able module.
+"""JAX HBM ring pool — legacy chain API, now thin adapters over the
+VirtualPool / PoolProgram abstraction.
 
-On MCU the kernel owns raw pointers; under XLA we recover the same effect
-with (a) ONE pool array ``[n_segments, seg_width]`` threaded through the
-layer chain and donated at the jit boundary, and (b) modular segment
-indexing (``jnp.take`` / scatter with ``% n_segments`` indices) — the
-paper's `addr % (MemCap/Seg)` bounds check, verbatim.
-
-``memory_analysis()`` of the compiled chain shows the activation footprint
-collapsing to the pool size (benchmarks/pool_footprint.py); numerics are
-bit-identical to the naive chain (tests/test_ring_buffer.py).
+``ChainPlan``/``plan_chain`` remain for callers of the original API, but
+planning is delegated to :func:`repro.core.program.plan_program`
+(``block_rows=None`` — the exact, unaligned Eq.-(1) geometry) and the
+layer scan to :func:`repro.core.executors.gemm_ring_scan` (the single jnp
+ring-GEMM implementation, shared with the ``jnp`` executor backend).
+``write_rows``/``read_rows`` are aliases of the one stage/fetch in
+:mod:`repro.core.vpool`.  New code should use ``plan_program`` +
+``execute`` directly (see DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -18,21 +18,26 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .planner import gemm_offset_closed_form
-
-# TPU lane width; segments are padded to it so MXU tiles stay aligned.
-LANE = 128
+from .executors import gemm_ring_scan
+from .program import GemmSpec, plan_program
+from .vpool import LANE, fetch_rows as _fetch_rows
+from .vpool import segments_for
+from .vpool import stage_rows as _stage_rows
 
 
 def _segs(dim: int, seg_width: int) -> int:
-    return -(-dim // seg_width)
+    return segments_for(dim, seg_width)
 
 
 @dataclasses.dataclass(frozen=True)
 class ChainPlan:
-    """Static plan for an FC chain ``d0 -> d1 -> ... -> dL`` over M rows."""
+    """Static plan for an FC chain ``d0 -> d1 -> ... -> dL`` over M rows.
+
+    Legacy adapter: equivalent to
+    ``plan_program(m_rows, dims[0], [GemmSpec(d) for d in dims[1:]],
+    seg_width=seg_width, block_rows=None)``.
+    """
 
     m_rows: int
     dims: tuple[int, ...]
@@ -54,79 +59,27 @@ class ChainPlan:
 
 
 def plan_chain(m_rows: int, dims: list[int], seg_width: int = LANE) -> ChainPlan:
-    """Solve Eq. (1) per layer and chain the pointers: layer i's output
-    pointer is shifted ``delta_i`` segments below its input pointer; the
-    next layer consumes it in place."""
-    ptrs = []
-    in_ptr = 0
-    max_span = 0
-    for d_in, d_out in zip(dims[:-1], dims[1:]):
-        k_segs = _segs(d_in, seg_width)
-        n_segs = _segs(d_out, seg_width)
-        delta = gemm_offset_closed_form(m_rows, n_segs, k_segs)
-        out_ptr = in_ptr - delta
-        # Track the widest live span (in segments) this layer needs.
-        span = (max(in_ptr + m_rows * k_segs, out_ptr + m_rows * n_segs)
-                - min(in_ptr, out_ptr))
-        max_span = max(max_span, span)
-        ptrs.append((in_ptr, out_ptr))
-        in_ptr = out_ptr
+    """Solve Eq. (1) per layer and chain the pointers (adapter over
+    :func:`plan_program`): layer i's output pointer sits ``delta_i``
+    segments below its input pointer; the next layer consumes it in place."""
+    prog = plan_program(m_rows, dims[0], [GemmSpec(d) for d in dims[1:]],
+                        seg_width=seg_width, block_rows=None)
+    shift = prog.ops[0].in_ptr  # program pointers are shifted >= 0
+    ptrs = tuple((op.in_ptr - shift, op.out_ptr - shift) for op in prog.ops)
     return ChainPlan(m_rows=m_rows, dims=tuple(dims), seg_width=seg_width,
-                     n_segments=max_span, layer_ptrs=tuple(ptrs))
+                     n_segments=prog.n_segments, layer_ptrs=ptrs)
 
 
 def write_rows(pool: jax.Array, rows: jax.Array, ptr: int,
                n_segments: int) -> jax.Array:
-    """Store ``rows [M, d]`` into the ring starting at segment ``ptr``."""
-    m, d = rows.shape
-    seg_w = pool.shape[1]
-    segs = _segs(d, seg_w)
-    padded = jnp.pad(rows, ((0, 0), (0, segs * seg_w - d)))
-    flat = padded.reshape(m * segs, seg_w)
-    idx = (ptr + jnp.arange(m * segs)) % n_segments
-    return pool.at[idx].set(flat.astype(pool.dtype))
+    """Alias of :func:`repro.core.vpool.stage_rows` (the one impl)."""
+    return _stage_rows(pool, rows, ptr, n_segments)
 
 
 def read_rows(pool: jax.Array, ptr: int, m: int, d: int,
               n_segments: int) -> jax.Array:
-    seg_w = pool.shape[1]
-    segs = _segs(d, seg_w)
-    idx = (ptr + jnp.arange(m * segs)) % n_segments
-    flat = jnp.take(pool, idx, axis=0)
-    return flat.reshape(m, segs * seg_w)[:, :d]
-
-
-def _layer_scan(pool: jax.Array, w: jax.Array, b: jax.Array, *,
-                in_ptr: int, out_ptr: int, m_rows: int, n_segments: int,
-                block_rows: int, activation) -> jax.Array:
-    """One FC layer streamed through the ring, ``block_rows`` rows per step.
-
-    Mirrors the paper's Fig.-4 kernel: RAMLoad a row-block of input
-    segments, Dot against the (un-pooled, "Flash") weight, RAMStore the
-    output row-block at the solved offset; the modulo on every index is the
-    circular-buffer bounds check.
-    """
-    d_in, d_out = w.shape
-    seg_w = pool.shape[1]
-    k_segs, n_segs = _segs(d_in, seg_w), _segs(d_out, seg_w)
-    n_blocks = m_rows // block_rows
-    if n_blocks * block_rows != m_rows:
-        raise ValueError("block_rows must divide m_rows")
-
-    def step(p, blk):
-        row0 = blk * block_rows
-        ridx = (in_ptr + row0 * k_segs
-                + jnp.arange(block_rows * k_segs)) % n_segments
-        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
-        x = x[:, :d_in]
-        y = activation(x @ w.astype(x.dtype) + b.astype(x.dtype))
-        pad = jnp.pad(y, ((0, 0), (0, n_segs * seg_w - d_out)))
-        widx = (out_ptr + row0 * n_segs
-                + jnp.arange(block_rows * n_segs)) % n_segments
-        return p.at[widx].set(pad.reshape(block_rows * n_segs, seg_w)), None
-
-    pool, _ = jax.lax.scan(step, pool, jnp.arange(n_blocks))
-    return pool
+    """Alias of :func:`repro.core.vpool.fetch_rows` (the one impl)."""
+    return _fetch_rows(pool, ptr, m, d, n_segments)
 
 
 def init_chain_params(key: jax.Array, dims: list[int],
@@ -144,14 +97,15 @@ def ring_chain_apply(pool: jax.Array, params, plan: ChainPlan,
                      block_rows: int = 1) -> jax.Array:
     """Run the whole planned chain inside the donated pool buffer."""
     base = plan.layer_ptrs[-1][1]  # most negative pointer; shift all >= 0
-    for (w, b), (in_ptr, out_ptr), is_last in zip(
-            params, plan.layer_ptrs,
-            [i == len(params) - 1 for i in range(len(params))]):
-        act = (lambda x: x) if is_last else jax.nn.gelu
-        pool = _layer_scan(pool, w, b,
-                           in_ptr=in_ptr - base, out_ptr=out_ptr - base,
-                           m_rows=plan.m_rows, n_segments=plan.n_segments,
-                           block_rows=block_rows, activation=act)
+    n_layers = len(params)
+    for i, ((w, b), (in_ptr, out_ptr)) in enumerate(
+            zip(params, plan.layer_ptrs)):
+        act = None if i == n_layers - 1 else "gelu"
+        pool = gemm_ring_scan(pool, w, b,
+                              in_ptr=in_ptr - base, out_ptr=out_ptr - base,
+                              m_rows=plan.m_rows,
+                              n_segments=plan.n_segments,
+                              block_rows=block_rows, activation=act)
     return pool
 
 

@@ -1,0 +1,140 @@
+"""VirtualPool — the ONE virtualized segment pool every kernel partitions.
+
+vMCU's central object (paper §4) is a single circular pool
+``Pool[MemCap/Seg]`` that all tensors of a kernel chain live inside at
+planner-solved offsets.  This module is the repo's single source of truth
+for that object:
+
+  * ``ceil_div`` / ``segments_for`` — THE ceil-div segment helper (was
+    triplicated across ``ring_buffer._segs``, ``segment_matmul._segs`` and
+    inline ``-(-d // SEG_WIDTH)`` in ``ops.py``).
+  * ``stage_rows`` / ``fetch_rows`` — THE host-side ring staging/readback
+    (modular segment indexing = the paper's ``addr % (MemCap/Seg)`` bounds
+    check).  ``ring_buffer.write_rows/read_rows`` and the old
+    ``segment_matmul.stage_rows/fetch_rows`` are thin aliases of these.
+  * ``PoolSpec`` — the pool geometry record (n_segments, seg_width, dtype).
+  * ``VirtualPool`` — an immutable handle pairing a spec with the donated
+    backing array; kernels and executors thread it functionally.
+
+Plans over a VirtualPool are :class:`repro.core.program.PoolProgram`
+objects; executors (``repro.core.executors``) run the same program on the
+``sim`` / ``jnp`` / ``pallas`` backends.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# TPU lane width — the canonical segment width; one pool segment row holds
+# SEG_WIDTH elements so MXU tiles stay aligned (DESIGN.md §5).
+SEG_WIDTH = 128
+LANE = SEG_WIDTH  # historical alias (ring_buffer)
+
+
+def ceil_div(a: int, b: int) -> int:
+    """Ceiling division for non-negative ``a`` and positive ``b``."""
+    return -(-a // b)
+
+
+def segments_for(dim: int, seg_width: int = SEG_WIDTH) -> int:
+    """Number of ``seg_width``-wide segments covering a ``dim``-wide row."""
+    return ceil_div(dim, seg_width)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Geometry of a virtual pool: ``n_segments`` rows of ``seg_width``
+    elements of ``dtype``.  Hashable so it can ride in static jit args."""
+
+    n_segments: int
+    seg_width: int = SEG_WIDTH
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.n_segments <= 0 or self.seg_width <= 0:
+            raise ValueError(f"bad pool geometry {self!r}")
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n_segments, self.seg_width)
+
+    @property
+    def segment_bytes(self) -> int:
+        return self.seg_width * np.dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_segments * self.segment_bytes
+
+
+def stage_rows(pool: jax.Array, rows: jax.Array, ptr: int,
+               n_segments: int | None = None) -> jax.Array:
+    """Place ``rows [M, d]`` into the ring starting at segment ``ptr``.
+
+    Rows are padded to whole segments and scattered with modular indices —
+    the paper's circular-buffer bounds check, verbatim.
+    """
+    m, d = rows.shape
+    seg_w = pool.shape[1]
+    n = pool.shape[0] if n_segments is None else n_segments
+    segs = segments_for(d, seg_w)
+    padded = jnp.pad(rows, ((0, 0), (0, segs * seg_w - d)))
+    idx = (ptr + jnp.arange(m * segs)) % n
+    return pool.at[idx].set(padded.reshape(m * segs, seg_w)
+                            .astype(pool.dtype))
+
+
+def fetch_rows(pool: jax.Array, ptr: int, m: int, d: int,
+               n_segments: int | None = None) -> jax.Array:
+    """Gather ``[m, d]`` rows resident at segment ``ptr`` out of the ring."""
+    seg_w = pool.shape[1]
+    n = pool.shape[0] if n_segments is None else n_segments
+    segs = segments_for(d, seg_w)
+    idx = (ptr + jnp.arange(m * segs)) % n
+    return jnp.take(pool, idx, axis=0).reshape(m, segs * seg_w)[:, :d]
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualPool:
+    """Immutable handle on the one pool array all kernels partition.
+
+    Functional style: every mutation returns a new handle wrapping the
+    updated array (under jit with donation the buffer itself is reused —
+    the MCU's raw-pointer discipline recovered at the XLA level).
+    """
+
+    array: jax.Array
+
+    @classmethod
+    def alloc(cls, spec: PoolSpec) -> "VirtualPool":
+        return cls(jnp.zeros(spec.shape, spec.dtype))
+
+    @property
+    def n_segments(self) -> int:
+        return self.array.shape[0]
+
+    @property
+    def seg_width(self) -> int:
+        return self.array.shape[1]
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def spec(self) -> PoolSpec:
+        return PoolSpec(self.n_segments, self.seg_width, self.array.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return self.spec.nbytes
+
+    def stage_rows(self, rows: jax.Array, ptr: int) -> "VirtualPool":
+        return VirtualPool(stage_rows(self.array, rows, ptr))
+
+    def fetch_rows(self, ptr: int, m: int, d: int) -> jax.Array:
+        return fetch_rows(self.array, ptr, m, d)

@@ -2,9 +2,13 @@
 
   segment_matmul — ring-buffer GEMM (paper Fig. 4 FC kernel)
   fused_mlp      — in-place streaming MLP (paper Fig. 6 inverted bottleneck)
+  elementwise    — in-place ring elementwise (delta == 0 pool ops)
   ring_decode    — decode attention over a ring KV cache (sliding window)
 
-Validated in interpret mode against :mod:`repro.kernels.ref` oracles.
+All are reachable through the unified API: ``repro.core.execute(program,
+pool, params, backend="pallas")``.  Validated in interpret mode against
+:mod:`repro.kernels.ref` oracles and the jnp executor backend.
 """
+from .elementwise import ring_elementwise
 from .ops import (SEG_WIDTH, decode_attention, fused_mlp, ring_cache_update,
                   segment_gemm)

@@ -1,0 +1,70 @@
+"""In-place ring elementwise kernel — delta == 0 pool ops on TPU.
+
+The simplest PoolProgram op: map a registered element-wise fn over rows
+resident in the ring pool, writing each row-block back over itself (the
+paper's in-place epilogue case — RAMStore at the input pointer).  Same
+RAMLoad / compute / RAMStore skeleton as the ring GEMM (Fig. 4), with the
+modulo bounds check on every block offset.
+
+The fn is applied to the whole padded ``[bd, SEG_WIDTH]`` tile; every fn
+in :data:`repro.core.program.ACTIVATIONS` maps 0 -> 0, so segment padding
+columns stay zero through the ring.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.program import resolve_activation
+from .segment_matmul import SEG_WIDTH, _segs
+
+
+def _kernel(pool_ref, out_ref, x_vmem, sem_in, sem_out, *,
+            ptr: int, n_seg: int, bd: int, fn: str):
+    i = pl.program_id(0)
+    off = jax.lax.rem(ptr + i * bd, n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, bd)], x_vmem, sem_in)
+    load.start()
+    load.wait()
+    y = resolve_activation(fn)(x_vmem[...].astype(jnp.float32))
+    x_vmem[...] = y.astype(x_vmem.dtype)
+    store = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off, bd)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_rows", "d", "ptr", "fn", "block_rows", "interpret"),
+    donate_argnums=(0,))
+def ring_elementwise(pool: jax.Array, *, m_rows: int, d: int, ptr: int,
+                     fn: str = "gelu", block_rows: int = 1,
+                     interpret: bool = False) -> jax.Array:
+    """Apply ``fn`` in place to ``[m_rows, d]`` rows resident at ``ptr``."""
+    n_seg = pool.shape[0]
+    d_segs = _segs(d)
+    bd = block_rows * d_segs
+    if m_rows % block_rows:
+        raise ValueError("block_rows must divide m_rows")
+    if n_seg % bd or ptr % bd:
+        raise ValueError("pool/ptr must be row-block aligned")
+    kernel = functools.partial(_kernel, ptr=ptr, n_seg=n_seg, bd=bd, fn=fn)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_rows // block_rows,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ARBITRARY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bd, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool)

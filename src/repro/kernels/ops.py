@@ -1,8 +1,13 @@
 """Jit'd public wrappers around the Pallas kernels.
 
+Each wrapper is now a one-call demonstration of the unified API: plan a
+:class:`PoolProgram`, alloc a :class:`VirtualPool`, ``execute`` on the
+``pallas`` backend, fetch the result.  Production code keeps the pool
+alive across a longer program (see examples/quickstart.py).
+
 On CPU (this container) every kernel runs in ``interpret=True`` mode — the
-kernel body executes in Python, validating ring logic and numerics; on a TPU
-backend the same call sites compile through Mosaic.
+kernel body executes in Python, validating ring logic and numerics; on a
+TPU backend the same call sites compile through Mosaic.
 """
 from __future__ import annotations
 
@@ -14,7 +19,9 @@ from .segment_matmul import (SEG_WIDTH, aligned_pool_geometry, fetch_rows,
                              ring_gemm, stage_rows)
 from .fused_mlp import ring_fused_mlp
 from .ring_decode import ring_cache_update, ring_decode_attention
-from ..core.planner import gemm_offset_closed_form
+from ..core.executors import execute
+from ..core.program import FusedMLPSpec, GemmSpec, plan_program
+from ..core.vpool import VirtualPool, segments_for
 
 
 def _interpret() -> bool:
@@ -30,24 +37,19 @@ def segment_gemm(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
     """
     m, d_in = x.shape
     d_out = w.shape[1]
-    if b is None:
-        b = jnp.zeros((d_out,), w.dtype)
-    k_segs = -(-d_in // SEG_WIDTH)
-    n_segs = -(-d_out // SEG_WIDTH)
-    delta = gemm_offset_closed_form(m, n_segs, k_segs)
-    n_seg, in_ptr, out_ptr = aligned_pool_geometry(
-        m, d_in, d_out, delta, block_rows)
-    pool = jnp.zeros((n_seg, SEG_WIDTH), x.dtype)
-    pool = stage_rows(pool, x, in_ptr)
-    pool = ring_gemm(pool, w, b, m_rows=m, d_in=d_in, d_out=d_out,
-                     in_ptr=in_ptr, out_ptr=out_ptr, block_rows=block_rows,
-                     interpret=_interpret())
-    y = fetch_rows(pool, out_ptr, m, d_out)
-    info = dict(n_segments=n_seg, in_ptr=in_ptr, out_ptr=out_ptr,
-                delta=delta,
-                pool_bytes=n_seg * SEG_WIDTH * x.dtype.itemsize,
-                naive_bytes=(m * k_segs + m * n_segs) * SEG_WIDTH
-                * x.dtype.itemsize)
+    program = plan_program(m, d_in, [GemmSpec(d_out)], seg_width=SEG_WIDTH,
+                           block_rows=block_rows,
+                           elem_bytes=jnp.dtype(x.dtype).itemsize)
+    pool = VirtualPool.alloc(program.spec(x.dtype))
+    pool = pool.stage_rows(x, program.input_ptr)
+    pool = execute(program, pool, [(w, b)], backend="pallas",
+                   interpret=_interpret())
+    y = pool.fetch_rows(program.output_ptr, m, d_out)
+    op = program.ops[0]
+    info = dict(n_segments=program.n_segments, in_ptr=op.in_ptr,
+                out_ptr=op.out_ptr, delta=op.delta,
+                pool_bytes=program.physical_pool_bytes,
+                naive_bytes=program.naive_bytes)
     return y, info
 
 
@@ -57,16 +59,17 @@ def fused_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
               activation: str = "gelu") -> jax.Array:
     """In-place fused MLP through a fresh ring pool (delta == 0)."""
     m, d = x.shape
-    d_segs = -(-d // SEG_WIDTH)
-    bd = block_rows * d_segs
-    n_seg = -(-(m * d_segs) // bd) * bd
-    pool = jnp.zeros((n_seg, SEG_WIDTH), x.dtype)
-    pool = stage_rows(pool, x, 0)
-    pool = ring_fused_mlp(pool, w_gate, w_up, w_down, m_rows=m, d_model=d,
-                          ptr=0, block_rows=block_rows, ff_tile=ff_tile,
-                          gated=gated, residual=residual,
-                          activation=activation, interpret=_interpret())
-    return fetch_rows(pool, 0, m, d)
+    program = plan_program(
+        m, d,
+        [FusedMLPSpec(d_ff=w_up.shape[1], gated=gated, residual=residual,
+                      activation=activation, ff_tile=ff_tile)],
+        seg_width=SEG_WIDTH, block_rows=block_rows,
+        elem_bytes=jnp.dtype(x.dtype).itemsize)
+    pool = VirtualPool.alloc(program.spec(x.dtype))
+    pool = pool.stage_rows(x, program.input_ptr)
+    pool = execute(program, pool, [(w_gate, w_up, w_down)],
+                   backend="pallas", interpret=_interpret())
+    return pool.fetch_rows(program.output_ptr, m, d)
 
 
 def decode_attention(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
@@ -82,4 +85,5 @@ __all__ = [
     "segment_gemm", "fused_mlp", "decode_attention", "ring_cache_update",
     "ring_gemm", "ring_fused_mlp", "ring_decode_attention",
     "aligned_pool_geometry", "stage_rows", "fetch_rows", "SEG_WIDTH", "ref",
+    "segments_for",
 ]

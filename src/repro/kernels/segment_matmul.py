@@ -32,16 +32,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-SEG_WIDTH = 128  # lane width; one pool segment row = 128 elements
+from ..core.program import resolve_activation
+from ..core.vpool import SEG_WIDTH, segments_for
+from ..core.vpool import fetch_rows as _pool_fetch_rows
+from ..core.vpool import stage_rows as _pool_stage_rows
 
 
 def _segs(d: int) -> int:
-    return -(-d // SEG_WIDTH)
+    return segments_for(d, SEG_WIDTH)
 
 
 def _kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in, sem_out,
             *, in_ptr: int, out_ptr: int, n_seg: int, block_rows: int,
-            d_in: int, d_out: int):
+            d_in: int, d_out: int, activation: str | None):
     i = pl.program_id(0)
     k_segs, n_segs = _segs(d_in), _segs(d_out)
     bk, bn = block_rows * k_segs, block_rows * n_segs
@@ -56,7 +59,7 @@ def _kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in, sem_out,
     # --- Dot: MXU on the segment block --------------------------------------
     x = x_vmem[...].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
     y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
-    y = y + b_ref[...].astype(jnp.float32)
+    y = resolve_activation(activation)(y + b_ref[...].astype(jnp.float32))
     y = y.astype(x_vmem.dtype)
     pad = n_segs * SEG_WIDTH - d_out
     if pad:
@@ -94,11 +97,12 @@ def aligned_pool_geometry(m_rows: int, d_in: int, d_out: int,
 @functools.partial(
     jax.jit,
     static_argnames=("m_rows", "d_in", "d_out", "in_ptr", "out_ptr",
-                     "block_rows", "interpret"),
+                     "block_rows", "activation", "interpret"),
     donate_argnums=(0,))
 def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
               d_in: int, d_out: int, in_ptr: int, out_ptr: int,
-              block_rows: int = 8, interpret: bool = False) -> jax.Array:
+              block_rows: int = 8, activation: str | None = None,
+              interpret: bool = False) -> jax.Array:
     """Run ``Out[m_rows, d_out] = In[m_rows, d_in] @ w + b`` inside the ring.
 
     ``pool``: [n_segments, SEG_WIDTH]; input rows resident at ``in_ptr``;
@@ -116,7 +120,8 @@ def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
     grid = (m_rows // block_rows,)
     kernel = functools.partial(
         _kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
-        block_rows=block_rows, d_in=d_in, d_out=d_out)
+        block_rows=block_rows, d_in=d_in, d_out=d_out,
+        activation=activation)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -139,16 +144,10 @@ def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
 
 
 def stage_rows(pool: jax.Array, rows: jax.Array, ptr: int) -> jax.Array:
-    """Place ``rows [M, d]`` into the ring at segment ``ptr`` (host-side)."""
-    m, d = rows.shape
-    segs = _segs(d)
-    padded = jnp.pad(rows, ((0, 0), (0, segs * SEG_WIDTH - d)))
-    idx = (ptr + jnp.arange(m * segs)) % pool.shape[0]
-    return pool.at[idx].set(padded.reshape(m * segs, SEG_WIDTH)
-                            .astype(pool.dtype))
+    """Alias of :func:`repro.core.vpool.stage_rows` (the one impl)."""
+    return _pool_stage_rows(pool, rows, ptr)
 
 
 def fetch_rows(pool: jax.Array, ptr: int, m: int, d: int) -> jax.Array:
-    segs = _segs(d)
-    idx = (ptr + jnp.arange(m * segs)) % pool.shape[0]
-    return jnp.take(pool, idx, axis=0).reshape(m, segs * SEG_WIDTH)[:, :d]
+    """Alias of :func:`repro.core.vpool.fetch_rows` (the one impl)."""
+    return _pool_fetch_rows(pool, ptr, m, d)

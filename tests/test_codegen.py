@@ -1,5 +1,7 @@
 """Paper §6 compiler layer: intrinsic codegen from plans."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codegen import (INTRINSICS, emit_fc_kernel,

@@ -1,5 +1,8 @@
 """Eq. (2) multi-layer plans vs the paper's published anchors."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph_planner import (MCUNET_5FPS_VWW, MCUNET_320KB_IMAGENET,

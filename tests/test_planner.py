@@ -1,6 +1,8 @@
 """Eq. (1) solver: paper closed forms, exact scans, pool tightness."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.affine import (AccessFn, IterDomain, gemm_domain,

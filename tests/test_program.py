@@ -1,0 +1,206 @@
+"""The unified PoolProgram API: one plan object, three backends.
+
+Covers the redesign's acceptance criteria: a multi-op program (gemm chain +
+fused MLP) executes on ``sim``/``jnp``/``pallas`` from the same plan
+object, jnp and pallas agree, sim is clobber-free at the solved deltas and
+clobbers at delta-1, and footprints match the legacy planners bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ElementwiseSpec, FusedMLPSpec, GemmSpec,
+                        PoolClobberError, execute, executor_names,
+                        plan_chain, plan_gemm, plan_module_program,
+                        plan_program, plan_stream_chain_program,
+                        register_executor, run_program, segments_for)
+from repro.core.executors import _EXECUTORS
+from repro.core.graph_planner import (MCUNET_5FPS_VWW, plan_fc_chain,
+                                      plan_inverted_bottleneck)
+from repro.core.planner import gemm_offset_closed_form
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+M, D = 16, 256
+DIMS = [256, 384, 256]
+D_FF = 512
+
+
+def _three_op_program(block_rows=8, **kw):
+    """gemm(gelu) -> gemm -> fused MLP: the acceptance-criteria program."""
+    return plan_program(M, DIMS[0],
+                        [GemmSpec(DIMS[1], activation="gelu"),
+                         GemmSpec(DIMS[2]),
+                         FusedMLPSpec(D_FF, ff_tile=256)],
+                        block_rows=block_rows, **kw)
+
+
+def _three_op_params():
+    ks = jax.random.split(KEY, 8)
+    w1 = jax.random.normal(ks[0], (DIMS[0], DIMS[1])) / 16
+    b1 = jax.random.normal(ks[1], (DIMS[1],))
+    w2 = jax.random.normal(ks[2], (DIMS[1], DIMS[2])) / 19
+    b2 = jax.random.normal(ks[3], (DIMS[2],))
+    wg = jax.random.normal(ks[4], (DIMS[2], D_FF)) / 16
+    wu = jax.random.normal(ks[5], (DIMS[2], D_FF)) / 16
+    wd = jax.random.normal(ks[6], (D_FF, DIMS[2])) / 22
+    x = jax.random.normal(ks[7], (M, DIMS[0]))
+    return x, [(w1, b1), (w2, b2), (wg, wu, wd)]
+
+
+def _three_op_reference(x, params):
+    (w1, b1), (w2, b2), (wg, wu, wd) = params
+    h = jax.nn.gelu(ref.gemm_ref(x, w1, b1))
+    h = ref.gemm_ref(h, w2, b2)
+    return ref.fused_mlp_ref(h, wg, wu, wd)
+
+
+def test_cross_backend_equivalence():
+    """Acceptance: same >=3-op plan object on sim, jnp AND pallas."""
+    program = _three_op_program()
+    x, params = _three_op_params()
+
+    sim = execute(program, backend="sim")  # must NOT raise PoolClobberError
+    assert sim.peak_live <= program.n_segments
+
+    y_jnp, _ = run_program(program, x, params, backend="jnp")
+    y_pal, _ = run_program(program, x, params, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pal),
+                               rtol=1e-5, atol=1e-5)
+    want = _three_op_reference(x, params)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_program_footprint_matches_legacy_planners():
+    """Acceptance: no footprint regression — pool_bytes equals the legacy
+    planners' values for the same shapes."""
+    program = _three_op_program()
+    legacy_chain = plan_chain(M, DIMS)  # the gemm part, legacy API
+    mlp_span = M * segments_for(DIMS[2])  # in-place fused MLP, delta == 0
+    expected_segments = max(legacy_chain.n_segments, mlp_span)
+    assert program.pool_segments == expected_segments
+    assert program.pool_bytes == expected_segments * 128 * 4
+    # the tight metric is block_rows-invariant
+    assert _three_op_program(block_rows=None).pool_segments \
+        == program.pool_segments
+
+
+def test_single_gemm_program_matches_plan_gemm():
+    """plan_program subsumes plan_gemm (Eq. 1 closed form, segment units)."""
+    for m, n, k in [(2, 2, 3), (8, 4, 6), (7, 11, 2), (16, 3, 9)]:
+        prog = plan_program(m, k, [GemmSpec(n)], seg_width=1,
+                            block_rows=None)
+        plan = plan_gemm(m, n, k, segment_bytes=1, validate=True)
+        assert prog.ops[0].delta == plan.delta
+        assert prog.pool_segments == plan.pool_segments
+        assert prog.naive_bytes // 4 == plan.naive_segments
+
+
+def test_plan_chain_adapter_reproduces_legacy_loop():
+    """The ChainPlan adapter must chain pointers exactly as the original
+    per-layer loop did (verbatim reimplementation below)."""
+    for m, dims, sw in [(8, [96, 384, 96, 64], 32),
+                        (16, [64, 256, 64], 32),
+                        (64, [256, 1024, 256], 128),
+                        (3, [40, 40, 40], 16)]:
+        ptrs, in_ptr, max_span = [], 0, 0
+        for d_in, d_out in zip(dims[:-1], dims[1:]):
+            k_segs = segments_for(d_in, sw)
+            n_segs = segments_for(d_out, sw)
+            delta = gemm_offset_closed_form(m, n_segs, k_segs)
+            out_ptr = in_ptr - delta
+            span = (max(in_ptr + m * k_segs, out_ptr + m * n_segs)
+                    - min(in_ptr, out_ptr))
+            max_span = max(max_span, span)
+            ptrs.append((in_ptr, out_ptr))
+            in_ptr = out_ptr
+        plan = plan_chain(m, dims, seg_width=sw)
+        assert plan.layer_ptrs == tuple(ptrs)
+        assert plan.n_segments == max_span
+
+
+def test_sim_clobbers_at_delta_minus_one():
+    """Tightness: the solved deltas are exact optima — shrinking every op's
+    offset by one segment must clobber a live segment in the oracle."""
+    layers = [GemmSpec(64, activation="gelu"), GemmSpec(32)]
+    safe = plan_program(8, 48, layers, seg_width=16, block_rows=None)
+    execute(safe, backend="sim")  # exact plan: no clobber
+    tight = plan_program(8, 48, layers, seg_width=16, block_rows=None,
+                         delta_slack=1)
+    with pytest.raises(PoolClobberError):
+        execute(tight, backend="sim")
+
+
+def test_sim_clobbers_at_delta_minus_one_with_inplace_op():
+    """Same, for a program ending in an in-place (delta == 0) op."""
+    layers = [GemmSpec(64), ElementwiseSpec("relu")]
+    execute(plan_program(8, 48, layers, seg_width=16), backend="sim")
+    tight = plan_program(8, 48, layers, seg_width=16, delta_slack=1)
+    with pytest.raises(PoolClobberError):
+        execute(tight, backend="sim")
+
+
+def test_elementwise_op_runs_on_all_backends():
+    program = plan_program(16, 192, [GemmSpec(128), ElementwiseSpec("relu")],
+                           block_rows=8)
+    x = jax.random.normal(KEY, (16, 192))
+    w = jax.random.normal(jax.random.PRNGKey(3), (192, 128)) / 14
+    params = [(w, None), None]
+    execute(program, backend="sim")
+    y_jnp, _ = run_program(program, x, params, backend="jnp")
+    y_pal, _ = run_program(program, x, params, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pal),
+                               rtol=1e-5, atol=1e-5)
+    want = jnp.maximum(ref.gemm_ref(x, w, jnp.zeros(128)), 0)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_plan_only_programs_match_legacy_eq2_planners():
+    """plan_program subsumes plan_inverted_bottleneck and plan_fc_chain."""
+    for cfg in MCUNET_5FPS_VWW[:3]:
+        prog = plan_module_program(cfg)
+        assert prog.pool_bytes == plan_inverted_bottleneck(cfg).pool_bytes
+        assert not prog.executable
+        with pytest.raises(NotImplementedError):
+            execute(prog, backend="sim")
+    dims = [64, 256, 64]
+    prog = plan_stream_chain_program(32, dims)
+    assert prog.pool_bytes == plan_fc_chain(32, dims).pool_bytes
+
+
+def test_executor_registry_is_pluggable():
+    assert set(executor_names()) >= {"sim", "jnp", "pallas"}
+    with pytest.raises(ValueError, match="unknown backend"):
+        execute(_three_op_program(), backend="nope")
+
+    @register_executor("_counting")
+    def _count(program, pool, params, **kw):
+        return len(program.ops)
+
+    try:
+        assert execute(_three_op_program(), backend="_counting") == 3
+    finally:
+        del _EXECUTORS["_counting"]
+
+
+def test_jnp_backend_works_unaligned_and_any_seg_width():
+    """block_rows=None programs (tight geometry) run on jnp/sim; the pallas
+    backend refuses them with a helpful error."""
+    program = plan_program(6, 48, [GemmSpec(64, "gelu"), GemmSpec(32)],
+                           seg_width=16, block_rows=None)
+    x = jax.random.normal(KEY, (6, 48))
+    ks = jax.random.split(KEY, 2)
+    params = [(jax.random.normal(ks[0], (48, 64)) / 7, None),
+              (jax.random.normal(ks[1], (64, 32)) / 8, None)]
+    execute(program, backend="sim")
+    y, _ = run_program(program, x, params, backend="jnp")
+    want = ref.gemm_ref(jax.nn.gelu(ref.gemm_ref(x, params[0][0],
+                                                 jnp.zeros(64))),
+                        params[1][0], jnp.zeros(32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    with pytest.raises(ValueError, match="aligned"):
+        run_program(program, x, params, backend="pallas")

@@ -3,6 +3,9 @@ below the tensor-level chain, plan properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ring_buffer import (init_chain_params, naive_chain_apply,
