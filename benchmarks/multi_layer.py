@@ -1,8 +1,11 @@
 """Paper Fig. 9 / Fig. 10 — inverted-bottleneck RAM usage for
 MCUNet-5fps-VWW (S1–S8) and MCUNet-320KB-ImageNet (B1–B17).
 
-vMCU (fused Eq.-2 plan, per-layer fallback where fusion loses — the
-paper's own exclusion rule) vs TinyEngine-style vs HMCOS-style.
+Rows now come from the whole-network graph compiler (``repro.graph``):
+build the net IR, schedule + fuse by the paper's exclusion rule, and
+read each module's byte footprint off its fusion group — the legacy
+closed-form module formulas are asserted as a CROSS-CHECK of the graph
+path, not reimplemented.
 """
 from __future__ import annotations
 
@@ -12,19 +15,29 @@ from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
 from repro.core.program import plan_module_program
+from repro.graph import build_mcunet, plan_net
 
 
 def run(net) -> list[dict]:
+    graph = build_mcunet(net, "bench", include_head=False)
+    plan = plan_net(graph, block_rows=None)
+    by_name = {g.name: g.group for g in plan.groups
+               if g.group.kind == "module"}
     rows = []
     for cfg in net:
-        v = vmcu_module_bytes(cfg)
+        group = by_name[cfg.name]
+        # the old closed-form numbers are cross-checks now
+        assert group.mcu_bytes == vmcu_module_bytes(cfg), cfg.name
+        assert group.te_bytes == tinyengine_module_bytes(cfg), cfg.name
+        assert group.hmcos_bytes == hmcos_module_bytes(cfg), cfg.name
         fused = plan_module_program(cfg)  # one-op PoolProgram (Eq. 2 plan)
         rows.append({
             "module": cfg.name,
-            "vmcu_kb": v / 1000,
+            "vmcu_kb": group.mcu_bytes / 1000,
             "vmcu_fused_kb": fused.pool_bytes / 1000,
-            "tinyengine_kb": tinyengine_module_bytes(cfg) / 1000,
-            "hmcos_kb": hmcos_module_bytes(cfg) / 1000,
+            "fused_exec": group.fused_exec,
+            "tinyengine_kb": group.te_bytes / 1000,
+            "hmcos_kb": group.hmcos_bytes / 1000,
         })
     return rows
 

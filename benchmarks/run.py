@@ -4,6 +4,8 @@
   energy_proxy   — Fig. 8  (memory-traffic proxy for energy)
   latency        — Table 3 (ring vs naive kernel cost, CPU-relative)
   multi_layer    — Fig. 9/10 (inverted bottlenecks, S1–S8 / B1–B17)
+  full_network   — whole-DNN bottleneck via the graph compiler (§7):
+                   the paper's 61.5% headline metric
   capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
   pool_footprint — XLA-measured ring-pool footprint (TPU adaptation)
   roofline_table — §Roofline from dry-run artifacts (if present)
@@ -12,15 +14,23 @@ Besides the human-readable stdout, the harness writes ``BENCH_vmcu.json``
 (machine-readable: per-op pool_bytes / naive_bytes / saving_fraction /
 wall-time records via the unified PoolProgram API, plus every section's
 row dump and wall-time) so the perf trajectory is tracked across PRs.
+
+``--smoke`` runs the fast, deterministic planner sections only (CI);
+whenever a committed ``BENCH_vmcu.json`` exists, the new planner
+footprints are compared against it and the run FAILS if any regressed
+(``--no-check`` to skip).
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import sys
 import time
 
 import jax
 
-from . import (capacity, energy_proxy, latency, multi_layer,
+from . import (capacity, energy_proxy, full_network, latency, multi_layer,
                pool_footprint, roofline_table, single_layer)
 from .timing import bench_us
 
@@ -34,16 +44,17 @@ def _multi_layer_rows():
             "imagenet": multi_layer.run(MCUNET_320KB_IMAGENET)}
 
 
-# (name, collector-or-None, printer).  Collectors run once; printers reuse
-# the collected rows where the section supports it.
+# (name, collector-or-None, printer, in_smoke).  Collectors run once;
+# printers reuse the collected rows where the section supports it.
 SECTIONS = [
-    ("Fig7_single_layer_ram", single_layer.run, single_layer.main),
-    ("Fig8_energy_proxy", energy_proxy.run, energy_proxy.main),
-    ("Table3_latency", latency.run, latency.main),
-    ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main),
-    ("Fig11_12_capacity", capacity.run, capacity.main),
-    ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main),
-    ("TPU_roofline_table", None, lambda rows: roofline_table.main()),
+    ("Fig7_single_layer_ram", single_layer.run, single_layer.main, True),
+    ("Fig8_energy_proxy", energy_proxy.run, energy_proxy.main, True),
+    ("Table3_latency", latency.run, latency.main, False),
+    ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
+    ("Net_full_network", full_network.run, full_network.main, True),
+    ("Fig11_12_capacity", capacity.run, capacity.main, True),
+    ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main, False),
+    ("TPU_roofline_table", None, lambda rows: roofline_table.main(), False),
 ]
 
 
@@ -96,10 +107,59 @@ def bench_ops() -> list[dict]:
     return records
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# Footprint-regression check (wall-times are excluded by design).
+# ---------------------------------------------------------------------------
+
+def _footprints(payload: dict) -> dict[str, float]:
+    """Flatten every deterministic planner footprint in a payload."""
+    out: dict[str, float] = {}
+    for rec in payload.get("ops", []):
+        for fld in ("pool_bytes", "physical_pool_bytes"):
+            if fld in rec:
+                out[f"ops/{rec['name']}/{fld}"] = rec[fld]
+    sections = payload.get("sections", {})
+    for r in sections.get("Net_full_network", []):
+        out[f"net/{r['net']}/vmcu_bottleneck_kb"] = \
+            r["vmcu_bottleneck_kb"]
+        out[f"net/{r['net']}/exec_pool_kb"] = r["exec_pool_kb"]
+    ml = sections.get("Fig9_10_multi_layer_ram", {})
+    for net_key, rows in (ml.items() if isinstance(ml, dict) else []):
+        for r in rows:
+            out[f"module/{net_key}/{r['module']}/vmcu_kb"] = r["vmcu_kb"]
+    return out
+
+
+def check_regressions(old_payload: dict, new_payload: dict) -> list[str]:
+    """Return messages for every footprint that got WORSE (larger)."""
+    old = _footprints(old_payload)
+    new = _footprints(new_payload)
+    bad = []
+    for key, new_val in new.items():
+        old_val = old.get(key)
+        if old_val is not None and new_val > old_val * (1 + 1e-9):
+            bad.append(f"{key}: {old_val} -> {new_val}")
+    return bad
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast deterministic planner sections only")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the footprint-regression comparison")
+    args = ap.parse_args(argv)
+
+    old_payload = None
+    if not args.no_check and os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            old_payload = json.load(f)
+
     section_times = {}
     section_rows = {}
-    for name, collect, show in SECTIONS:
+    for name, collect, show, in_smoke in SECTIONS:
+        if args.smoke and not in_smoke:
+            continue
         print(f"\n=== {name} ===")
         t0 = time.time()
         rows = collect() if collect is not None else None
@@ -111,12 +171,24 @@ def main() -> None:
 
     ops = bench_ops()
     payload = {
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
+        "smoke": args.smoke,
         "ops": ops,
         "section_time_s": section_times,
         "sections": section_rows,
     }
+
+    if old_payload is not None:
+        bad = check_regressions(old_payload, payload)
+        if bad:
+            print("\n# PLANNER FOOTPRINT REGRESSIONS vs recorded "
+                  f"{BENCH_JSON}:")
+            for msg in bad:
+                print(f"#   {msg}")
+            sys.exit(1)
+        print(f"\n# no footprint regressions vs recorded {BENCH_JSON}")
+
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\n# wrote {BENCH_JSON} ({len(ops)} op records)")

@@ -3,7 +3,14 @@
 Can MCUNet-320KB-ImageNet run on a 128 KB STM32-F411RE?  TinyEngine: no
 (247.8 KB bottleneck).  HMCOS: no.  vMCU: yes.
 
-Run:  PYTHONPATH=src python examples/mcu_plan.py [--ram-kb 128]
+Verdicts are computed from the whole-network graph compiler
+(``repro.graph``): the net is scheduled, fused by the paper's exclusion
+rule and planned into ONE VirtualPool ring; the legacy closed-form
+module formulas are asserted as a cross-check.  Pass ``--execute`` to
+also run the planned NetProgram through the SegmentPool clobber oracle
+and the jnp ring backend against the plain-XLA reference.
+
+Run:  PYTHONPATH=src python examples/mcu_plan.py [--ram-kb 128] [--execute]
 """
 import argparse
 
@@ -11,30 +18,63 @@ from repro.core.graph_planner import (MCUNET_320KB_IMAGENET,
                                       MCUNET_5FPS_VWW, hmcos_module_bytes,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
+from repro.graph import build_mcunet, plan_net
 
 
-def deploy(net, name: str, ram: int) -> None:
-    rows = [(c.name, vmcu_module_bytes(c), tinyengine_module_bytes(c),
-             hmcos_module_bytes(c)) for c in net]
-    bv = max(r[1] for r in rows)
-    bt = max(r[2] for r in rows)
-    bh = max(r[3] for r in rows)
-    print(f"\n{name} on a {ram//1000} KB device:")
-    for label, b in (("vMCU", bv), ("TinyEngine", bt), ("HMCOS", bh)):
+def deploy(net, name: str, num_classes: int, ram: int,
+           execute: bool) -> None:
+    graph = build_mcunet(net, name, num_classes=num_classes)
+    plan = plan_net(graph)
+
+    # The old closed-form numbers, now cross-checks of the graph path.
+    assert plan.mcu_bottleneck_bytes == max(vmcu_module_bytes(c)
+                                            for c in net)
+    assert plan.tinyengine_bottleneck_bytes == max(
+        tinyengine_module_bytes(c) for c in net)
+    assert plan.hmcos_bottleneck_bytes == max(hmcos_module_bytes(c)
+                                              for c in net)
+
+    print(f"\n{name} on a {ram//1000} KB device "
+          f"({len(plan.program.ops)} ops in one ring):")
+    for label, b in (("vMCU", plan.mcu_bottleneck_bytes),
+                     ("TinyEngine", plan.tinyengine_bottleneck_bytes),
+                     ("HMCOS", plan.hmcos_bottleneck_bytes)):
         verdict = "DEPLOYABLE" if b <= ram else "out of memory"
         print(f"  {label:11s} bottleneck {b/1000:7.1f} KB -> {verdict}")
-    mod = max(rows, key=lambda r: r[1])
-    print(f"  (vMCU bottleneck module: {mod[0]}; reduction vs TinyEngine "
-          f"{100 * (1 - bv / bt):.1f}%)")
+    bot = plan.bottleneck_group()
+    print(f"  (vMCU bottleneck module: {bot.name}; reduction vs TinyEngine "
+          f"{100 * plan.reduction_vs_tinyengine:.1f}%)")
+
+    if execute:
+        import jax
+        import numpy as np
+
+        from repro.graph import (certify_net, init_net_params,
+                                 reference_forward, run_net)
+        sim = certify_net(plan)
+        print(f"  sim oracle: zero clobbers over {sim.reads} reads / "
+              f"{sim.writes} writes (peak {sim.peak_live} of "
+              f"{plan.program.n_segments} segments)")
+        params = init_net_params(plan)
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (plan.program.in_rows, plan.program.in_dim))
+        y = run_net(plan, x, params, backend="jnp")
+        ref = reference_forward(plan, x, params)
+        err = float(np.abs(np.asarray(y) - np.asarray(ref)).max())
+        print(f"  jnp ring execution matches plain-XLA reference "
+              f"(max |err| = {err:.2e})")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ram-kb", type=int, default=128)
+    ap.add_argument("--execute", action="store_true",
+                    help="also run the NetPrograms (sim oracle + jnp)")
     args = ap.parse_args()
     ram = args.ram_kb * 1000
-    deploy(MCUNET_5FPS_VWW, "MCUNet-5fps-VWW", ram)
-    deploy(MCUNET_320KB_IMAGENET, "MCUNet-320KB-ImageNet", ram)
+    deploy(MCUNET_5FPS_VWW, "MCUNet-5fps-VWW", 2, ram, args.execute)
+    deploy(MCUNET_320KB_IMAGENET, "MCUNet-320KB-ImageNet", 1000, ram,
+           args.execute)
 
 
 if __name__ == "__main__":

@@ -28,11 +28,12 @@ from .baselines import (FIG7_CASES, LayerShape, hmcos_bytes,
                         pointwise_conv_layer, tinyengine_bytes)
 from .vpool import (LANE, SEG_WIDTH, PoolSpec, VirtualPool, ceil_div,
                     fetch_rows, segments_for, stage_rows)
-from .program import (ACTIVATIONS, ElementwiseSpec, FusedChainSpec,
-                      FusedMLPSpec, GemmSpec, InvertedBottleneckSpec,
-                      PoolOp, PoolProgram, plan_module_program,
-                      plan_program, plan_stream_chain_program,
-                      resolve_activation)
+from .program import (ACTIVATIONS, AvgPoolSpec, ConvDWSpec, ConvPWSpec,
+                      ElementwiseSpec, FusedChainSpec, FusedMLPSpec,
+                      GemmSpec, IBModuleSpec, InvertedBottleneckSpec,
+                      PoolOp, PoolProgram, ResidualAddSpec,
+                      concat_programs, plan_module_program, plan_program,
+                      plan_stream_chain_program, resolve_activation)
 from .executors import (execute, executor_names, register_executor,
                         run_program, run_program_jnp, run_program_pallas,
                         run_program_sim)
@@ -44,8 +45,10 @@ __all__ = [
     "PoolSpec", "VirtualPool", "SEG_WIDTH", "LANE", "ceil_div",
     "segments_for", "stage_rows", "fetch_rows",
     "PoolOp", "PoolProgram", "plan_program", "plan_module_program",
-    "plan_stream_chain_program", "GemmSpec", "FusedMLPSpec",
-    "ElementwiseSpec", "FusedChainSpec", "InvertedBottleneckSpec",
+    "plan_stream_chain_program", "concat_programs", "GemmSpec",
+    "FusedMLPSpec", "ElementwiseSpec", "FusedChainSpec",
+    "InvertedBottleneckSpec", "ConvPWSpec", "ConvDWSpec", "IBModuleSpec",
+    "ResidualAddSpec", "AvgPoolSpec",
     "ACTIVATIONS", "resolve_activation",
     "execute", "executor_names", "register_executor", "run_program",
     "run_program_sim", "run_program_jnp", "run_program_pallas",

@@ -77,7 +77,8 @@ def run_program(program: PoolProgram, x: jax.Array, params, *,
     pool = VirtualPool.alloc(program.spec(x.dtype))
     pool = pool.stage_rows(x, program.input_ptr)
     pool = execute(program, pool, params, backend=backend, **kwargs)
-    y = pool.fetch_rows(program.output_ptr, program.m_rows, program.out_dim)
+    y = pool.fetch_rows(program.output_ptr, program.out_rows,
+                        program.out_dim)
     return y, pool
 
 
@@ -90,7 +91,7 @@ def _normalize_params(program: PoolProgram, params):
                          f"{len(program.ops)} ops")
     out = []
     for op, p in zip(program.ops, params):
-        if op.kind == "gemm":
+        if op.kind in ("gemm", "conv_pw", "conv_dw"):
             w, b = p
             if b is None:
                 b = jnp.zeros((op.d_out,), w.dtype)
@@ -100,6 +101,9 @@ def _normalize_params(program: PoolProgram, params):
             if wg is None:  # ungated MLPs may omit the gate projection
                 wg = wu
             out.append((wg, wu, wd))
+        elif op.kind == "ib_fused":
+            w1, wd, w2 = p
+            out.append((w1, wd, w2))
         else:
             if p is not None:
                 raise ValueError(f"{op.kind} op takes no params")
@@ -213,31 +217,137 @@ def elementwise_ring_scan(pool: jax.Array, *, ptr: int, m_rows: int,
     return pool
 
 
+# ---------------------------------------------------------------------------
+# jnp whole-network ops: gather rows (modular) -> fp32 math -> scatter.
+# The interleaved ring schedule is certified by the sim backend; here the
+# full gather happens before the scatter, which is numerically identical.
+# ---------------------------------------------------------------------------
+
+def _pw_maps(op) -> tuple[list[int], list[int]]:
+    """Static source row/col index maps of a conv_pw op (the ONE
+    resample map lives in ``core.rowsched``)."""
+    from .rowsched import resample_src
+
+    if op.resample:
+        ridx = [resample_src(p, op.h_in, op.h_out)
+                for p in range(op.h_out)]
+        cidx = [resample_src(q, op.w_in, op.w_out)
+                for q in range(op.w_out)]
+    else:
+        ridx = [p * op.stride for p in range(op.h_out)]
+        cidx = [q * op.stride for q in range(op.w_out)]
+    return ridx, cidx
+
+
+def _fetch_image(pool, op, n):
+    rows = op.rows_in
+    x = fetch_rows(pool, op.in_ptr, rows, op.d_in, n)
+    return x.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.float32)
+
+
+def _store_image(pool, op, img, n):
+    y = img.reshape(op.rows_out, op.d_out).astype(pool.dtype)
+    return stage_rows(pool, y, op.out_ptr, n)
+
+
+def conv_pw_ring(pool, w, b, *, op, n_segments):
+    img = _fetch_image(pool, op, n_segments)
+    ridx, cidx = _pw_maps(op)
+    sub = img[jnp.array(ridx)][:, jnp.array(cidx)]
+    y = jnp.einsum("hwc,cd->hwd", sub, w.astype(jnp.float32))
+    y = resolve_activation(op.activation)(y + b.astype(jnp.float32))
+    return _store_image(pool, op, y, n_segments)
+
+
+def conv_dw_ring(pool, w, b, *, op, n_segments):
+    img = _fetch_image(pool, op, n_segments)
+    pad = (op.rs - 1) // 2
+    s = op.stride
+    padded = jnp.pad(img, ((pad, pad + s), (pad, pad + s), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_in), jnp.float32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + tap * w[r, c].astype(jnp.float32)[None, None]
+    y = resolve_activation(op.activation)(acc + b.astype(jnp.float32))
+    return _store_image(pool, op, y, n_segments)
+
+
+def ib_fused_ring(pool, w1, wd, w2, *, op, n_segments):
+    """Fused inverted bottleneck, same math as
+    ``kernels.inverted_bottleneck.inverted_bottleneck_ref`` (stride 1,
+    'same' padding, ReLU after PW1 and DW)."""
+    a = _fetch_image(pool, op, n_segments)
+    h, w = op.h_in, op.w_in
+    rs, pad = op.rs, (op.rs - 1) // 2
+    bexp = jnp.maximum(jnp.einsum("hwc,cm->hwm", a,
+                                  w1.astype(jnp.float32)), 0.0)
+    bp = jnp.pad(bexp, ((pad, pad), (pad, pad), (0, 0)))
+    cacc = sum(bp[r:r + h, s:s + w] * wd[r, s].astype(jnp.float32)[None,
+                                                                   None]
+               for r in range(rs) for s in range(rs))
+    cacc = jnp.maximum(cacc, 0.0)
+    e = jnp.einsum("hwm,mo->hwo", cacc, w2.astype(jnp.float32))
+    if op.residual:
+        e = e + a
+    return _store_image(pool, op, e, n_segments)
+
+
+def add_ring(pool, *, op, n_segments):
+    x = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n_segments)
+    res = fetch_rows(pool, op.aux_ptr, op.rows_in, op.d_in, n_segments)
+    y = (x.astype(jnp.float32) + res.astype(jnp.float32)).astype(pool.dtype)
+    return stage_rows(pool, y, op.out_ptr, n_segments)
+
+
+def pool_avg_ring(pool, *, op, n_segments):
+    img = _fetch_image(pool, op, n_segments)
+    y = jnp.mean(img, axis=(0, 1), keepdims=False)[None, :]
+    return stage_rows(pool, y.astype(pool.dtype), op.out_ptr, n_segments)
+
+
 @functools.partial(jax.jit, static_argnames=("program",),
                    donate_argnums=(0,))
 def _run_jnp(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
     br = program.block_rows or 1
     n = program.n_segments
     for op, p in zip(program.ops, params):
+        rows = op.rows_in or program.m_rows
         if op.kind == "gemm":
             w, b = p
             pool = gemm_ring_scan(pool, w, b, in_ptr=op.in_ptr,
-                                  out_ptr=op.out_ptr, m_rows=program.m_rows,
+                                  out_ptr=op.out_ptr, m_rows=rows,
                                   n_segments=n, block_rows=br,
                                   activation=op.activation)
         elif op.kind == "fused_mlp":
             wg, wu, wd = p
             pool = mlp_ring_scan(pool, wg, wu, wd, ptr=op.in_ptr,
-                                 m_rows=program.m_rows, n_segments=n,
+                                 m_rows=rows, n_segments=n,
                                  block_rows=br, d_model=op.d_in,
                                  ff_tile=op.ff_tile, gated=op.gated,
                                  residual=op.residual,
                                  activation=op.activation)
-        else:
+        elif op.kind == "elementwise":
             pool = elementwise_ring_scan(pool, ptr=op.in_ptr,
-                                         m_rows=program.m_rows,
+                                         m_rows=rows,
                                          n_segments=n, block_rows=br,
                                          d=op.d_in, fn=op.activation)
+        elif op.kind == "conv_pw":
+            w, b = p
+            pool = conv_pw_ring(pool, w, b, op=op, n_segments=n)
+        elif op.kind == "conv_dw":
+            w, b = p
+            pool = conv_dw_ring(pool, w, b, op=op, n_segments=n)
+        elif op.kind == "ib_fused":
+            w1, wd, w2 = p
+            pool = ib_fused_ring(pool, w1, wd, w2, op=op, n_segments=n)
+        elif op.kind == "add":
+            pool = add_ring(pool, op=op, n_segments=n)
+        elif op.kind == "pool_avg":
+            pool = pool_avg_ring(pool, op=op, n_segments=n)
+        else:
+            raise NotImplementedError(op.kind)
     return pool
 
 
@@ -256,8 +366,11 @@ def run_program_jnp(program: PoolProgram, pool, params, **_kw):
 def run_program_pallas(program: PoolProgram, pool, params, *,
                        interpret: bool | None = None, **_kw):
     # Lazy import: core must stay importable without the kernels package.
+    from ..kernels.conv2d import (ring_add, ring_avgpool, ring_conv_dw,
+                                  ring_conv_pw)
     from ..kernels.elementwise import ring_elementwise
     from ..kernels.fused_mlp import ring_fused_mlp
+    from ..kernels.inverted_bottleneck import ring_inverted_bottleneck
     from ..kernels.segment_matmul import SEG_WIDTH as KSEG, ring_gemm
 
     if program.block_rows is None:
@@ -271,30 +384,95 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
     arr = _as_array(pool)
     br = program.block_rows
     for op, p in zip(program.ops, _normalize_params(program, params)):
+        rows = op.rows_in or program.m_rows
         if op.kind == "gemm":
             w, b = p
-            arr = ring_gemm(arr, w, b, m_rows=program.m_rows, d_in=op.d_in,
+            arr = ring_gemm(arr, w, b, m_rows=rows, d_in=op.d_in,
                             d_out=op.d_out, in_ptr=op.in_ptr,
                             out_ptr=op.out_ptr, block_rows=br,
                             activation=op.activation, interpret=interpret)
         elif op.kind == "fused_mlp":
             wg, wu, wd = p
-            arr = ring_fused_mlp(arr, wg, wu, wd, m_rows=program.m_rows,
+            arr = ring_fused_mlp(arr, wg, wu, wd, m_rows=rows,
                                  d_model=op.d_in, ptr=op.in_ptr,
                                  block_rows=br, ff_tile=op.ff_tile,
                                  gated=op.gated, residual=op.residual,
                                  activation=op.activation,
                                  interpret=interpret)
-        else:
-            arr = ring_elementwise(arr, m_rows=program.m_rows, d=op.d_in,
+        elif op.kind == "elementwise":
+            arr = ring_elementwise(arr, m_rows=rows, d=op.d_in,
                                    ptr=op.in_ptr, fn=op.activation,
                                    block_rows=br, interpret=interpret)
+        elif op.kind == "conv_pw":
+            w, b = p
+            arr = ring_conv_pw(arr, w, b, h_in=op.h_in, w_in=op.w_in,
+                               h_out=op.h_out, w_out=op.w_out,
+                               c_in=op.d_in, c_out=op.d_out,
+                               stride=op.stride, resample=op.resample,
+                               in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                               activation=op.activation,
+                               interpret=interpret)
+        elif op.kind == "conv_dw":
+            w, b = p
+            arr = ring_conv_dw(arr, w, b, h_in=op.h_in, w_in=op.w_in,
+                               h_out=op.h_out, w_out=op.w_out, c=op.d_in,
+                               rs=op.rs, stride=op.stride,
+                               in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                               activation=op.activation,
+                               interpret=interpret)
+        elif op.kind == "ib_fused":
+            w1, wd, w2 = p
+            arr = ring_inverted_bottleneck(
+                arr, w1, wd, w2, H=op.h_in, W=op.w_in, C_in=op.d_in,
+                C_mid=op.d_mid, C_out=op.d_out, RS=op.rs,
+                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                residual=op.residual, interpret=interpret)
+        elif op.kind == "add":
+            arr = ring_add(arr, rows=rows, d=op.d_in, in_ptr=op.in_ptr,
+                           aux_ptr=op.aux_ptr, out_ptr=op.out_ptr,
+                           interpret=interpret)
+        elif op.kind == "pool_avg":
+            arr = ring_avgpool(arr, h=op.h_in, w=op.w_in, c=op.d_in,
+                               in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                               interpret=interpret)
+        else:
+            raise NotImplementedError(op.kind)
     return _like_input(pool, arr)
 
 
 # ---------------------------------------------------------------------------
 # sim backend — the clobber oracle.
 # ---------------------------------------------------------------------------
+
+def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
+    """Replay one conv-family op through the oracle from the SAME row
+    schedule the planner solved its delta with (``core.rowsched``)."""
+    from .rowsched import schedule_for_op
+
+    op = program.ops[i]
+    sched = schedule_for_op(op, program.seg_width)
+    frees = sched.frees()
+    ic, oc = sched.in_chunk, sched.out_chunk
+    for t in range(sched.steps):
+        for r in sched.reads[t]:
+            for s in range(ic):
+                sim.read(op.in_ptr + r * ic + s, owner=(i, r * ic + s))
+        if sched.aux_reads is not None:
+            ac = sched.aux_chunk
+            for r in sched.aux_reads[t]:
+                for s in range(ac):
+                    seg = r * ac + s
+                    sim.read(op.aux_ptr + seg, owner=(op.aux_op, seg))
+                    sim.free(op.aux_ptr + seg, owner=(op.aux_op, seg))
+        if not op.hold_input:
+            for r in frees[t]:
+                for s in range(ic):
+                    sim.free(op.in_ptr + r * ic + s, owner=(i, r * ic + s))
+        for r in sched.writes[t]:
+            for s in range(oc):
+                seg = r * oc + s
+                sim.write(op.out_ptr + seg, owner=(i + 1, seg))
+
 
 @register_executor("sim")
 def run_program_sim(program: PoolProgram, pool=None, params=None,
@@ -304,16 +482,18 @@ def run_program_sim(program: PoolProgram, pool=None, params=None,
     GEMM ops run the paper's fine-grained Fig.-4 schedule (input segment
     freed after its LAST read) — strictly harder than the block-granular
     TPU schedule, so a clobber-free sim run certifies the kernels.
+    Conv-family ops replay the row schedule their delta was solved with
+    (``core.rowsched``); residual sources are freed by the consuming add.
     Returns the SegmentPool for access statistics (peak_live etc.).
     """
     sw = program.seg_width
     sim = SegmentPool(program.n_segments,
                       segment_bytes=sw * program.elem_bytes)
-    m = program.m_rows
     first = program.ops[0]
     for j in range(first.in_segments):
         sim.write(first.in_ptr + j, owner=(0, j))
     for i, op in enumerate(program.ops):
+        m = op.rows_in or program.m_rows
         if op.kind == "gemm":
             k_segs = segments_for(op.d_in, sw)
             n_segs = segments_for(op.d_out, sw)
@@ -322,20 +502,24 @@ def run_program_sim(program: PoolProgram, pool=None, params=None,
                     for k in range(k_segs):
                         seg = r * k_segs + k
                         sim.read(op.in_ptr + seg, owner=(i, seg))
-                        if n == n_segs - 1:  # last read — segment is dead
+                        if n == n_segs - 1 and not op.hold_input:
                             sim.free(op.in_ptr + seg, owner=(i, seg))
                     outseg = r * n_segs + n
                     sim.write(op.out_ptr + outseg, owner=(i + 1, outseg))
-        else:  # fused_mlp / elementwise: per-row in-place at delta == 0
+        elif op.kind in ("fused_mlp", "elementwise"):
+            # per-row in-place at delta == 0
             d_segs = segments_for(op.d_in, sw)
             for r in range(m):
                 for s in range(d_segs):
                     seg = r * d_segs + s
                     sim.read(op.in_ptr + seg, owner=(i, seg))
-                    sim.free(op.in_ptr + seg, owner=(i, seg))
+                    if not op.hold_input:
+                        sim.free(op.in_ptr + seg, owner=(i, seg))
                 for s in range(d_segs):
                     seg = r * d_segs + s
                     sim.write(op.out_ptr + seg, owner=(i + 1, seg))
+        else:
+            _sim_rowsched_op(sim, program, i)
     last = program.ops[-1]
     for j in range(last.out_segments):  # outputs must survive the ring
         sim.read(last.out_ptr + j, owner=(len(program.ops), j))

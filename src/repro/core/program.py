@@ -36,7 +36,8 @@ import jax
 from .planner import gemm_offset_closed_form
 from .vpool import PoolSpec, SEG_WIDTH, ceil_div, segments_for
 
-EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise")
+EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise", "conv_pw",
+                    "conv_dw", "ib_fused", "add", "pool_avg")
 PLAN_ONLY_KINDS = ("fused_chain", "inverted_bottleneck")
 
 # Element-wise maps usable as gemm epilogues / elementwise ops.  Every fn
@@ -111,8 +112,80 @@ class InvertedBottleneckSpec:
     workspace: str = "paper_11seg"
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvPWSpec:
+    """Pointwise (1x1) conv over pixel rows: ``[H,W,c_in] -> [P,Q,c_out]``.
+
+    ``stride`` gives the standard strided conv (source pixel ``(p*s,
+    q*s)``); ``resample_to=(P, Q)`` instead maps output pixel ``(p, q)``
+    to source ``((p*H)//P, (q*W)//Q)`` — the nearest-grid adapter used
+    for transitions between module tables whose shapes do not chain."""
+
+    h_in: int
+    w_in: int
+    c_in: int
+    c_out: int
+    stride: int = 1
+    resample_to: tuple[int, int] | None = None
+    activation: str | None = None
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        if self.resample_to is not None:
+            return self.resample_to
+        return (ceil_div(self.h_in, self.stride),
+                ceil_div(self.w_in, self.stride))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDWSpec:
+    """Depthwise RSxRS conv ('same' padding) over pixel rows."""
+
+    h_in: int
+    w_in: int
+    c: int
+    rs: int = 3
+    stride: int = 1
+    activation: str | None = None
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        return (ceil_div(self.h_in, self.stride),
+                ceil_div(self.w_in, self.stride))
+
+
+@dataclasses.dataclass(frozen=True)
+class IBModuleSpec:
+    """EXECUTABLE fused inverted-bottleneck module (Fig. 6, row-granular).
+
+    Runs as one ``ib_fused`` op via ``kernels.inverted_bottleneck``;
+    stride-1 only, one pool segment per pixel (``c_in, c_out <=
+    seg_width``).  The byte-granular Eq.-(2) footprint of the same module
+    is :class:`InvertedBottleneckSpec` (plan-only)."""
+
+    cfg: object  # repro.core.graph_planner.ModuleConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualAddSpec:
+    """Add the *input tensor of the op ``src`` steps back* (still resident
+    in the pool — the planner holds it live) to the current tensor."""
+
+    src: int = 3  # pw1 -> dw -> pw2 -> add
+
+
+@dataclasses.dataclass(frozen=True)
+class AvgPoolSpec:
+    """Global average pool ``[H,W,c] -> [1,1,c]`` (one output row)."""
+
+    h_in: int
+    w_in: int
+    c: int
+
+
 LayerSpec = Union[GemmSpec, FusedMLPSpec, ElementwiseSpec, FusedChainSpec,
-                  InvertedBottleneckSpec]
+                  InvertedBottleneckSpec, ConvPWSpec, ConvDWSpec,
+                  IBModuleSpec, ResidualAddSpec, AvgPoolSpec]
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +218,21 @@ class PoolOp:
     d_ff: int = 0
     ff_tile: int = 0
     workspace_bytes: int = 0
+    # -- whole-network op geometry (conv / pool / residual kinds) ---------
+    rows_in: int = 0          # rows consumed (0 -> program.m_rows)
+    rows_out: int = 0         # rows produced (0 -> program.m_rows)
+    h_in: int = 0             # image geometry for conv kinds
+    w_in: int = 0
+    h_out: int = 0
+    w_out: int = 0
+    stride: int = 1
+    rs: int = 0               # depthwise kernel extent
+    resample: bool = False    # nearest-grid adapter row map
+    d_mid: int = 0            # fused module expansion width
+    aux_ptr: int = 0          # residual-source pool offset ("add" ops)
+    aux_op: int = -1          # op index whose INPUT is the residual source
+    hold_input: bool = False  # input is a residual source: op must not
+                              # free it; the consuming "add" frees it
 
     @property
     def span_segments(self) -> int:
@@ -152,6 +240,9 @@ class PoolOp:
         lo = min(self.in_ptr, self.out_ptr)
         hi = max(self.in_ptr + self.in_segments,
                  self.out_ptr + self.out_segments)
+        if self.aux_op >= 0:
+            lo = min(lo, self.aux_ptr)
+            hi = max(hi, self.aux_ptr + self.in_segments)
         return hi - lo
 
 
@@ -202,8 +293,10 @@ class PoolProgram:
 
     @property
     def naive_bytes(self) -> int:
-        """Tensor-level footprint: worst coexisting in+out pair."""
-        worst = max(op.in_segments + op.out_segments for op in self.ops)
+        """Tensor-level footprint: worst coexisting in+out(+residual)."""
+        worst = max(op.in_segments + op.out_segments
+                    + (op.in_segments if op.aux_op >= 0 else 0)
+                    for op in self.ops)
         op = self.ops[0]
         if op.kind in PLAN_ONLY_KINDS:
             return worst * op.segment_bytes
@@ -223,6 +316,16 @@ class PoolProgram:
         return self.ops[-1].d_out
 
     @property
+    def in_rows(self) -> int:
+        """Rows of the program input tensor (net programs vary per op)."""
+        return self.ops[0].rows_in or self.m_rows
+
+    @property
+    def out_rows(self) -> int:
+        """Rows of the program output tensor."""
+        return self.ops[-1].rows_out or self.m_rows
+
+    @property
     def input_ptr(self) -> int:
         return self.ops[0].in_ptr
 
@@ -236,6 +339,26 @@ class PoolProgram:
                         jnp.float32 if dtype is None else dtype)
 
     # -- validation --------------------------------------------------------
+    def op_blocks(self, op: PoolOp) -> tuple[int, int]:
+        """(in, out) contiguous DMA block sizes of ``op``, in segments.
+
+        Conv-family kinds copy one image row per step; gemm/mlp/
+        elementwise copy ``block_rows`` matrix rows; ``pool_avg`` reads
+        image rows and writes one channel row; ``add`` streams single
+        pixel rows from both sources.
+        """
+        sw = self.seg_width
+        br = self.block_rows or 1
+        ci = segments_for(op.d_in, sw)
+        co = segments_for(op.d_out, sw)
+        if op.kind in ("conv_pw", "conv_dw", "ib_fused"):
+            return op.w_in * ci, op.w_out * co
+        if op.kind == "pool_avg":
+            return op.w_in * ci, co
+        if op.kind == "add":
+            return ci, co
+        return br * ci, br * co
+
     def check_alignment(self) -> None:
         """Assert no contiguous DMA block of any op can wrap mid-block.
 
@@ -247,23 +370,21 @@ class PoolProgram:
         if not self.aligned:
             raise ValueError("program was planned with block_rows=None "
                              "(tight geometry) — not DMA-block aligned")
-        br = self.block_rows
         for op in self.ops:
             if op.kind not in EXECUTABLE_KINDS:
                 continue
-            bk = br * segments_for(op.d_in, self.seg_width)
-            bn = br * segments_for(op.d_out, self.seg_width)
+            bk, bn = self.op_blocks(op)
             if (op.in_ptr % bk or op.out_ptr % bn
-                    or self.n_segments % math.lcm(bk, bn)):
+                    or self.n_segments % math.lcm(bk, bn)
+                    or (op.aux_op >= 0 and op.aux_ptr % bk)):
                 raise AssertionError(f"misaligned op {op.kind} "
                                      f"({op.in_ptr},{op.out_ptr}) in pool "
                                      f"of {self.n_segments}")
-            n_blocks = self.m_rows // br
-            for i in range(n_blocks):
-                off_in = (op.in_ptr + i * bk) % self.n_segments
-                off_out = (op.out_ptr + i * bn) % self.n_segments
-                assert off_in + bk <= self.n_segments, "mid-block wrap (in)"
-                assert off_out + bn <= self.n_segments, "mid-block wrap (out)"
+            for ptr, blk, tot in ((op.in_ptr, bk, op.in_segments),
+                                  (op.out_ptr, bn, op.out_segments)):
+                for i in range(tot // blk):
+                    off = (ptr + i * blk) % self.n_segments
+                    assert off + blk <= self.n_segments, "mid-block wrap"
 
 
 # ---------------------------------------------------------------------------
@@ -274,9 +395,19 @@ def _floor_mult(x: int, b: int) -> int:
     return (x // b) * b
 
 
-def _span(in_ptr: int, out_ptr: int, in_tot: int, out_tot: int) -> int:
-    return (max(in_ptr + in_tot, out_ptr + out_tot)
-            - min(in_ptr, out_ptr))
+def _conv_state(spec, rows: int, dim: int, img, pos: int):
+    """Validate that ``spec``'s input geometry matches the running tensor."""
+    if img is None:
+        if rows != spec.h_in * spec.w_in:
+            raise ValueError(f"layer {pos}: conv expects {spec.h_in}x"
+                             f"{spec.w_in} pixel rows, program has {rows}")
+    elif img != (spec.h_in, spec.w_in):
+        raise ValueError(f"layer {pos}: conv image {spec.h_in}x{spec.w_in} "
+                         f"!= running image {img[0]}x{img[1]}")
+    c_in = spec.c_in if isinstance(spec, ConvPWSpec) else spec.c
+    if dim != c_in:
+        raise ValueError(f"layer {pos}: conv c_in={c_in} != running "
+                         f"dim={dim}")
 
 
 def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
@@ -288,11 +419,20 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     backends); an integer plans DMA-block-aligned geometry executable on
     the ``pallas`` backend too (deltas only ever rounded *up* — safety is
     preserved; ``pool_segments`` still reports the tight footprint).
+    Conv-family specs (whole-network programs) use one image row as their
+    DMA block regardless of ``block_rows``.
+
+    Residual modules (:class:`ResidualAddSpec`) make the planner *hold*
+    the source tensor: every op between the source and the add places its
+    output clear of the held interval, and the add op records the source
+    location as ``aux_ptr``.
 
     ``delta_slack`` exists for tightness testing only: it shrinks every
     solved delta, so ``delta_slack=1`` must make the ``sim`` backend raise
     :class:`repro.core.pool.PoolClobberError` (the plans are exact optima).
     """
+    from . import rowsched
+
     layers = list(layers)
     if not layers:
         raise ValueError("need at least one layer spec")
@@ -305,30 +445,79 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
 
     aligned = block_rows is not None
     br = block_rows if aligned else 1
-    if br <= 0 or m_rows % br:
-        raise ValueError(f"block_rows={block_rows} must divide "
-                         f"m_rows={m_rows}")
+    if br <= 0:
+        raise ValueError(f"block_rows={block_rows} must be positive")
+
+    # Pre-scan residual adds: ops in (src..add] must avoid the held
+    # tensor; the held interval stays in the live span through the add.
+    aux_src: dict[int, int] = {}
+    avoid_at: list[set[int]] = [set() for _ in layers]
+    hold_at: list[set[int]] = [set() for _ in layers]
+    for i, s in enumerate(layers):
+        if isinstance(s, ResidualAddSpec):
+            j = i - s.src
+            if j < 0:
+                raise ValueError(f"layer {i}: residual source {s.src} ops "
+                                 "back reaches before the program input")
+            aux_src[i] = j
+            for k in range(j, i):
+                avoid_at[k].add(j)
+            for k in range(j, i + 1):
+                hold_at[k].add(j)
 
     ops: list[PoolOp] = []
-    cur = d_in
+    rows, cur, img = m_rows, d_in, None
     pt = 0   # tight running pointer
     pa = 0   # aligned running pointer
+    spans_t: list[int] = []
     spans_a: list[int] = []
     aligns: list[int] = [1]
+    # per-op input tensor record (tight ptr, aligned ptr, total segments)
+    tens: list[tuple[int, int, int]] = []
+
+    def _avoid(out, out_tot, pos, coord, round_to=None, cur=None):
+        """Push ``out`` below every held interval it overlaps.
+
+        ``cur`` is the in-flight record of the op being planned (its own
+        input may be the held tensor — it is not in ``tens`` yet)."""
+        for _ in range(len(avoid_at[pos]) + 1):
+            moved = False
+            for j in sorted(avoid_at[pos]):
+                rec = cur if j == len(tens) else tens[j]
+                lo = rec[coord]
+                hi = lo + rec[2]
+                if out < hi and out + out_tot > lo:
+                    out = lo - out_tot + delta_slack
+                    if round_to:
+                        out = _floor_mult(out, round_to)
+                    moved = True
+            if not moved:
+                break
+        return out
+
     for pos, spec in enumerate(layers):
         if isinstance(spec, (GemmSpec, FusedMLPSpec)):
             resolve_activation(spec.activation)  # fail at plan time
         elif isinstance(spec, ElementwiseSpec):
             resolve_activation(spec.fn)
+        elif isinstance(spec, (ConvPWSpec, ConvDWSpec)):
+            resolve_activation(spec.activation)
+        rows_in = rows
+        it, ia = pt, pa
+        extra: dict = {}
         if isinstance(spec, GemmSpec):
+            if rows % br:
+                raise ValueError(f"block_rows={br} must divide rows={rows}")
             k_segs = segments_for(cur, seg_width)
             n_segs = segments_for(spec.d_out, seg_width)
             bk, bn = br * k_segs, br * n_segs
-            delta = (gemm_offset_closed_form(m_rows, n_segs, k_segs)
+            delta = (gemm_offset_closed_form(rows, n_segs, k_segs)
                      - delta_slack)
-            ot = pt - delta
+            in_tot, out_tot = rows * k_segs, rows * n_segs
+            ot = _avoid(pt - delta, out_tot, pos, 0,
+                        cur=(it, ia, in_tot))
             if not aligned:
-                ia, oa = pa, ot
+                oa = ot
             elif pos == 0:
                 # First op: both tensors are still placeable — pick the
                 # cheaper of "shift In up to a bk multiple" (the legacy
@@ -337,50 +526,172 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                 gap_k = ceil_div(max(delta, 0), bk) * bk
                 gap_n = ceil_div(max(delta, 0), bn) * bn
                 ia, oa = ((gap_k, 0) if gap_k <= gap_n else (0, -gap_n))
+                oa = _avoid(oa, out_tot, pos, 1, round_to=bn,
+                            cur=(it, ia, in_tot))
             else:
-                ia, oa = pa, _floor_mult(pa - delta, bn)
-            in_tot, out_tot = m_rows * k_segs, m_rows * n_segs
-            op = PoolOp(kind="gemm", in_ptr=ia, out_ptr=oa, delta=delta,
-                        in_segments=in_tot, out_segments=out_tot,
-                        segment_bytes=seg_width * elem_bytes,
-                        d_in=cur, d_out=spec.d_out,
-                        activation=spec.activation)
+                oa = _avoid(_floor_mult(pa - delta, bn), out_tot, pos, 1,
+                            round_to=bn, cur=(it, ia, in_tot))
+            kind, d_out = "gemm", spec.d_out
+            extra = dict(activation=spec.activation, rows_in=rows,
+                         rows_out=rows)
             aligns.append(math.lcm(bk, bn))
-            pt, pa, cur = ot, oa, spec.d_out
+            new_state = (rows, spec.d_out, None if img is None else img)
         elif isinstance(spec, (FusedMLPSpec, ElementwiseSpec)):
+            if rows % br:
+                raise ValueError(f"block_rows={br} must divide rows={rows}")
             d_segs = segments_for(cur, seg_width)
             bd = br * d_segs
             delta = -delta_slack  # Eq.-(2) optimum for these chains is 0
             ot = pt - delta
             oa = pa if (not aligned or delta == 0) else pa - delta
-            tot = m_rows * d_segs
+            in_tot = out_tot = rows * d_segs
+            kind, d_out = ("fused_mlp" if isinstance(spec, FusedMLPSpec)
+                           else "elementwise"), cur
             if isinstance(spec, FusedMLPSpec):
                 if spec.d_ff % spec.ff_tile:
                     raise ValueError(f"ff_tile={spec.ff_tile} must divide "
                                      f"d_ff={spec.d_ff}")
-                op = PoolOp(kind="fused_mlp", in_ptr=pa, out_ptr=oa,
-                            delta=delta, in_segments=tot, out_segments=tot,
-                            segment_bytes=seg_width * elem_bytes,
-                            d_in=cur, d_out=cur, activation=spec.activation,
-                            gated=spec.gated, residual=spec.residual,
-                            d_ff=spec.d_ff, ff_tile=spec.ff_tile)
+                extra = dict(activation=spec.activation, gated=spec.gated,
+                             residual=spec.residual, d_ff=spec.d_ff,
+                             ff_tile=spec.ff_tile, rows_in=rows,
+                             rows_out=rows)
             else:
-                op = PoolOp(kind="elementwise", in_ptr=pa, out_ptr=oa,
-                            delta=delta, in_segments=tot, out_segments=tot,
-                            segment_bytes=seg_width * elem_bytes,
-                            d_in=cur, d_out=cur, activation=spec.fn)
-            ia = pa
-            in_tot = out_tot = tot
+                extra = dict(activation=spec.fn, rows_in=rows,
+                             rows_out=rows)
             aligns.append(bd)
-            pt, pa = ot, oa
+            new_state = (rows, cur, img)
+        elif isinstance(spec, (ConvPWSpec, ConvDWSpec)):
+            _conv_state(spec, rows, cur, img, pos)
+            h_in, w_in = spec.h_in, spec.w_in
+            h_out, w_out = spec.out_hw
+            c_in = spec.c_in if isinstance(spec, ConvPWSpec) else spec.c
+            c_out = spec.c_out if isinstance(spec, ConvPWSpec) else spec.c
+            ci = segments_for(c_in, seg_width)
+            co = segments_for(c_out, seg_width)
+            in_chunk, out_chunk = w_in * ci, w_out * co
+            if isinstance(spec, ConvPWSpec):
+                sched = rowsched.conv_pw_schedule(
+                    h_in, h_out, in_chunk, out_chunk, stride=spec.stride,
+                    resample=spec.resample_to is not None)
+                kind = "conv_pw"
+                extra = dict(activation=spec.activation, stride=spec.stride,
+                             resample=spec.resample_to is not None)
+            else:
+                sched = rowsched.conv_dw_schedule(
+                    h_in, h_out, in_chunk, out_chunk, rs=spec.rs,
+                    stride=spec.stride)
+                kind = "conv_dw"
+                extra = dict(activation=spec.activation, stride=spec.stride,
+                             rs=spec.rs)
+            delta = sched.solve_delta() - delta_slack
+            in_tot, out_tot = h_in * w_in * ci, h_out * w_out * co
+            ot = _avoid(pt - delta, out_tot, pos, 0,
+                        cur=(it, ia, in_tot))
+            oa = (ot if not aligned else
+                  _avoid(_floor_mult(pa - delta, out_chunk), out_tot, pos,
+                         1, round_to=out_chunk, cur=(it, ia, in_tot)))
+            d_out = c_out
+            extra.update(h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out,
+                         rows_in=rows, rows_out=h_out * w_out)
+            aligns.append(math.lcm(in_chunk, out_chunk))
+            new_state = (h_out * w_out, c_out, (h_out, w_out))
+        elif isinstance(spec, IBModuleSpec):
+            cfg = spec.cfg
+            if any(s != 1 for s in cfg.strides):
+                raise ValueError("IBModuleSpec (fused execution) is "
+                                 "stride-1 only; lower strided modules "
+                                 "unfused")
+            if (segments_for(cfg.c_in, seg_width) != 1
+                    or segments_for(cfg.c_out, seg_width) != 1):
+                raise ValueError("ib_fused needs one segment per pixel "
+                                 f"(c_in={cfg.c_in}, c_out={cfg.c_out}, "
+                                 f"seg_width={seg_width})")
+            h = w = cfg.hw
+            if img is None:
+                if rows != h * w:
+                    raise ValueError(f"layer {pos}: module expects {h}x{w} "
+                                     f"pixel rows, program has {rows}")
+            elif img != (h, w):
+                raise ValueError(f"layer {pos}: module image {h}x{w} != "
+                                 f"running image {img}")
+            if cur != cfg.c_in:
+                raise ValueError(f"layer {pos}: module c_in={cfg.c_in} != "
+                                 f"running dim={cur}")
+            sched = rowsched.ib_fused_schedule(h, w, w, rs=cfg.rs,
+                                               residual=cfg.has_residual)
+            delta = sched.solve_delta() - delta_slack
+            in_tot = out_tot = h * w
+            ot = _avoid(pt - delta, out_tot, pos, 0,
+                        cur=(it, ia, in_tot))
+            oa = (ot if not aligned else
+                  _avoid(_floor_mult(pa - delta, w), out_tot, pos, 1,
+                         round_to=w, cur=(it, ia, in_tot)))
+            kind, d_out = "ib_fused", cfg.c_out
+            extra = dict(h_in=h, w_in=w, h_out=h, w_out=w, rs=cfg.rs,
+                         residual=cfg.has_residual, d_mid=cfg.c_mid,
+                         rows_in=rows, rows_out=rows)
+            aligns.append(w)
+            new_state = (rows, cfg.c_out, (h, w))
+        elif isinstance(spec, ResidualAddSpec):
+            j = aux_src[pos]
+            src_rows = ops[j].rows_in or m_rows
+            if src_rows != rows or (ops[j].d_in != cur):
+                raise ValueError(f"layer {pos}: residual source shape "
+                                 f"({src_rows},{ops[j].d_in}) != current "
+                                 f"({rows},{cur})")
+            d_segs = segments_for(cur, seg_width)
+            delta = -delta_slack
+            ot, oa = pt - delta, pa + delta_slack
+            in_tot = out_tot = rows * d_segs
+            kind, d_out = "add", cur
+            extra = dict(rows_in=rows, rows_out=rows,
+                         aux_op=j, aux_ptr=tens[j][0 if not aligned else 1])
+            aligns.append(d_segs)
+            new_state = (rows, cur, img)
+        elif isinstance(spec, AvgPoolSpec):
+            _conv_state_pool(spec, rows, cur, img, pos)
+            ci = segments_for(spec.c, seg_width)
+            in_chunk, out_chunk = spec.w_in * ci, ci
+            sched = rowsched.avgpool_schedule(spec.h_in, in_chunk,
+                                              out_chunk)
+            delta = sched.solve_delta() - delta_slack
+            in_tot, out_tot = spec.h_in * spec.w_in * ci, ci
+            ot = _avoid(pt - delta, out_tot, pos, 0,
+                        cur=(it, ia, in_tot))
+            oa = (ot if not aligned else
+                  _avoid(_floor_mult(pa - delta, out_chunk), out_tot, pos,
+                         1, round_to=out_chunk, cur=(it, ia, in_tot)))
+            kind, d_out = "pool_avg", spec.c
+            extra = dict(h_in=spec.h_in, w_in=spec.w_in, h_out=1, w_out=1,
+                         rows_in=rows, rows_out=1)
+            aligns.append(math.lcm(in_chunk, out_chunk))
+            new_state = (1, spec.c, (1, 1))
         else:
             raise TypeError(f"unknown layer spec {spec!r}")
-        spans_a.append(_span(ia, oa, in_tot, out_tot))
-        ops.append(op)
 
-    # Tight spans come from the tight chaining, not the aligned pointers.
-    pool_segments = max(_tight_spans(m_rows, d_in, layers, seg_width,
-                                     delta_slack))
+        if not aligned:
+            ia, oa = it, ot
+        op = PoolOp(kind=kind, in_ptr=ia, out_ptr=oa, delta=delta,
+                    in_segments=in_tot, out_segments=out_tot,
+                    segment_bytes=seg_width * elem_bytes,
+                    d_in=cur, d_out=d_out,
+                    hold_input=pos in aux_src.values(), **extra)
+        tens.append((it, ia, in_tot))
+        # Live span at this op: In, Out and every held residual interval.
+        lo_t, hi_t = min(it, ot), max(it + in_tot, ot + out_tot)
+        lo_a, hi_a = min(ia, oa), max(ia + in_tot, oa + out_tot)
+        for j in hold_at[pos]:
+            lo_t = min(lo_t, tens[j][0])
+            hi_t = max(hi_t, tens[j][0] + tens[j][2])
+            lo_a = min(lo_a, tens[j][1])
+            hi_a = max(hi_a, tens[j][1] + tens[j][2])
+        spans_t.append(hi_t - lo_t)
+        spans_a.append(hi_a - lo_a)
+        ops.append(op)
+        pt, pa = ot, oa
+        rows, cur, img = new_state
+
+    pool_segments = max(spans_t)
 
     if aligned:
         align = math.lcm(*aligns)
@@ -392,8 +703,9 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
         base = min(min(op.in_ptr, op.out_ptr) for op in ops)
         shift = -base
     if shift:
-        ops = [dataclasses.replace(op, in_ptr=op.in_ptr + shift,
-                                   out_ptr=op.out_ptr + shift)
+        ops = [dataclasses.replace(
+                   op, in_ptr=op.in_ptr + shift, out_ptr=op.out_ptr + shift,
+                   aux_ptr=op.aux_ptr + shift if op.aux_op >= 0 else 0)
                for op in ops]
 
     return PoolProgram(m_rows=m_rows, seg_width=seg_width,
@@ -402,26 +714,15 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                        ops=tuple(ops))
 
 
-def _tight_spans(m_rows, d_in, layers, seg_width, delta_slack) -> list[int]:
-    """Exact (unaligned) per-op live spans — the legacy ChainPlan numbers."""
-    spans = []
-    cur, ptr = d_in, 0
-    for spec in layers:
-        if isinstance(spec, GemmSpec):
-            k_segs = segments_for(cur, seg_width)
-            n_segs = segments_for(spec.d_out, seg_width)
-            delta = (gemm_offset_closed_form(m_rows, n_segs, k_segs)
-                     - delta_slack)
-            out = ptr - delta
-            spans.append(_span(ptr, out, m_rows * k_segs, m_rows * n_segs))
-            ptr, cur = out, spec.d_out
-        else:
-            d_segs = segments_for(cur, seg_width)
-            out = ptr + delta_slack
-            tot = m_rows * d_segs
-            spans.append(_span(ptr, out, tot, tot))
-            ptr = out
-    return spans
+def _conv_state_pool(spec, rows, dim, img, pos):
+    if img is None:
+        if rows != spec.h_in * spec.w_in:
+            raise ValueError(f"layer {pos}: pool expects {spec.h_in}x"
+                             f"{spec.w_in} pixel rows, program has {rows}")
+    elif img != (spec.h_in, spec.w_in):
+        raise ValueError(f"layer {pos}: pool image mismatch")
+    if dim != spec.c:
+        raise ValueError(f"layer {pos}: pool c={spec.c} != dim={dim}")
 
 
 # ---------------------------------------------------------------------------
@@ -472,3 +773,84 @@ def plan_stream_chain_program(m_rows: int, dims: Sequence[int], *,
                         [FusedChainSpec(tuple(dims[1:]),
                                         rows_per_step=rows_per_step,
                                         elem_bytes=elem_bytes)])
+
+
+# ---------------------------------------------------------------------------
+# Multi-program composition.
+# ---------------------------------------------------------------------------
+
+def concat_programs(programs: Sequence[PoolProgram]) -> PoolProgram:
+    """Chain programs over ONE pool: program ``i+1``'s input is placed
+    exactly where program ``i``'s output landed, so consecutive programs
+    overlap in the ring instead of each resetting the pool.
+
+    The merged pool length is the *largest* single-program live span, not
+    the sum — the whole point of cross-boundary Eq.-(1)/(2) chaining.
+    Aligned programs concatenate only when the required shift lands on
+    every op's DMA block (plan the whole net in one :func:`plan_program`
+    call otherwise — this hook is for composing independently planned
+    stages).
+    """
+    programs = list(programs)
+    if not programs:
+        raise ValueError("need at least one program")
+    base = programs[0]
+    if any(p.seg_width != base.seg_width or p.elem_bytes != base.elem_bytes
+           for p in programs):
+        raise ValueError("programs must share seg_width and elem_bytes")
+    aligned = base.aligned
+    if any(p.aligned != aligned for p in programs):
+        raise ValueError("cannot mix aligned and tight programs")
+    if not all(p.executable for p in programs):
+        raise ValueError("plan-only programs cannot be concatenated")
+
+    align_all = 1
+    if aligned:
+        for p in programs:
+            for op in p.ops:
+                align_all = math.lcm(align_all, math.lcm(*p.op_blocks(op)))
+
+    merged: list[PoolOp] = []
+    cursor = None  # previous program's (shifted) output pointer
+    prev_p = None
+    for p in programs:
+        if cursor is None:
+            shift = 0
+        else:
+            if prev_p.out_rows != p.in_rows or prev_p.out_dim != p.in_dim:
+                raise ValueError(
+                    f"program boundary mismatch: {prev_p.out_rows} rows x "
+                    f"{prev_p.out_dim} -> {p.in_rows} rows x {p.in_dim}")
+            shift = cursor - p.input_ptr
+            if aligned and shift % align_all:
+                raise ValueError(
+                    f"aligned concat needs a shift multiple of {align_all} "
+                    f"(got {shift}); plan the chain in one plan_program "
+                    "call instead")
+        idx0 = len(merged)
+        for op in p.ops:
+            merged.append(dataclasses.replace(
+                op, in_ptr=op.in_ptr + shift, out_ptr=op.out_ptr + shift,
+                aux_ptr=op.aux_ptr + shift if op.aux_op >= 0 else 0,
+                aux_op=op.aux_op + idx0 if op.aux_op >= 0 else -1))
+        cursor = merged[-1].out_ptr
+        prev_p = p
+
+    pool_segments = max(p.pool_segments for p in programs)
+    if aligned:
+        n_segments = ceil_div(max(p.n_segments for p in programs),
+                              align_all) * align_all
+    else:
+        n_segments = pool_segments
+    lo = min(min(op.in_ptr, op.out_ptr) for op in merged)
+    shift = (-_floor_mult(lo, align_all) if aligned and lo < 0
+             else (-lo if lo < 0 else 0))
+    if shift:
+        merged = [dataclasses.replace(
+            op, in_ptr=op.in_ptr + shift, out_ptr=op.out_ptr + shift,
+            aux_ptr=op.aux_ptr + shift if op.aux_op >= 0 else 0)
+            for op in merged]
+    return PoolProgram(m_rows=base.m_rows, seg_width=base.seg_width,
+                       block_rows=base.block_rows, n_segments=n_segments,
+                       pool_segments=pool_segments,
+                       elem_bytes=base.elem_bytes, ops=tuple(merged))

@@ -1,0 +1,219 @@
+"""Row-granular access schedules for whole-network PoolOps.
+
+The single-layer Eq.-(1) closed form covers GEMM; the conv/pool/residual
+ops a whole DNN needs have richer read frontiers (halos, strided reads,
+resampled rows, a residual source read late).  This module is the ONE
+source of truth for those schedules: for each op kind it enumerates, per
+execution step, which input *rows* (contiguous segment chunks) are read
+and which output rows are written.  From that one description both
+
+  * the planner derives the byte/segment frontiers fed to
+    :func:`repro.core.graph_planner.solve_stream_offset` (Eq. 2), and
+  * the ``sim`` executor replays the exact read/free/write sequence in
+    the :class:`repro.core.pool.SegmentPool` clobber oracle,
+
+so the solved offset and the certified schedule can never drift apart.
+
+A "row" here is one contiguous chunk of pool segments: one image row
+(``W * segs(C)`` segments) for conv kinds, one matrix/pixel row for
+``add``, one image row in / one channel row out for ``pool_avg``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph_planner import solve_stream_offset
+
+_INF = np.iinfo(np.int64).max // 4
+
+
+def resample_src(p: int, n_in: int, n_out: int) -> int:
+    """Nearest-grid row map for resampling adapters: monotone, exact
+    ``p * s`` when ``n_in == s * n_out``."""
+    return (p * n_in) // n_out
+
+
+@dataclasses.dataclass(frozen=True)
+class RowSchedule:
+    """Per-step row access schedule of one op, at chunk granularity.
+
+    ``reads[t]``/``writes[t]`` are input/output row indices touched at
+    step ``t`` (reads happen before writes within a step, matching the
+    kernels); ``aux_reads`` are rows of a second, non-chained source
+    tensor (the residual operand of ``add``).  ``in_chunk``/``out_chunk``
+    are the chunk sizes in pool segments.
+    """
+
+    steps: int
+    in_rows: int
+    out_rows: int
+    in_chunk: int
+    out_chunk: int
+    reads: tuple[tuple[int, ...], ...]
+    writes: tuple[tuple[int, ...], ...]
+    aux_reads: tuple[tuple[int, ...], ...] | None = None
+    aux_rows: int = 0
+    aux_chunk: int = 0
+
+    # -- derived frontiers -------------------------------------------------
+    def last_read(self) -> np.ndarray:
+        """Per input row: the last step that reads it (-1 if never read)."""
+        lr = np.full(self.in_rows, -1, dtype=np.int64)
+        for t, rows in enumerate(self.reads):
+            for r in rows:
+                lr[r] = max(lr[r], t)
+        return lr
+
+    def needed_min(self) -> np.ndarray:
+        """``needed_min[t]`` — lowest input row still read at step >= t
+        (length steps + 1; trailing entry is +inf)."""
+        lr = self.last_read()
+        per_t = np.full(self.steps, _INF, dtype=np.int64)
+        rows = np.nonzero(lr >= 0)[0]
+        np.minimum.at(per_t, lr[rows], rows)
+        out = np.full(self.steps + 1, _INF, dtype=np.int64)
+        out[: self.steps] = per_t
+        return np.minimum.accumulate(out[::-1])[::-1]
+
+    def frees(self) -> list[list[int]]:
+        """Per step: input rows that die after that step's reads.
+
+        A read row dies at its last read; a row skipped by the access
+        pattern (strided convs) dies as soon as the read frontier passes
+        it — exactly the Eq.-(2) lifetime model.
+        """
+        lr = self.last_read()
+        nm = self.needed_min()
+        dead: list[list[int]] = [[] for _ in range(self.steps)]
+        for r in range(self.in_rows):
+            if lr[r] >= 0:
+                dead[lr[r]].append(r)
+            else:
+                # first step t with needed_min[t + 1] > r
+                t = int(np.searchsorted(nm[1:], r, side="right"))
+                dead[min(t, self.steps - 1)].append(r)
+        return dead
+
+    def read_start_segments(self) -> np.ndarray:
+        nm = self.needed_min()[: self.steps]
+        total = self.in_rows * self.in_chunk
+        return np.minimum(nm * self.in_chunk, total)
+
+    def write_end_segments(self) -> np.ndarray:
+        we = np.zeros(self.steps, dtype=np.int64)
+        hi = 0
+        for t, rows in enumerate(self.writes):
+            if rows:
+                hi = max(hi, (max(rows) + 1) * self.out_chunk)
+            we[t] = hi
+        return we
+
+    def solve_delta(self) -> int:
+        """Minimal segment offset ``b_In - b_Out`` for this schedule."""
+        return solve_stream_offset(self.write_end_segments(),
+                                   self.read_start_segments())
+
+
+# ---------------------------------------------------------------------------
+# Schedule builders, one per op kind.
+# ---------------------------------------------------------------------------
+
+def conv_pw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
+                     *, stride: int = 1, resample: bool = False
+                     ) -> RowSchedule:
+    """Pointwise conv: output image row ``p`` reads input image row
+    ``p * stride`` (or the resampled source row)."""
+    reads, writes = [], []
+    for p in range(h_out):
+        src = resample_src(p, h_in, h_out) if resample else p * stride
+        reads.append((src,))
+        writes.append((p,))
+    return RowSchedule(steps=h_out, in_rows=h_in, out_rows=h_out,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=tuple(reads), writes=tuple(writes))
+
+
+def conv_dw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
+                     *, rs: int, stride: int = 1) -> RowSchedule:
+    """Depthwise RSxRS conv: output row ``p`` reads the clamped halo rows
+    ``p*stride - pad .. p*stride - pad + rs - 1`` ('same' padding)."""
+    pad = (rs - 1) // 2
+    reads, writes = [], []
+    for p in range(h_out):
+        win = sorted({min(max(p * stride - pad + r, 0), h_in - 1)
+                      for r in range(rs)
+                      if 0 <= p * stride - pad + r < h_in})
+        reads.append(tuple(win))
+        writes.append((p,))
+    return RowSchedule(steps=h_out, in_rows=h_in, out_rows=h_out,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=tuple(reads), writes=tuple(writes))
+
+
+def ib_fused_schedule(h: int, in_chunk: int, out_chunk: int, *, rs: int,
+                      residual: bool) -> RowSchedule:
+    """The Fig.-6 fused kernel's row schedule (``ring_inverted_bottleneck``):
+    step 0 primes the PW1 halo rows ``0..pad``; each later step ``p``
+    expands exactly one new input row ``clip(p + pad)``; residual modules
+    re-read input row ``p`` at step ``p``."""
+    pad = (rs - 1) // 2
+    reads, writes = [], []
+    for p in range(h):
+        if p == 0:
+            rows = {min(r, h - 1) for r in range(pad + 1)}
+        else:
+            rows = {min(max(p + pad, 0), h - 1)}
+        if residual:
+            rows.add(p)
+        reads.append(tuple(sorted(rows)))
+        writes.append((p,))
+    return RowSchedule(steps=h, in_rows=h, out_rows=h,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=tuple(reads), writes=tuple(writes))
+
+
+def add_schedule(rows: int, chunk: int, *, aux_chunk: int | None = None
+                 ) -> RowSchedule:
+    """Residual add: step ``t`` reads row ``t`` of the chained operand AND
+    row ``t`` of the held residual source, then writes row ``t``."""
+    idx = tuple((t,) for t in range(rows))
+    return RowSchedule(steps=rows, in_rows=rows, out_rows=rows,
+                       in_chunk=chunk, out_chunk=chunk,
+                       reads=idx, writes=idx, aux_reads=idx,
+                       aux_rows=rows,
+                       aux_chunk=chunk if aux_chunk is None else aux_chunk)
+
+
+def avgpool_schedule(h: int, in_chunk: int, out_chunk: int) -> RowSchedule:
+    """Global average pool: reads one image row per step, emits the single
+    output row at the last step (after its read)."""
+    reads = tuple((t,) for t in range(h))
+    writes = tuple(() for _ in range(h - 1)) + ((0,),)
+    return RowSchedule(steps=h, in_rows=h, out_rows=1,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=reads, writes=writes)
+
+
+def schedule_for_op(op, seg_width: int) -> RowSchedule:
+    """Rebuild the row schedule of a planned :class:`PoolOp` (sim replay)."""
+    from .vpool import segments_for
+
+    ci = segments_for(op.d_in, seg_width)
+    co = segments_for(op.d_out, seg_width)
+    if op.kind == "conv_pw":
+        return conv_pw_schedule(op.h_in, op.h_out, op.w_in * ci,
+                                op.w_out * co, stride=op.stride,
+                                resample=op.resample)
+    if op.kind == "conv_dw":
+        return conv_dw_schedule(op.h_in, op.h_out, op.w_in * ci,
+                                op.w_out * co, rs=op.rs, stride=op.stride)
+    if op.kind == "ib_fused":
+        return ib_fused_schedule(op.h_in, op.w_in * ci, op.w_out * co,
+                                 rs=op.rs, residual=op.residual)
+    if op.kind == "add":
+        return add_schedule(op.rows_in, ci)
+    if op.kind == "pool_avg":
+        return avgpool_schedule(op.h_in, op.w_in * ci, co)
+    raise ValueError(f"no row schedule for op kind {op.kind!r}")

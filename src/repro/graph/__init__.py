@@ -1,0 +1,31 @@
+"""Whole-network graph compiler (DESIGN.md §7).
+
+Schedule, fuse and execute full DNNs on ONE VirtualPool:
+
+  * ``ir``       — the DAG IR (conv/dw/pw, fc, mlp, elementwise, residual
+                   add, pool/flatten nodes) + builders for the MCUNet
+                   module tables and every ``configs/`` model.
+  * ``schedule`` — lifetime analysis, operator reordering over
+                   topological orders (branch/residual-aware) and fusion
+                   group selection by the paper's exclusion rule.
+  * ``netplan``  — the global planner: lowers scheduled groups through
+                   ``plan_program()`` into one ring, chaining Eq.-(1)/(2)
+                   offsets *across* group boundaries, and reports the
+                   byte-granular MCU footprint vs the TinyEngine / HMCOS
+                   baselines.
+  * ``run``      — the executor bridge: stage, execute on sim/jnp/pallas,
+                   fetch; plus the plain-XLA reference forward pass.
+"""
+from .ir import Graph, Node, Tensor, build_mcunet, build_mlp_tower
+from .schedule import (FusionGroup, peak_live_bytes, reorder, select_groups,
+                       tensor_lifetimes)
+from .netplan import GroupPlan, NetPlan, plan_net
+from .run import (certify_net, init_net_params, reference_forward, run_net)
+
+__all__ = [
+    "Graph", "Node", "Tensor", "build_mcunet", "build_mlp_tower",
+    "FusionGroup", "peak_live_bytes", "reorder", "select_groups",
+    "tensor_lifetimes",
+    "GroupPlan", "NetPlan", "plan_net",
+    "certify_net", "init_net_params", "reference_forward", "run_net",
+]

@@ -1,0 +1,251 @@
+"""Whole-network DAG IR + builders.
+
+A :class:`Graph` is an ordered DAG of :class:`Node` ops over quantized
+:class:`Tensor` values (per-tensor byte sizes drive the lifetime
+analysis in ``graph.schedule``).  Node kinds:
+
+  ``input`` ``conv_pw`` ``conv_dw`` ``add`` ``avgpool`` ``flatten``
+  ``fc`` ``mlp`` ``elementwise``
+
+Builders lower the paper's MCUNet module tables
+(:data:`repro.core.graph_planner.MCUNET_5FPS_VWW` /
+:data:`MCUNET_320KB_IMAGENET`) and every registered ``configs/`` model
+into the IR.  Modules expand to their *unfused* pw → dw → pw (→ add)
+node sequence tagged with the module name — fusing them back into one
+Fig.-6 kernel is the scheduler's decision (``graph.schedule``), made by
+the paper's own exclusion rule, not the builder's.
+
+Where consecutive table modules do not chain (channel or resolution
+mismatch — the tables list benchmark modules, not a closed network), the
+builder inserts a pointwise *adapter* conv: strided when the resolution
+divides down exactly, nearest-grid resampling otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from ..core.graph_planner import ModuleConfig
+from ..core.vpool import ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class Tensor:
+    """A value in the graph: ``rows`` x ``d`` elements (``h``/``w`` carry
+    the image geometry for conv tensors; ``rows == h * w`` then)."""
+
+    rows: int
+    d: int
+    h: int = 0
+    w: int = 0
+    elem_bytes: int = 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.rows * self.d * self.elem_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One IR op.  ``inputs`` are producer node ids (the second input of
+    ``add`` is the residual source); ``out`` is the produced tensor."""
+
+    id: str
+    kind: str
+    inputs: tuple[str, ...]
+    out: Tensor
+    stride: int = 1
+    rs: int = 0
+    resample: bool = False
+    activation: str | None = None
+    d_ff: int = 0
+    gated: bool = False
+    module: str = ""          # module tag for fusion-group selection
+
+
+class Graph:
+    """An ordered DAG; insertion order is a valid topological order."""
+
+    def __init__(self, name: str, elem_bytes: int = 1):
+        self.name = name
+        self.elem_bytes = elem_bytes
+        self.nodes: dict[str, Node] = {}
+        self.modules: dict[str, ModuleConfig] = {}
+
+    # -- construction ------------------------------------------------------
+    def add(self, id: str, kind: str, inputs: Sequence[str], out: Tensor,
+            **attrs) -> str:
+        if id in self.nodes:
+            raise ValueError(f"duplicate node id {id!r}")
+        for src in inputs:
+            if src not in self.nodes:
+                raise ValueError(f"node {id!r} references unknown input "
+                                 f"{src!r}")
+        self.nodes[id] = Node(id=id, kind=kind, inputs=tuple(inputs),
+                              out=out, **attrs)
+        return id
+
+    # -- structure ---------------------------------------------------------
+    def node(self, id: str) -> Node:
+        return self.nodes[id]
+
+    def in_tensor(self, id: str) -> Tensor:
+        """The (first) input tensor of a node."""
+        n = self.nodes[id]
+        if not n.inputs:
+            raise ValueError(f"node {id!r} has no inputs")
+        return self.nodes[n.inputs[0]].out
+
+    def consumers(self, id: str) -> list[str]:
+        return [n.id for n in self.nodes.values() if id in n.inputs]
+
+    def input_id(self) -> str:
+        for n in self.nodes.values():
+            if n.kind == "input":
+                return n.id
+        raise ValueError("graph has no input node")
+
+    def output_id(self) -> str:
+        sinks = [n.id for n in self.nodes.values()
+                 if not self.consumers(n.id)]
+        if len(sinks) != 1:
+            raise ValueError(f"graph has {len(sinks)} sinks: {sinks}")
+        return sinks[0]
+
+    def topo_order(self) -> list[str]:
+        """Kahn topological order (ties broken by insertion order)."""
+        indeg = {i: len(n.inputs) for i, n in self.nodes.items()}
+        ready = [i for i, d in indeg.items() if d == 0]
+        order: list[str] = []
+        while ready:
+            i = ready.pop(0)
+            order.append(i)
+            for c in self.consumers(i):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+        return order
+
+    def validate(self) -> None:
+        self.topo_order()
+        for n in self.nodes.values():
+            if n.kind == "input":
+                if n.inputs:
+                    raise ValueError("input node cannot have inputs")
+                continue
+            t = self.in_tensor(n.id)
+            if n.kind in ("conv_pw", "conv_dw") and t.h * t.w != t.rows:
+                raise ValueError(f"{n.id}: conv over non-image tensor")
+            if n.kind == "add":
+                if len(n.inputs) != 2:
+                    raise ValueError(f"{n.id}: add needs two inputs")
+                a, b = (self.nodes[s].out for s in n.inputs)
+                if (a.rows, a.d) != (b.rows, b.d):
+                    raise ValueError(f"{n.id}: add shape mismatch")
+            if n.kind == "flatten" and t.rows != 1:
+                raise ValueError(
+                    f"{n.id}: only 1x1 tensors flatten losslessly in "
+                    "row-major pool layout (use avgpool first)")
+
+
+# ---------------------------------------------------------------------------
+# Builders.
+# ---------------------------------------------------------------------------
+
+def _adapter(g: Graph, src: str, cur: Tensor, h: int, c: int,
+             elem_bytes: int, idx: int) -> tuple[str, Tensor]:
+    """Insert a pointwise adapter conv from ``cur`` to an ``h x h x c``
+    tensor: strided when the resolution divides down, resampling
+    otherwise."""
+    stride, resample = 1, False
+    if cur.h != h:
+        s = max(1, round(cur.h / h))
+        if ceil_div(cur.h, s) == h:
+            stride = s
+        else:
+            resample = True
+    out = Tensor(rows=h * h, d=c, h=h, w=h, elem_bytes=elem_bytes)
+    nid = g.add(f"T{idx}", "conv_pw", [src], out, stride=stride,
+                resample=resample, activation=None)
+    return nid, out
+
+
+def build_mcunet(modules: Iterable[ModuleConfig], name: str, *,
+                 num_classes: int = 2, elem_bytes: int = 1,
+                 include_head: bool = True) -> Graph:
+    """Lower a MCUNet module table into the IR.
+
+    Each table row becomes its unfused pw1 -> dw -> pw2 (-> residual add)
+    node run tagged ``module=<row name>``; adapters connect rows whose
+    shapes do not chain; an avgpool/flatten/fc head closes the net.
+    """
+    modules = list(modules)
+    g = Graph(name, elem_bytes=elem_bytes)
+    cfg0 = modules[0]
+    cur = Tensor(rows=cfg0.hw * cfg0.hw, d=cfg0.c_in, h=cfg0.hw, w=cfg0.hw,
+                 elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    for t, cfg in enumerate(modules):
+        if (cur.h, cur.d) != (cfg.hw, cfg.c_in):
+            src, cur = _adapter(g, src, cur, cfg.hw, cfg.c_in, elem_bytes,
+                                t)
+        g.modules[cfg.name] = cfg
+        s1, s2, s3 = cfg.strides
+        h0 = cfg.hw
+        h1 = ceil_div(h0, s1)
+        h2 = ceil_div(h1, s2)
+        h3 = ceil_div(h2, s3)
+        mod_in = src
+        b = Tensor(h1 * h1, cfg.c_mid, h1, h1, elem_bytes)
+        src = g.add(f"{cfg.name}.pw1", "conv_pw", [src], b, stride=s1,
+                    activation="relu", module=cfg.name)
+        c = Tensor(h2 * h2, cfg.c_mid, h2, h2, elem_bytes)
+        src = g.add(f"{cfg.name}.dw", "conv_dw", [src], c, stride=s2,
+                    rs=cfg.rs, activation="relu", module=cfg.name)
+        d = Tensor(h3 * h3, cfg.c_out, h3, h3, elem_bytes)
+        src = g.add(f"{cfg.name}.pw2", "conv_pw", [src], d, stride=s3,
+                    module=cfg.name)
+        if cfg.has_residual:
+            src = g.add(f"{cfg.name}.add", "add", [src, mod_in], d,
+                        module=cfg.name)
+        cur = d
+    if include_head:
+        pooled = Tensor(1, cur.d, 1, 1, elem_bytes)
+        src = g.add("head.pool", "avgpool", [src], pooled)
+        src = g.add("head.flatten", "flatten", [src], pooled)
+        logits = Tensor(1, num_classes, 1, 1, elem_bytes)
+        src = g.add("head.fc", "fc", [src], logits)
+    g.validate()
+    return g
+
+
+def _ff_tile(d_ff: int, cap: int = 512) -> int:
+    """Largest divisor of d_ff not exceeding ``cap``."""
+    for t in range(min(cap, d_ff), 0, -1):
+        if d_ff % t == 0:
+            return t
+    return d_ff
+
+
+def build_mlp_tower(cfg, *, m_rows: int = 8, n_layers: int | None = None,
+                    elem_bytes: int = 2) -> Graph:
+    """Lower a ``configs/`` :class:`ModelConfig`'s FFN stack into the IR
+    (the pool-resident part of an LM block; attention state does not
+    stream through the ring — DESIGN.md §Arch-applicability)."""
+    n_layers = cfg.n_layers if n_layers is None else n_layers
+    gated = cfg.mlp in ("geglu", "swiglu")
+    act = "silu" if cfg.mlp == "swiglu" else "gelu"
+    d_ff = cfg.d_ff
+    if d_ff == 0:           # pure-SSM configs: the in-projection
+        d_ff = cfg.d_inner  # expansion is the never-materialized tensor
+        gated, act = True, "silu"
+    g = Graph(f"{cfg.name}-mlp-tower", elem_bytes=elem_bytes)
+    cur = Tensor(rows=m_rows, d=cfg.d_model, elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    for i in range(n_layers):
+        src = g.add(f"L{i}.mlp", "mlp", [src], cur, d_ff=d_ff,
+                    gated=gated, activation=act)
+    g.validate()
+    return g

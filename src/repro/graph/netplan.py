@@ -1,0 +1,206 @@
+"""The global network planner: all groups in ONE VirtualPool ring.
+
+``plan_net`` turns a :class:`graph.ir.Graph` into a :class:`NetPlan`:
+
+  1. schedule the DAG (``graph.schedule.reorder``),
+  2. select fusion groups by the paper's exclusion rule,
+  3. lower every group to ``plan_program()`` layer specs and solve the
+     WHOLE net as one :class:`PoolProgram` — the Eq.-(1)/(2) offsets
+     chain *across* group boundaries, so group ``i+1`` overwrites group
+     ``i``'s consumed input instead of resetting the pool,
+  4. chain the byte-granular (int8, MCU) footprints of the groups the
+     same way and report the whole-network bottleneck against the
+     TinyEngine / HMCOS tensor-level baselines.
+
+Two footprints, two granularities, by design: ``program.pool_bytes`` is
+the *executed* segment-granular ring (fp32 on the TPU backends, certified
+by the ``sim`` oracle), ``mcu_bottleneck_bytes`` is the paper's byte-
+granular int8 number (the Fig. 9/10 metric the 61.5% reduction is
+measured on).  The byte formulas of ``core.graph_planner`` cross-check
+the per-group values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from ..core.graph_planner import ModuleConfig
+from ..core.program import (AvgPoolSpec, ConvDWSpec, ConvPWSpec, GemmSpec,
+                            FusedMLPSpec, IBModuleSpec, LayerSpec,
+                            PoolProgram, ResidualAddSpec, plan_program)
+from ..core.vpool import SEG_WIDTH, ceil_div
+from .ir import Graph
+from .schedule import FusionGroup, reorder, select_groups
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One fusion group's slot in the NetPlan."""
+
+    group: FusionGroup
+    op_lo: int                # slice of NetPlan.program.ops
+    op_hi: int
+    mcu_in_off: int           # byte-chain offsets (Eq. 2 across groups)
+    mcu_out_off: int
+
+    @property
+    def name(self) -> str:
+        return self.group.name
+
+
+@dataclasses.dataclass
+class NetPlan:
+    """A fully planned network over one ring."""
+
+    name: str
+    graph: Graph
+    order: tuple[str, ...]
+    groups: tuple[GroupPlan, ...]
+    program: PoolProgram
+    mcu_pool_bytes: int       # byte-granular whole-net ring (max span)
+
+    # -- whole-network MCU numbers (paper Fig. 9/10 metric) ---------------
+    @property
+    def mcu_bottleneck_bytes(self) -> int:
+        return max(g.group.mcu_bytes for g in self.groups)
+
+    @property
+    def tinyengine_bottleneck_bytes(self) -> int:
+        return max(g.group.te_bytes for g in self.groups)
+
+    @property
+    def hmcos_bottleneck_bytes(self) -> int:
+        return max(g.group.hmcos_bytes for g in self.groups)
+
+    @property
+    def reduction_vs_tinyengine(self) -> float:
+        return 1.0 - (self.mcu_bottleneck_bytes
+                      / self.tinyengine_bottleneck_bytes)
+
+    @property
+    def reduction_vs_hmcos(self) -> float:
+        return 1.0 - (self.mcu_bottleneck_bytes
+                      / self.hmcos_bottleneck_bytes)
+
+    # -- executed (segment-granular) footprint ----------------------------
+    @property
+    def pool_bytes(self) -> int:
+        return self.program.pool_bytes
+
+    @property
+    def physical_pool_bytes(self) -> int:
+        return self.program.physical_pool_bytes
+
+    def bottleneck_group(self) -> GroupPlan:
+        return max(self.groups, key=lambda g: g.group.mcu_bytes)
+
+    def deployable(self, ram_bytes: int) -> bool:
+        return self.mcu_bottleneck_bytes <= ram_bytes
+
+
+# ---------------------------------------------------------------------------
+# Group -> layer-spec lowering.
+# ---------------------------------------------------------------------------
+
+def _module_specs(graph: Graph, group: FusionGroup,
+                  cfg: ModuleConfig) -> list[LayerSpec]:
+    if group.fused_exec:
+        return [IBModuleSpec(cfg)]
+    s1, s2, s3 = cfg.strides
+    h0 = cfg.hw
+    h1 = ceil_div(h0, s1)
+    h2 = ceil_div(h1, s2)
+    specs: list[LayerSpec] = [
+        ConvPWSpec(h0, h0, cfg.c_in, cfg.c_mid, stride=s1,
+                   activation="relu"),
+        ConvDWSpec(h1, h1, cfg.c_mid, rs=cfg.rs, stride=s2,
+                   activation="relu"),
+        ConvPWSpec(h2, h2, cfg.c_mid, cfg.c_out, stride=s3),
+    ]
+    if cfg.has_residual:
+        specs.append(ResidualAddSpec(3))
+    return specs
+
+
+def _node_spec(graph: Graph, nid: str) -> list[LayerSpec]:
+    n = graph.nodes[nid]
+    tin = graph.in_tensor(nid)
+    if n.kind == "conv_pw":
+        return [ConvPWSpec(tin.h, tin.w, tin.d, n.out.d, stride=n.stride,
+                           resample_to=((n.out.h, n.out.w) if n.resample
+                                        else None),
+                           activation=n.activation)]
+    if n.kind == "conv_dw":
+        return [ConvDWSpec(tin.h, tin.w, tin.d, rs=n.rs, stride=n.stride,
+                           activation=n.activation)]
+    if n.kind == "avgpool":
+        return [AvgPoolSpec(tin.h, tin.w, tin.d)]
+    if n.kind == "fc":
+        return [GemmSpec(n.out.d, activation=n.activation)]
+    if n.kind == "mlp":
+        from .ir import _ff_tile
+        return [FusedMLPSpec(n.d_ff, gated=n.gated, residual=True,
+                             activation=n.activation or "gelu",
+                             ff_tile=_ff_tile(n.d_ff))]
+    if n.kind == "elementwise":
+        from ..core.program import ElementwiseSpec
+        return [ElementwiseSpec(n.activation or "gelu")]
+    raise ValueError(f"cannot lower node kind {n.kind!r}")
+
+
+def group_specs(graph: Graph, group: FusionGroup) -> list[LayerSpec]:
+    """Lower one fusion group to ``plan_program`` layer specs."""
+    if group.kind == "module":
+        return _module_specs(graph, group, graph.modules[group.name])
+    specs: list[LayerSpec] = []
+    for nid in group.node_ids:
+        specs.extend(_node_spec(graph, nid))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# plan_net.
+# ---------------------------------------------------------------------------
+
+def plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
+             block_rows: int | None = 1, elem_bytes: int = 4,
+             delta_slack: int = 0,
+             order: Sequence[str] | None = None) -> NetPlan:
+    """Plan a whole network into one ring.
+
+    ``block_rows=1`` (default) produces the DMA-aligned geometry all
+    three backends execute; ``block_rows=None`` the tight Eq.-(1)/(2)
+    geometry (``sim``/``jnp`` only).
+    """
+    graph.validate()
+    if order is None:
+        order, _ = reorder(graph)
+    order = list(order)
+    groups = select_groups(graph, order, seg_width=seg_width)
+
+    specs: list[LayerSpec] = []
+    ranges: list[tuple[int, int]] = []
+    for g in groups:
+        lo = len(specs)
+        specs.extend(group_specs(graph, g))
+        ranges.append((lo, len(specs)))
+
+    tin = graph.nodes[graph.input_id()].out
+    program = plan_program(tin.rows, tin.d, specs, seg_width=seg_width,
+                           block_rows=block_rows, elem_bytes=elem_bytes,
+                           delta_slack=delta_slack)
+
+    # Chain the byte-granular group plans across boundaries (Eq. 2): the
+    # next group's input IS this group's output, delta_bytes below it.
+    gplans: list[GroupPlan] = []
+    off = 0
+    for g, (lo, hi) in zip(groups, ranges):
+        out_off = off - g.delta_bytes
+        gplans.append(GroupPlan(group=g, op_lo=lo, op_hi=hi,
+                                mcu_in_off=off, mcu_out_off=out_off))
+        off = out_off
+    mcu_pool = max(g.mcu_bytes for g in groups)
+
+    return NetPlan(name=graph.name, graph=graph, order=tuple(order),
+                   groups=tuple(gplans), program=program,
+                   mcu_pool_bytes=mcu_pool)

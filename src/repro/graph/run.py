@@ -1,0 +1,174 @@
+"""Executor bridge: run a planned network end-to-end on any backend.
+
+``run_net`` stages the input image into the ring, executes the NetPlan's
+merged :class:`PoolProgram` on ``sim``/``jnp``/``pallas`` and fetches the
+output; ``certify_net`` drives the sim oracle (raises
+:class:`PoolClobberError` iff any cross-layer offset is unsafe);
+``reference_forward`` computes the same network as a plain-XLA forward
+pass with no pool mechanics — the float-tolerance ground truth for the
+ring backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executors import execute, run_program
+from ..core.program import PoolProgram, resolve_activation
+from .netplan import NetPlan
+
+
+def _prog(plan) -> PoolProgram:
+    return plan.program if isinstance(plan, NetPlan) else plan
+
+
+def init_net_params(plan, key=None, dtype=jnp.float32) -> list:
+    """Random, magnitude-controlled parameters for every op of the plan
+    (weights scaled ~1/sqrt(fan_in) so deep nets stay in float range)."""
+    program = _prog(plan)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    gain = 2.0 ** 0.5  # He init: ReLU halves the variance
+    params = []
+    for op in program.ops:
+        if op.kind in ("gemm", "conv_pw"):
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (op.d_in, op.d_out), dtype)
+            params.append((w * gain / (op.d_in ** 0.5), None))
+        elif op.kind == "conv_dw":
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (op.rs, op.rs, op.d_in), dtype)
+            params.append((w / op.rs, None))
+        elif op.kind == "ib_fused":
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            w1 = jax.random.normal(k1, (op.d_in, op.d_mid), dtype) \
+                / (op.d_in ** 0.5)
+            wd = jax.random.normal(k2, (op.rs, op.rs, op.d_mid), dtype) \
+                / op.rs
+            w2 = jax.random.normal(k3, (op.d_mid, op.d_out), dtype) \
+                / (op.d_mid ** 0.5)
+            params.append((w1, wd, w2))
+        elif op.kind == "fused_mlp":
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            wg = jax.random.normal(k1, (op.d_in, op.d_ff), dtype) \
+                / (op.d_in ** 0.5)
+            wu = jax.random.normal(k2, (op.d_in, op.d_ff), dtype) \
+                / (op.d_in ** 0.5)
+            wd = jax.random.normal(k3, (op.d_ff, op.d_in), dtype) \
+                / op.d_ff
+            params.append((wg, wu, wd))
+        else:
+            params.append(None)
+    return params
+
+
+def _conv_ref(img, w, *, stride: int, pad_lo: int, h_out: int, w_out: int,
+              groups: int = 1) -> jax.Array:
+    """Independent conv oracle via ``lax.conv_general_dilated`` (NOT the
+    executors' tap/gather formulation, so a shared indexing bug cannot
+    cancel out).  High padding is chosen so the output is exactly
+    ``ceil(h/stride)`` — the planner's 'same' convention."""
+    h_in, w_in, _ = img.shape
+    rs = w.shape[0]
+    ph = (h_out - 1) * stride + rs - pad_lo - h_in
+    pw = (w_out - 1) * stride + rs - pad_lo - w_in
+    out = jax.lax.conv_general_dilated(
+        img[None], w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad_lo, ph), (pad_lo, pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return out[0]
+
+
+def reference_forward(plan, x: jax.Array, params) -> jax.Array:
+    """Plain-XLA forward pass of the planned network (no pool).
+
+    ``x`` is ``[rows, d]`` — the flattened input image.  Residual ``add``
+    ops read the saved input of their source op, exactly as the ring
+    executors read the held interval.
+    """
+    from ..core.rowsched import resample_src
+
+    program = _prog(plan)
+    saved: dict[int, jax.Array] = {}
+    cur = x.astype(jnp.float32)
+    for i, (op, p) in enumerate(zip(program.ops, params)):
+        saved[i] = cur
+        act = resolve_activation(op.activation)
+        if op.kind in ("gemm", "conv_pw"):
+            w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
+            wf = w.astype(jnp.float32)
+            if op.kind == "conv_pw" and op.resample:
+                # the nearest-grid adapter is gather-by-definition
+                img = cur.reshape(op.h_in, op.w_in, op.d_in)
+                ridx = [resample_src(r, op.h_in, op.h_out)
+                        for r in range(op.h_out)]
+                cidx = [resample_src(c, op.w_in, op.w_out)
+                        for c in range(op.w_out)]
+                sub = img[jnp.array(ridx)][:, jnp.array(cidx)]
+                y = jnp.einsum("hwc,cd->hwd", sub, wf)
+                cur = act(y + b).reshape(op.rows_out, op.d_out)
+            elif op.kind == "conv_pw":
+                img = cur.reshape(op.h_in, op.w_in, op.d_in)
+                y = _conv_ref(img, wf.reshape(1, 1, op.d_in, op.d_out),
+                              stride=op.stride, pad_lo=0,
+                              h_out=op.h_out, w_out=op.w_out)
+                cur = act(y + b).reshape(op.rows_out, op.d_out)
+            else:
+                cur = act(cur @ wf + b)
+        elif op.kind == "conv_dw":
+            w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
+            img = cur.reshape(op.h_in, op.w_in, op.d_in)
+            y = _conv_ref(img,
+                          w.astype(jnp.float32).reshape(op.rs, op.rs, 1,
+                                                        op.d_in),
+                          stride=op.stride, pad_lo=(op.rs - 1) // 2,
+                          h_out=op.h_out, w_out=op.w_out,
+                          groups=op.d_in)
+            cur = act(y + b).reshape(op.rows_out, op.d_out)
+        elif op.kind == "ib_fused":
+            from ..kernels.inverted_bottleneck import \
+                inverted_bottleneck_ref
+            w1, wd, w2 = p
+            a = cur.reshape(op.h_in, op.w_in, op.d_in)
+            cur = inverted_bottleneck_ref(a, w1, wd, w2,
+                                          residual=op.residual) \
+                .astype(jnp.float32).reshape(op.rows_out, op.d_out)
+        elif op.kind == "add":
+            cur = cur + saved[op.aux_op]
+        elif op.kind == "pool_avg":
+            img = cur.reshape(op.h_in, op.w_in, op.d_in)
+            cur = jnp.mean(img, axis=(0, 1))[None, :]
+        elif op.kind == "fused_mlp":
+            from ..kernels.ref import fused_mlp_ref
+            wg, wu, wd = p
+            cur = fused_mlp_ref(cur, wg, wu, wd, gated=op.gated,
+                                residual=op.residual,
+                                activation=op.activation) \
+                .astype(jnp.float32)
+        elif op.kind == "elementwise":
+            cur = act(cur)
+        else:
+            raise NotImplementedError(op.kind)
+    return cur
+
+
+def run_net(plan, x: jax.Array, params, *, backend: str = "jnp",
+            **kwargs) -> jax.Array:
+    """Stage ``x`` at the plan's input pointer, execute every group
+    through the one ring, fetch the network output."""
+    program = _prog(plan)
+    y, _pool = run_program(program, x, params, backend=backend, **kwargs)
+    return y
+
+
+def certify_net(plan):
+    """Run the whole NetProgram through the SegmentPool clobber oracle.
+
+    Returns the oracle (peak_live, reads/writes stats); raises
+    :class:`repro.core.pool.PoolClobberError` iff any op's write lands on
+    a segment some later op still needs — i.e. the cross-layer chaining
+    is provably safe when this returns.
+    """
+    return execute(_prog(plan), backend="sim")

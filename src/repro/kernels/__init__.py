@@ -1,14 +1,18 @@
 """Pallas TPU kernels for vMCU's compute hot-spots.
 
-  segment_matmul — ring-buffer GEMM (paper Fig. 4 FC kernel)
-  fused_mlp      — in-place streaming MLP (paper Fig. 6 inverted bottleneck)
-  elementwise    — in-place ring elementwise (delta == 0 pool ops)
-  ring_decode    — decode attention over a ring KV cache (sliding window)
+  segment_matmul      — ring-buffer GEMM (paper Fig. 4 FC kernel)
+  fused_mlp           — in-place streaming MLP (transformer Fig.-6 analogue)
+  inverted_bottleneck — fused PW→DW→PW(→add) module (paper Fig. 6)
+  conv2d              — ring pointwise/depthwise conv, residual add,
+                        global avgpool (whole-network ops, DESIGN.md §7)
+  elementwise         — in-place ring elementwise (delta == 0 pool ops)
+  ring_decode         — decode attention over a ring KV cache
 
 All are reachable through the unified API: ``repro.core.execute(program,
 pool, params, backend="pallas")``.  Validated in interpret mode against
 :mod:`repro.kernels.ref` oracles and the jnp executor backend.
 """
+from .conv2d import ring_add, ring_avgpool, ring_conv_dw, ring_conv_pw
 from .elementwise import ring_elementwise
 from .ops import (SEG_WIDTH, decode_attention, fused_mlp, ring_cache_update,
                   segment_gemm)

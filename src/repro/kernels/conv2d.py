@@ -1,0 +1,340 @@
+"""Ring conv / residual / pool kernels — whole-network PoolOps on TPU.
+
+The remaining executable op kinds a full DNN needs beyond the Fig.-4 GEMM
+and the Fig.-6 fused module:
+
+  * ``ring_conv_pw``  — (strided / resampling) pointwise conv, one output
+                        image row per grid step.  The whole source image
+                        row is RAMLoaded (contiguous segments) and the
+                        strided columns are selected in VMEM.
+  * ``ring_conv_dw``  — depthwise RSxRS conv, 'same' padding: the RS halo
+                        rows are RAMLoaded per output row (clamped at the
+                        image edge, contributions masked), one output row
+                        RAMStored at the solved offset.
+  * ``ring_add``      — residual add: stream one pixel row from the
+                        chained operand and one from the *held* residual
+                        source, store the sum (in place over the operand).
+  * ``ring_avgpool``  — global average pool: accumulate one image row per
+                        grid step in a VMEM scratch, store the single
+                        output row at the last step.
+
+All follow the segment_matmul skeleton: pool stays in HBM/ARBITRARY,
+async copies with the ``addr % n_segments`` bounds check, input/output
+aliasing so the pool buffer is updated in place.  Layout is one image row
+per DMA block (``W * segs(C)`` segments), the alignment unit the planner
+guarantees (``PoolProgram.op_blocks``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.program import resolve_activation
+from .segment_matmul import SEG_WIDTH, _segs
+
+
+# ---------------------------------------------------------------------------
+# Pointwise conv.
+# ---------------------------------------------------------------------------
+
+def _pw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
+               sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
+               h_in: int, w_in: int, h_out: int, w_out: int, c_in: int,
+               c_out: int, stride: int, resample: bool,
+               activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if resample:
+        # traced mirror of core.rowsched.resample_src
+        src = jax.lax.div(p * h_in, h_out)
+    else:
+        src = p * stride
+    off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                 x_vmem, sem_in)
+    load.start()
+    load.wait()
+    x = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in]
+    q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    # traced mirror of core.rowsched.resample_src
+    cols = (q * w_in) // w_out if resample else q * stride
+    xs = jnp.take(x, cols, axis=0).astype(jnp.float32)  # [w_out, c_in]
+    y = jnp.dot(xs, w_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = resolve_activation(activation)(y + b_ref[...].astype(jnp.float32))
+    y = y.astype(x_vmem.dtype)
+    pad = nsegs * SEG_WIDTH - c_out
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "stride", "resample", "in_ptr", "out_ptr",
+                     "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_pw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
+                 w_in: int, h_out: int, w_out: int, c_in: int, c_out: int,
+                 stride: int = 1, resample: bool = False, in_ptr: int = 0,
+                 out_ptr: int = 0, activation: str | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """Pointwise conv ``[h_in, w_in, c_in] -> [h_out, w_out, c_out]`` in
+    the ring; rows live one pixel per ``segs(c)`` segments, row-major."""
+    n_seg = pool.shape[0]
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
+            or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _pw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
+        c_out=c_out, stride=stride, resample=resample,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((c_in, c_out), lambda p: (0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv.
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
+               sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
+               h_in: int, w_in: int, h_out: int, w_out: int, c: int,
+               rs: int, stride: int, activation: str | None):
+    p = pl.program_id(0)
+    segs = _segs(c)
+    pad = (rs - 1) // 2
+    acc = jnp.zeros((w_out, c), jnp.float32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(rs):
+        src = p * stride - pad + r
+        valid_r = (src >= 0) & (src < h_in)
+        srcc = jnp.clip(src, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
+        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
+                                     x_vmem, sem_in)
+        load.start()
+        load.wait()
+        row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
+            .astype(jnp.float32)
+        for s in range(rs):
+            cols = qs * stride - pad + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.where(ok, tap, 0.0) \
+                * w_ref[r, s].astype(jnp.float32)[None, :]
+    y = resolve_activation(activation)(acc + b_ref[...].astype(jnp.float32))
+    y = y.astype(x_vmem.dtype)
+    padw = segs * SEG_WIDTH - c
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * segs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * segs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * segs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c", "rs", "stride",
+                     "in_ptr", "out_ptr", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
+                 w_in: int, h_out: int, w_out: int, c: int, rs: int = 3,
+                 stride: int = 1, in_ptr: int = 0, out_ptr: int = 0,
+                 activation: str | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """Depthwise RSxRS conv with 'same' padding inside the ring.
+
+    ``w``: [rs, rs, c]; output row ``p`` reads the clamped input halo
+    rows ``p*stride - pad .. + rs - 1`` (masked at the edges)."""
+    n_seg = pool.shape[0]
+    segs = _segs(c)
+    if n_seg % (w_in * segs) or n_seg % (w_out * segs) \
+            or in_ptr % (w_in * segs) or out_ptr % (w_out * segs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _dw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg, h_in=h_in,
+        w_in=w_in, h_out=h_out, w_out=w_out, c=c, rs=rs, stride=stride,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((rs, rs, c), lambda p: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * segs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Residual add.
+# ---------------------------------------------------------------------------
+
+def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
+                in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
+                chunk: int):
+    t = pl.program_id(0)
+    off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
+    off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
+    cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)], x_vmem,
+                                sem_in)
+    cp1.start()
+    cp1.wait()
+    cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)], r_vmem,
+                                sem_in)
+    cp2.start()
+    cp2.wait()
+    y = (x_vmem[...].astype(jnp.float32)
+         + r_vmem[...].astype(jnp.float32)).astype(x_vmem.dtype)
+    x_vmem[...] = y
+    off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
+    st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
+                               sem_out)
+    st.start()
+    st.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "d", "in_ptr", "aux_ptr", "out_ptr",
+                     "interpret"),
+    donate_argnums=(0,))
+def ring_add(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
+             aux_ptr: int, out_ptr: int,
+             interpret: bool = False) -> jax.Array:
+    """``Out[t] = In[t] + Res[t]`` streamed one pixel row at a time; the
+    residual source rows die exactly as they are read (the planner held
+    them live until here)."""
+    n_seg = pool.shape[0]
+    chunk = _segs(d)
+    if n_seg % chunk or in_ptr % chunk or aux_ptr % chunk \
+            or out_ptr % chunk:
+        raise ValueError("pool/pointers not row aligned")
+    kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
+                               out_ptr=out_ptr, n_seg=n_seg, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ARBITRARY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool)
+
+
+# ---------------------------------------------------------------------------
+# Global average pool.
+# ---------------------------------------------------------------------------
+
+def _avgpool_kernel(pool_ref, out_ref, x_vmem, acc_vmem, sem_in, sem_out, *,
+                    in_ptr: int, out_ptr: int, n_seg: int, h: int, w: int,
+                    c: int):
+    p = pl.program_id(0)
+    segs = _segs(c)
+    off = jax.lax.rem(in_ptr + p * (w * segs), n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)], x_vmem,
+                                 sem_in)
+    load.start()
+    load.wait()
+    row = x_vmem[...].reshape(w, segs * SEG_WIDTH).astype(jnp.float32)
+    rowsum = jnp.sum(row, axis=0, keepdims=True)     # [1, segs*SEG]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_vmem[...] = jnp.zeros_like(acc_vmem)
+
+    acc_vmem[0:1, :] = acc_vmem[0:1, :] + rowsum
+
+    @pl.when(p == h - 1)
+    def _emit():
+        y = (acc_vmem[0:1, :] / (h * w)).astype(x_vmem.dtype)
+        x_vmem[pl.ds(0, segs)] = y.reshape(segs, SEG_WIDTH)
+        ooff = jax.lax.rem(out_ptr, n_seg)
+        st = pltpu.make_async_copy(x_vmem.at[pl.ds(0, segs)],
+                                   out_ref.at[pl.ds(ooff, segs)], sem_out)
+        st.start()
+        st.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "w", "c", "in_ptr", "out_ptr", "interpret"),
+    donate_argnums=(0,))
+def ring_avgpool(pool: jax.Array, *, h: int, w: int, c: int, in_ptr: int,
+                 out_ptr: int, interpret: bool = False) -> jax.Array:
+    """Global average pool ``[h, w, c] -> [1, 1, c]`` in the ring: one
+    image row accumulated per grid step, single output row at the end."""
+    n_seg = pool.shape[0]
+    segs = _segs(c)
+    if n_seg % (w * segs) or in_ptr % (w * segs) or out_ptr % segs:
+        raise ValueError("pool/pointers not aligned")
+    kernel = functools.partial(_avgpool_kernel, in_ptr=in_ptr,
+                               out_ptr=out_ptr, n_seg=n_seg, h=h, w=w, c=c)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ARBITRARY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((8, segs * SEG_WIDTH), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool)

@@ -1,0 +1,28 @@
+"""Regenerate the codegen golden files.
+
+Run after an intentional change to the emitted intrinsic skeletons or
+the planner's solved offsets:
+
+    PYTHONPATH=src python tests/golden/regen.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
+
+from test_codegen import _fused_program, _mini_net_program  # noqa: E402
+
+from repro.core.codegen import emit_program  # noqa: E402
+
+
+def main() -> None:
+    out = pathlib.Path(__file__).parent
+    units = emit_program(_mini_net_program(), "mini")
+    units.update(emit_program(_fused_program(), "fused"))
+    for name, src in units.items():
+        (out / name).write_text(src)
+        print("wrote", out / name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,18 @@
-"""Paper §6 compiler layer: intrinsic codegen from plans."""
+"""Paper §6 compiler layer: intrinsic codegen from plans and programs."""
+import pathlib
+
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
-from repro.core.codegen import (INTRINSICS, emit_fc_kernel,
+from repro.core.codegen import (INTRINSICS, emit_fc_kernel, emit_program,
                                 validate_kernel_source)
+from repro.core.graph_planner import MCUNET_5FPS_VWW
 from repro.core.planner import plan_gemm
+from repro.core.program import (AvgPoolSpec, ConvDWSpec, ConvPWSpec,
+                                ElementwiseSpec, FusedMLPSpec, GemmSpec,
+                                IBModuleSpec, ResidualAddSpec,
+                                plan_program)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
 
 
 def test_emitted_kernel_structure():
@@ -21,14 +27,91 @@ def test_emitted_kernel_structure():
     assert f"#define POOL_SEGS {plan.pool_segments}" in src
 
 
-@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6))
-@settings(max_examples=20, deadline=None)
-def test_codegen_valid_for_any_plan(m, n, k):
-    plan = plan_gemm(m, n, k, segment_bytes=8)
-    assert validate_kernel_source(emit_fc_kernel(plan, m, n, k))
-
-
 def test_plan_dim_mismatch_rejected():
     plan = plan_gemm(4, 2, 3, segment_bytes=16)
     with pytest.raises(ValueError):
         emit_fc_kernel(plan, 5, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# emit_program: one translation unit per op, golden-file pinned.
+# ---------------------------------------------------------------------------
+
+def _mini_net_program():
+    """Unfused residual module + head: covers conv_pw / conv_dw / add /
+    pool_avg / gemm units with nontrivial solved offsets."""
+    H, C, CM = 6, 32, 48
+    return plan_program(H * H, C,
+                        [ConvPWSpec(H, H, C, CM, activation="relu"),
+                         ConvDWSpec(H, H, CM, rs=3, activation="relu"),
+                         ConvPWSpec(H, H, CM, C),
+                         ResidualAddSpec(3),
+                         AvgPoolSpec(H, H, C),
+                         GemmSpec(4)],
+                        block_rows=1)
+
+
+def _fused_program():
+    """ib_fused + fused_mlp + elementwise units."""
+    cfg = MCUNET_5FPS_VWW[0]
+    return plan_program(400, 16, [IBModuleSpec(cfg)], block_rows=1)
+
+
+def test_emit_program_structure():
+    units = emit_program(_mini_net_program(), "mini")
+    assert len(units) == 6
+    kinds = [name.split("_", 2)[2][:-2] for name in units]
+    assert kinds == ["conv_pw", "conv_dw", "conv_pw", "add", "pool_avg",
+                     "gemm"]
+    for src in units.values():
+        assert "WRAP(" in src and "#define POOL_SEGS" in src
+        assert "RAMLoad" in src and "RAMStore" in src
+        assert "RAMFree" in src
+    # the residual unit reads the held source and frees it there
+    add_src = units["mini_op03_add.c"]
+    assert "Res@" in add_src and "residual source dies here" in add_src
+
+
+def test_emit_program_matches_golden_files():
+    """The emitted translation units are pinned byte-for-byte: any change
+    to the solved offsets or the intrinsic skeletons must be reviewed by
+    regenerating tests/golden/ (see test docstring)."""
+    units = emit_program(_mini_net_program(), "mini")
+    units.update(emit_program(_fused_program(), "fused"))
+    for name, src in units.items():
+        golden = GOLDEN / name
+        assert golden.exists(), f"missing golden file {name}; regenerate " \
+            "with tests/golden/regen.py"
+        assert src == golden.read_text(), f"{name} drifted from golden"
+
+
+def test_emit_program_rejects_plan_only():
+    from repro.core.program import plan_module_program
+    with pytest.raises(ValueError, match="executable"):
+        emit_program(plan_module_program(MCUNET_5FPS_VWW[0]))
+
+
+def test_fused_mlp_and_elementwise_units():
+    prog = plan_program(8, 256, [FusedMLPSpec(512, ff_tile=256),
+                                 ElementwiseSpec("relu")], block_rows=8)
+    units = emit_program(prog, "mlp")
+    assert "d_ff=512" in units["mlp_op00_fused_mlp.c"]
+    assert "elementwise relu" in units["mlp_op01_elementwise.c"]
+
+
+# ---------------------------------------------------------------------------
+# Property test (requires hypothesis).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_codegen_valid_for_any_plan(m, n, k):
+        plan = plan_gemm(m, n, k, segment_bytes=8)
+        assert validate_kernel_source(emit_fc_kernel(plan, m, n, k))

@@ -1,0 +1,98 @@
+"""Property test: solve_stream_offset is SAFE and TIGHT for random
+read/write frontiers, proven against the SegmentPool byte oracle.
+
+Safety: replaying the schedule with In placed ``delta`` bytes above Out
+never clobbers.  Tightness: ``delta - 1`` always clobbers (when
+``delta > 0``) — the solver returns the exact optimum, not a bound.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph_planner import solve_stream_offset
+from repro.core.pool import PoolClobberError, SegmentPool
+
+
+@st.composite
+def _schedules(draw):
+    """A random streaming schedule: per step, a set of input bytes read
+    (monotone-ish frontier with halo re-reads) and bytes written."""
+    steps = draw(st.integers(2, 12))
+    in_size = draw(st.integers(steps, 40))
+    halo = draw(st.integers(0, 3))
+    stride = draw(st.integers(1, 3))
+    out_per_step = draw(st.integers(1, 5))
+    reads = []
+    for t in range(steps):
+        base = min(t * stride, in_size - 1)
+        lo = max(0, base - halo)
+        hi = min(in_size - 1, base + halo)
+        reads.append(list(range(lo, hi + 1)))
+    return reads, in_size, out_per_step
+
+
+def _frontiers(reads, in_size, out_per_step):
+    steps = len(reads)
+    last_read = {}
+    for t, rs in enumerate(reads):
+        for r in rs:
+            last_read[r] = t
+    read_start = np.empty(steps, dtype=np.int64)
+    for t in range(steps):
+        needed = [r for r, lr in last_read.items() if lr >= t]
+        read_start[t] = min(needed) if needed else in_size
+    write_end = (np.arange(steps, dtype=np.int64) + 1) * out_per_step
+    return read_start, write_end, last_read
+
+
+def _replay(reads, in_size, out_per_step, last_read, delta):
+    """Drive the byte schedule through the clobber oracle at offset
+    ``delta``: Out at 0, In at ``delta``; rows below the frontier are
+    freed exactly as Eq. (2) models their death."""
+    steps = len(reads)
+    out_size = steps * out_per_step
+    n = max(in_size + max(delta, 0), out_size)
+    pool = SegmentPool(n, segment_bytes=1)
+    for b in range(in_size):
+        pool.write(delta + b, owner=("in", b))
+    written = 0
+    for t in range(steps):
+        for b in reads[t]:
+            pool.read(delta + b, owner=("in", b))
+        # free every byte the frontier has passed after this step's reads
+        needed = [r for r, lr in last_read.items() if lr >= t + 1]
+        frontier = min(needed) if needed else in_size
+        for b in range(in_size):
+            if b < frontier and pool.live and \
+                    pool._slots.get((delta + b) % n) is not None and \
+                    pool._slots[(delta + b) % n].owner == ("in", b):
+                pool.free(delta + b, owner=("in", b))
+        for b in range(written, (t + 1) * out_per_step):
+            pool.write(b, owner=("out", b))
+        written = (t + 1) * out_per_step
+    for b in range(out_size):
+        pool.read(b, owner=("out", b))
+
+
+@given(_schedules())
+@settings(max_examples=60, deadline=None)
+def test_solved_delta_is_clobber_free_and_tight(sched):
+    reads, in_size, out_per_step = sched
+    read_start, write_end, last_read = _frontiers(reads, in_size,
+                                                  out_per_step)
+    delta = solve_stream_offset(write_end, read_start)
+    assert delta >= 0
+    _replay(reads, in_size, out_per_step, last_read, delta)  # must pass
+    if delta > 0:
+        with pytest.raises(PoolClobberError):
+            _replay(reads, in_size, out_per_step, last_read, delta - 1)
+
+
+def test_known_gemm_case_matches_closed_form():
+    """m=1 GEMM in byte units: delta = N - 1 (Eq. 1)."""
+    K, N = 7, 4
+    read_start = np.zeros(N, dtype=np.int64)      # whole row needed
+    write_end = (np.arange(N, dtype=np.int64) + 1)
+    assert solve_stream_offset(write_end, read_start) == N - 1
