@@ -30,8 +30,8 @@ import time
 
 import jax
 
-from . import (capacity, energy_proxy, full_network, latency, multi_layer,
-               pool_footprint, roofline_table, single_layer)
+from . import (capacity, energy_proxy, full_network, int8_network, latency,
+               multi_layer, pool_footprint, roofline_table, single_layer)
 from .timing import bench_us
 
 BENCH_JSON = "BENCH_vmcu.json"
@@ -52,6 +52,7 @@ SECTIONS = [
     ("Table3_latency", latency.run, latency.main, False),
     ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
     ("Net_full_network", full_network.run, full_network.main, True),
+    ("Int8_full_network", int8_network.run, int8_network.main, True),
     ("Fig11_12_capacity", capacity.run, capacity.main, True),
     ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main, False),
     ("TPU_roofline_table", None, lambda rows: roofline_table.main(), False),
@@ -123,6 +124,10 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"net/{r['net']}/vmcu_bottleneck_kb"] = \
             r["vmcu_bottleneck_kb"]
         out[f"net/{r['net']}/exec_pool_kb"] = r["exec_pool_kb"]
+    for r in sections.get("Int8_full_network", []):
+        out[f"int8/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
+        out[f"int8/{r['net']}/int8_byte_ring_kb"] = r["int8_byte_ring_kb"]
+        out[f"int8/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]
     ml = sections.get("Fig9_10_multi_layer_ram", {})
     for net_key, rows in (ml.items() if isinstance(ml, dict) else []):
         for r in rows:

@@ -82,7 +82,40 @@ def run_program(program: PoolProgram, x: jax.Array, params, *,
     return y, pool
 
 
+def _normalize_qparams(program: PoolProgram, params):
+    """Validate int8 param entries — see DESIGN.md §8.
+
+    ``(w_q, b_q, mult, shift)`` for gemm/conv (int8 weight, int32 bias at
+    the accumulator scale, per-channel requant pair), ``(mult_in,
+    shift_in, mult_aux, shift_aux)`` for add, ``(mult, shift)`` for
+    pool_avg.
+    """
+    if params is None:
+        raise ValueError("quantized programs need explicit qparams "
+                         "(see graph.run.quantize_net)")
+    params = list(params)
+    if len(params) != len(program.ops):
+        raise ValueError(f"{len(params)} qparam entries for "
+                         f"{len(program.ops)} ops")
+    out = []
+    for op, p in zip(program.ops, params):
+        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+            w, b, mult, shift = p
+            if b is None:
+                b = jnp.zeros((op.d_out,), jnp.int32)
+            out.append((w, b, mult, shift))
+        elif op.kind in ("add", "pool_avg"):
+            out.append(tuple(p))
+        else:
+            raise NotImplementedError(
+                f"op kind {op.kind!r} has no int8 execution path — lower "
+                "the net with plan_net(..., fused_exec=False)")
+    return out
+
+
 def _normalize_params(program: PoolProgram, params):
+    if program.quantized:
+        return _normalize_qparams(program, params)
     if params is None:
         params = [None] * len(program.ops)
     params = list(params)
@@ -307,11 +340,146 @@ def pool_avg_ring(pool, *, op, n_segments):
     return stage_rows(pool, y.astype(pool.dtype), op.out_ptr, n_segments)
 
 
+# ---------------------------------------------------------------------------
+# jnp int8 ops: int8 gather -> int32 accumulate -> fixed-point requantize
+# on store.  Geometry (and therefore the sim certificate) is identical to
+# the fp32 path; only the element arithmetic changes (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+def _q_act(acc, activation):
+    """Int32-domain activation — the one shared definition
+    (:func:`repro.quant.requant.act_i32`)."""
+    from ..quant.requant import act_i32
+
+    return act_i32(acc, activation)
+
+
+def _fetch_image_q(pool, op, n):
+    x = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n)
+    return x.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.int32)
+
+
+def conv_pw_ring_q(pool, w, b, mult, shift, *, op, n_segments):
+    from ..quant.requant import requantize
+
+    img = _fetch_image_q(pool, op, n_segments)
+    ridx, cidx = _pw_maps(op)
+    sub = img[jnp.array(ridx)][:, jnp.array(cidx)]
+    acc = jnp.einsum("hwc,cd->hwd", sub, w.astype(jnp.int32))
+    acc = _q_act(acc + b.astype(jnp.int32), op.activation)
+    q = requantize(acc, mult[None, None, :], shift[None, None, :])
+    return _store_image(pool, op, q, n_segments)
+
+
+def conv_dw_ring_q(pool, w, b, mult, shift, *, op, n_segments):
+    from ..quant.requant import requantize
+
+    img = _fetch_image_q(pool, op, n_segments)
+    pad = (op.rs - 1) // 2
+    s = op.stride
+    padded = jnp.pad(img, ((pad, pad + s), (pad, pad + s), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_in), jnp.int32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + tap * w[r, c].astype(jnp.int32)[None, None]
+    acc = _q_act(acc + b.astype(jnp.int32), op.activation)
+    q = requantize(acc, mult[None, None, :], shift[None, None, :])
+    return _store_image(pool, op, q, n_segments)
+
+
+def gemm_ring_scan_q(pool, w, b, mult, shift, *, in_ptr, out_ptr, m_rows,
+                     n_segments, block_rows, d_in, d_out, activation):
+    from ..quant.requant import requantize
+
+    seg_w = pool.shape[1]
+    k_segs, n_segs = segments_for(d_in, seg_w), segments_for(d_out, seg_w)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+
+    def step(p, i):
+        ridx = (in_ptr + i * bk + jnp.arange(bk)) % n_segments
+        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
+        x = x[:, :d_in].astype(jnp.int32)
+        acc = jnp.dot(x, w.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+        acc = _q_act(acc + b.astype(jnp.int32), activation)
+        y = requantize(acc, mult[None, :], shift[None, :])
+        pad = n_segs * seg_w - d_out
+        if pad:
+            y = jnp.pad(y, ((0, 0), (0, pad)))
+        widx = (out_ptr + i * bn + jnp.arange(bn)) % n_segments
+        return p.at[widx].set(y.reshape(bn, seg_w).astype(p.dtype)), None
+
+    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
+    return pool
+
+
+def add_ring_q(pool, mult_in, shift_in, mult_aux, shift_aux, *, op,
+               n_segments):
+    """Residual add with both operands rescaled to the output scale:
+    ``sat8(rq(x, s_x/s_o) + rq(res, s_r/s_o))`` — CMSIS-NN's elementwise
+    -add form (each operand requantized once, sum clamped)."""
+    from ..quant.requant import requantize_i32
+
+    x = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n_segments)
+    res = fetch_rows(pool, op.aux_ptr, op.rows_in, op.d_in, n_segments)
+    ya = requantize_i32(x.astype(jnp.int32), mult_in, shift_in)
+    yb = requantize_i32(res.astype(jnp.int32), mult_aux, shift_aux)
+    q = jnp.clip(ya + yb, -128, 127).astype(jnp.int8)
+    return stage_rows(pool, q, op.out_ptr, n_segments)
+
+
+def pool_avg_ring_q(pool, mult, shift, *, op, n_segments):
+    """Global average pool: int32 SUM over the window, the ``1/(h*w)``
+    folded into the requant multiplier."""
+    from ..quant.requant import requantize
+
+    img = _fetch_image_q(pool, op, n_segments)
+    acc = jnp.sum(img, axis=(0, 1))[None, :]
+    q = requantize(acc, mult, shift)
+    return stage_rows(pool, q, op.out_ptr, n_segments)
+
+
+def _run_jnp_q(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
+    br = program.block_rows or 1
+    n = program.n_segments
+    for op, p in zip(program.ops, params):
+        rows = op.rows_in or program.m_rows
+        if op.kind == "gemm":
+            w, b, mult, shift = p
+            pool = gemm_ring_scan_q(pool, w, b, mult, shift,
+                                    in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                    m_rows=rows, n_segments=n,
+                                    block_rows=br, d_in=op.d_in,
+                                    d_out=op.d_out,
+                                    activation=op.activation)
+        elif op.kind == "conv_pw":
+            w, b, mult, shift = p
+            pool = conv_pw_ring_q(pool, w, b, mult, shift, op=op,
+                                  n_segments=n)
+        elif op.kind == "conv_dw":
+            w, b, mult, shift = p
+            pool = conv_dw_ring_q(pool, w, b, mult, shift, op=op,
+                                  n_segments=n)
+        elif op.kind == "add":
+            mi, si, ma, sa = p
+            pool = add_ring_q(pool, mi, si, ma, sa, op=op, n_segments=n)
+        elif op.kind == "pool_avg":
+            mult, shift = p
+            pool = pool_avg_ring_q(pool, mult, shift, op=op, n_segments=n)
+        else:
+            raise NotImplementedError(f"no int8 jnp path for {op.kind}")
+    return pool
+
+
 @functools.partial(jax.jit, static_argnames=("program",),
                    donate_argnums=(0,))
 def _run_jnp(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
     br = program.block_rows or 1
     n = program.n_segments
+    if program.quantized:
+        return _run_jnp_q(pool, params, program)
     for op, p in zip(program.ops, params):
         rows = op.rows_in or program.m_rows
         if op.kind == "gemm":
@@ -383,6 +551,10 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
         interpret = jax.default_backend() != "tpu"
     arr = _as_array(pool)
     br = program.block_rows
+    if program.quantized:
+        return _like_input(pool, _run_pallas_q(
+            arr, _normalize_params(program, params), program, br,
+            interpret))
     for op, p in zip(program.ops, _normalize_params(program, params)):
         rows = op.rows_in or program.m_rows
         if op.kind == "gemm":
@@ -438,6 +610,58 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
         else:
             raise NotImplementedError(op.kind)
     return _like_input(pool, arr)
+
+
+def _run_pallas_q(arr, params, program: PoolProgram, br, interpret):
+    """Int8 program on the Pallas ring kernels (``kernels.quantized``)."""
+    from ..kernels.quantized import (ring_add_q, ring_avgpool_q,
+                                     ring_conv_dw_q, ring_conv_pw_q,
+                                     ring_gemm_q)
+
+    for op, p in zip(program.ops, params):
+        rows = op.rows_in or program.m_rows
+        if op.kind == "gemm":
+            w, b, mult, shift = p
+            arr = ring_gemm_q(arr, w, b, mult, shift, m_rows=rows,
+                              d_in=op.d_in, d_out=op.d_out,
+                              in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                              block_rows=br, activation=op.activation,
+                              interpret=interpret)
+        elif op.kind == "conv_pw":
+            w, b, mult, shift = p
+            arr = ring_conv_pw_q(arr, w, b, mult, shift, h_in=op.h_in,
+                                 w_in=op.w_in, h_out=op.h_out,
+                                 w_out=op.w_out, c_in=op.d_in,
+                                 c_out=op.d_out, stride=op.stride,
+                                 resample=op.resample, in_ptr=op.in_ptr,
+                                 out_ptr=op.out_ptr,
+                                 activation=op.activation,
+                                 interpret=interpret)
+        elif op.kind == "conv_dw":
+            w, b, mult, shift = p
+            arr = ring_conv_dw_q(arr, w, b, mult, shift, h_in=op.h_in,
+                                 w_in=op.w_in, h_out=op.h_out,
+                                 w_out=op.w_out, c=op.d_in, rs=op.rs,
+                                 stride=op.stride, in_ptr=op.in_ptr,
+                                 out_ptr=op.out_ptr,
+                                 activation=op.activation,
+                                 interpret=interpret)
+        elif op.kind == "add":
+            mi, si, ma, sa = p
+            arr = ring_add_q(arr, rows=rows, d=op.d_in, in_ptr=op.in_ptr,
+                             aux_ptr=op.aux_ptr, out_ptr=op.out_ptr,
+                             mult_in=mi, shift_in=si, mult_aux=ma,
+                             shift_aux=sa, interpret=interpret)
+        elif op.kind == "pool_avg":
+            mult, shift = p
+            arr = ring_avgpool_q(arr, h=op.h_in, w=op.w_in, c=op.d_in,
+                                 in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                 mult=mult, shift=shift,
+                                 interpret=interpret)
+        else:
+            raise NotImplementedError(
+                f"no int8 pallas kernel for {op.kind}")
+    return arr
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,32 @@ EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise", "conv_pw",
                     "conv_dw", "ib_fused", "add", "pool_avg")
 PLAN_ONLY_KINDS = ("fused_chain", "inverted_bottleneck")
 
+# Pool element dtypes a program can be planned for.  The name is the
+# program's ``dtype`` field (a plain string so PoolProgram stays hashable
+# as a static jit argument); the value is the element itemsize that every
+# ``segment_bytes`` derivation uses — nothing in the planner assumes 4
+# bytes anymore.  ``"int8"`` additionally selects QUANTIZED execution
+# (qparams, int32 accumulate + requantize — DESIGN.md §8); ``"byte"`` is
+# the accounting-only 1-byte label (numpy's int8 alias) legacy
+# ``elem_bytes=1`` callers get, which keeps the float executor paths.
+DTYPE_ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+                  "byte": 1}
+
+# Representative dtype per element width, for legacy callers that pass
+# only ``elem_bytes`` (the label matters only for ``PoolProgram.spec()``
+# defaults; explicit spec(dtype=...) overrides it).  Deliberately NOT
+# "int8" for width 1: quantized execution must be opted into explicitly
+# via dtype="int8", never inferred from a byte width.
+_DTYPE_FOR_BYTES = {4: "float32", 2: "bfloat16", 1: "byte"}
+
+
+def dtype_itemsize(dtype: str) -> int:
+    try:
+        return DTYPE_ITEMSIZE[dtype]
+    except KeyError:
+        raise ValueError(f"unknown pool dtype {dtype!r}; known: "
+                         f"{sorted(DTYPE_ITEMSIZE)}") from None
+
 # Element-wise maps usable as gemm epilogues / elementwise ops.  Every fn
 # must map 0 -> 0 so segment padding columns stay zero through the ring.
 ACTIVATIONS = {
@@ -265,11 +291,16 @@ class PoolProgram:
     pool_segments: int
     elem_bytes: int
     ops: tuple[PoolOp, ...]
+    dtype: str = "float32"    # pool element dtype (DTYPE_ITEMSIZE key)
 
     # -- classification ----------------------------------------------------
     @property
     def executable(self) -> bool:
         return all(op.kind in EXECUTABLE_KINDS for op in self.ops)
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype == "int8"
 
     @property
     def aligned(self) -> bool:
@@ -336,7 +367,30 @@ class PoolProgram:
     def spec(self, dtype=None) -> PoolSpec:
         import jax.numpy as jnp
         return PoolSpec(self.n_segments, self.seg_width,
-                        jnp.float32 if dtype is None else dtype)
+                        jnp.dtype(self.dtype) if dtype is None else dtype)
+
+    def with_dtype(self, dtype: str) -> "PoolProgram":
+        """The SAME solved plan re-typed for another pool element dtype.
+
+        Segment geometry (offsets, deltas, schedules — and therefore the
+        sim-oracle certificate) is dtype-independent; only the byte
+        accounting changes: every op's ``segment_bytes`` and the
+        program's ``elem_bytes`` are re-derived from the new itemsize.
+        ``with_dtype("float32")`` of a default program is the identity,
+        so legacy fp32 footprints stay bit-identical.
+        """
+        eb = dtype_itemsize(dtype)
+        if dtype == self.dtype and eb == self.elem_bytes:
+            return self
+        if not self.executable:
+            raise ValueError("plan-only byte-granular programs are already "
+                             "int8 (segment_bytes == 1); with_dtype applies "
+                             "to executable programs")
+        ops = tuple(dataclasses.replace(op,
+                                        segment_bytes=self.seg_width * eb)
+                    for op in self.ops)
+        return dataclasses.replace(self, dtype=dtype, elem_bytes=eb,
+                                   ops=ops)
 
     # -- validation --------------------------------------------------------
     def op_blocks(self, op: PoolOp) -> tuple[int, int]:
@@ -412,7 +466,8 @@ def _conv_state(spec, rows: int, dim: int, img, pos: int):
 
 def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                  seg_width: int = SEG_WIDTH, block_rows: int | None = None,
-                 elem_bytes: int = 4, delta_slack: int = 0) -> PoolProgram:
+                 elem_bytes: int | None = None, dtype: str | None = None,
+                 delta_slack: int = 0) -> PoolProgram:
     """Solve segment offsets for a layer sequence over ONE virtual pool.
 
     ``block_rows=None`` keeps the exact Eq.-(1) geometry (``sim``/``jnp``
@@ -421,6 +476,12 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     preserved; ``pool_segments`` still reports the tight footprint).
     Conv-family specs (whole-network programs) use one image row as their
     DMA block regardless of ``block_rows``.
+
+    ``dtype`` sets the pool element type the byte accounting uses
+    (``"int8"`` programs report ``pool_bytes`` at 1 byte/element — the
+    deployable MCU footprint); segment geometry itself is
+    dtype-independent.  ``elem_bytes`` defaults to the dtype's itemsize
+    and may not contradict it.
 
     Residual modules (:class:`ResidualAddSpec`) make the planner *hold*
     the source tensor: every op between the source and the add places its
@@ -433,6 +494,15 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     """
     from . import rowsched
 
+    if dtype is None:   # legacy elem_bytes-only callers: derive the label
+        dtype = (_DTYPE_FOR_BYTES.get(elem_bytes, "float32")
+                 if elem_bytes is not None else "float32")
+    if elem_bytes is None:
+        elem_bytes = dtype_itemsize(dtype)
+    elif elem_bytes != dtype_itemsize(dtype):
+        raise ValueError(f"elem_bytes={elem_bytes} contradicts "
+                         f"dtype={dtype!r} "
+                         f"(itemsize {dtype_itemsize(dtype)})")
     layers = list(layers)
     if not layers:
         raise ValueError("need at least one layer spec")
@@ -711,7 +781,7 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     return PoolProgram(m_rows=m_rows, seg_width=seg_width,
                        block_rows=block_rows, n_segments=n_segments,
                        pool_segments=pool_segments, elem_bytes=elem_bytes,
-                       ops=tuple(ops))
+                       dtype=dtype, ops=tuple(ops))
 
 
 def _conv_state_pool(spec, rows, dim, img, pos):
@@ -752,7 +822,7 @@ def _plan_analytic(m_rows: int, d_in: int, spec) -> PoolProgram:
                   + op.workspace_bytes)
     return PoolProgram(m_rows=m_rows, seg_width=1, block_rows=None,
                        n_segments=pool_bytes, pool_segments=pool_bytes,
-                       elem_bytes=1, ops=(op,))
+                       elem_bytes=1, dtype="byte", ops=(op,))
 
 
 def plan_module_program(cfg, workspace: str = "paper_11seg") -> PoolProgram:
@@ -796,8 +866,9 @@ def concat_programs(programs: Sequence[PoolProgram]) -> PoolProgram:
         raise ValueError("need at least one program")
     base = programs[0]
     if any(p.seg_width != base.seg_width or p.elem_bytes != base.elem_bytes
-           for p in programs):
-        raise ValueError("programs must share seg_width and elem_bytes")
+           or p.dtype != base.dtype for p in programs):
+        raise ValueError("programs must share seg_width, elem_bytes and "
+                         "dtype")
     aligned = base.aligned
     if any(p.aligned != aligned for p in programs):
         raise ValueError("cannot mix aligned and tight programs")
@@ -853,4 +924,5 @@ def concat_programs(programs: Sequence[PoolProgram]) -> PoolProgram:
     return PoolProgram(m_rows=base.m_rows, seg_width=base.seg_width,
                        block_rows=base.block_rows, n_segments=n_segments,
                        pool_segments=pool_segments,
-                       elem_bytes=base.elem_bytes, ops=tuple(merged))
+                       elem_bytes=base.elem_bytes, dtype=base.dtype,
+                       ops=tuple(merged))

@@ -20,7 +20,9 @@ from .ir import Graph, Node, Tensor, build_mcunet, build_mlp_tower
 from .schedule import (FusionGroup, peak_live_bytes, reorder, select_groups,
                        tensor_lifetimes)
 from .netplan import GroupPlan, NetPlan, plan_net
-from .run import (certify_net, init_net_params, reference_forward, run_net)
+from .run import (QuantizedNet, certify_net, init_net_params,
+                  quantize_net, quantized_agreement, reference_forward,
+                  run_net, run_net_quantized)
 
 __all__ = [
     "Graph", "Node", "Tensor", "build_mcunet", "build_mlp_tower",
@@ -28,4 +30,6 @@ __all__ = [
     "tensor_lifetimes",
     "GroupPlan", "NetPlan", "plan_net",
     "certify_net", "init_net_params", "reference_forward", "run_net",
+    "QuantizedNet", "quantize_net", "quantized_agreement",
+    "run_net_quantized",
 ]

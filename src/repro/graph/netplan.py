@@ -163,20 +163,30 @@ def group_specs(graph: Graph, group: FusionGroup) -> list[LayerSpec]:
 # ---------------------------------------------------------------------------
 
 def plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
-             block_rows: int | None = 1, elem_bytes: int = 4,
-             delta_slack: int = 0,
+             block_rows: int | None = 1, elem_bytes: int | None = None,
+             dtype: str = "float32", delta_slack: int = 0,
+             fused_exec: bool = True,
              order: Sequence[str] | None = None) -> NetPlan:
     """Plan a whole network into one ring.
 
     ``block_rows=1`` (default) produces the DMA-aligned geometry all
     three backends execute; ``block_rows=None`` the tight Eq.-(1)/(2)
     geometry (``sim``/``jnp`` only).
+
+    ``dtype`` sets the executed pool element type (``"int8"`` makes
+    ``program.pool_bytes`` byte-comparable to ``mcu_bottleneck_bytes``).
+    ``fused_exec=False`` forces every module to lower to its unfused
+    pw → dw → pw (→ add) op run — the form the int8 executor requantizes
+    between ops (the byte-granular *reported* footprints still follow
+    the paper's exclusion rule either way).
     """
     graph.validate()
     if order is None:
         order, _ = reorder(graph)
     order = list(order)
     groups = select_groups(graph, order, seg_width=seg_width)
+    if not fused_exec:
+        groups = [dataclasses.replace(g, fused_exec=False) for g in groups]
 
     specs: list[LayerSpec] = []
     ranges: list[tuple[int, int]] = []
@@ -188,7 +198,7 @@ def plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
     tin = graph.nodes[graph.input_id()].out
     program = plan_program(tin.rows, tin.d, specs, seg_width=seg_width,
                            block_rows=block_rows, elem_bytes=elem_bytes,
-                           delta_slack=delta_slack)
+                           dtype=dtype, delta_slack=delta_slack)
 
     # Chain the byte-granular group plans across boundaries (Eq. 2): the
     # next group's input IS this group's output, delta_bytes below it.

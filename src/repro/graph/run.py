@@ -10,6 +10,8 @@ ring backends.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -81,12 +83,17 @@ def _conv_ref(img, w, *, stride: int, pad_lo: int, h_out: int, w_out: int,
     return out[0]
 
 
-def reference_forward(plan, x: jax.Array, params) -> jax.Array:
+def reference_forward(plan, x: jax.Array, params, *,
+                      intermediates: list | None = None) -> jax.Array:
     """Plain-XLA forward pass of the planned network (no pool).
 
     ``x`` is ``[rows, d]`` — the flattened input image.  Residual ``add``
     ops read the saved input of their source op, exactly as the ring
     executors read the held interval.
+
+    ``intermediates`` (if a list) collects the float input tensor of
+    every op followed by the network output — the taps int8 calibration
+    (:func:`quantize_net`) derives its activation scales from.
     """
     from ..core.rowsched import resample_src
 
@@ -95,6 +102,8 @@ def reference_forward(plan, x: jax.Array, params) -> jax.Array:
     cur = x.astype(jnp.float32)
     for i, (op, p) in enumerate(zip(program.ops, params)):
         saved[i] = cur
+        if intermediates is not None:
+            intermediates.append(cur)
         act = resolve_activation(op.activation)
         if op.kind in ("gemm", "conv_pw"):
             w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
@@ -151,6 +160,8 @@ def reference_forward(plan, x: jax.Array, params) -> jax.Array:
             cur = act(cur)
         else:
             raise NotImplementedError(op.kind)
+    if intermediates is not None:
+        intermediates.append(cur)
     return cur
 
 
@@ -172,3 +183,157 @@ def certify_net(plan):
     is provably safe when this returns.
     """
     return execute(_prog(plan), backend="sim")
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized execution (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+_Q_KINDS = ("gemm", "conv_pw", "conv_dw", "add", "pool_avg")
+_Q_ACTIVATIONS = (None, "identity", "relu")
+
+
+@dataclasses.dataclass
+class QuantizedNet:
+    """A calibrated int8 deployment of one planned network.
+
+    ``program`` is the SAME solved plan re-typed int8
+    (``with_dtype("int8")`` — segment geometry, and therefore the sim
+    certificate, is shared with the float plan); ``qparams`` are the
+    per-op executor entries (int8 weights, int32 biases, requant
+    multiplier/shift constants); ``act_scales[i]`` is the symmetric
+    scale of tensor ``i`` (0 = network input, ``i`` = output of op
+    ``i-1``)."""
+
+    plan: object                       # the float NetPlan / PoolProgram
+    program: "PoolProgram"             # int8-typed program
+    params: list                       # float params (reference forward)
+    qparams: list                      # int8 executor entries
+    act_scales: tuple[float, ...]
+
+    @property
+    def in_scale(self) -> float:
+        return self.act_scales[0]
+
+    @property
+    def out_scale(self) -> float:
+        return self.act_scales[-1]
+
+    @property
+    def pool_bytes(self) -> int:
+        """The executed int8 ring footprint — byte-comparable to the
+        byte-granular ``mcu_bottleneck_bytes`` now."""
+        return self.program.pool_bytes
+
+
+def _check_quantizable(program: PoolProgram) -> None:
+    for op in program.ops:
+        if op.kind not in _Q_KINDS:
+            raise ValueError(
+                f"op kind {op.kind!r} has no int8 execution path — plan "
+                "the net with plan_net(..., fused_exec=False) so modules "
+                "lower to their unfused pw/dw/pw(/add) runs")
+        if op.activation not in _Q_ACTIVATIONS:
+            raise ValueError(f"activation {op.activation!r} has no int8 "
+                             "form (relu/None only)")
+
+
+def quantize_net(plan, params, *, calib: jax.Array | None = None,
+                 n_calib: int = 2, key=None) -> QuantizedNet:
+    """Calibrate an int8 deployment from the float reference forward.
+
+    ``plan`` must lower to the unfused op vocabulary (``plan_net(...,
+    fused_exec=False)``); ``calib`` is ``[n, rows, d]`` float calibration
+    inputs (random normal when omitted).  Per-tensor symmetric activation
+    scales come from the amax over the captured reference intermediates;
+    weights are per-output-channel; every op gets CMSIS-NN-style
+    ``(multiplier, shift)`` requant constants relating
+    ``s_in * s_w[c] / s_out``.
+    """
+    from ..quant import (calibrate, quantize, quantize_bias, requant_pair,
+                         requant_scalar)
+
+    program = _prog(plan)
+    _check_quantizable(program)
+    if calib is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        calib = jax.random.normal(
+            key, (n_calib, program.in_rows, program.in_dim))
+
+    # 1. activation scales from the captured reference intermediates
+    n_ops = len(program.ops)
+    amax = [0.0] * (n_ops + 1)
+    for x in calib:
+        taps: list = []
+        reference_forward(program, x, params, intermediates=taps)
+        for i, t in enumerate(taps):
+            amax[i] = max(amax[i], float(jnp.abs(t).max()))
+    act_qps = [calibrate(jnp.array([a])) for a in amax]
+    act_scales = tuple(float(qp.scale) for qp in act_qps)
+
+    # 2. per-op weight quantization + requant constants
+    qparams: list = []
+    for i, (op, p) in enumerate(zip(program.ops, params)):
+        s_in, s_out = act_scales[i], act_scales[i + 1]
+        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+            w, b = p if p[1] is not None else (p[0], None)
+            axis = 2 if op.kind == "conv_dw" else 1
+            w_qp = calibrate(w, axis=axis)
+            w_q = quantize(w, w_qp)
+            b_q = (quantize_bias(b, s_in, w_qp) if b is not None
+                   else jnp.zeros((op.d_out,), jnp.int32))
+            mult, shift = requant_pair(s_in, w_qp, s_out)
+            qparams.append((w_q, b_q, mult, shift))
+        elif op.kind == "add":
+            s_aux = act_scales[op.aux_op]   # the held source is op
+            #                                 aux_op's INPUT tensor
+            m_i, s_i = requant_scalar(s_in / s_out)
+            m_a, s_a = requant_scalar(s_aux / s_out)
+            qparams.append((m_i, s_i, m_a, s_a))
+        elif op.kind == "pool_avg":
+            m, s = requant_scalar(s_in / (op.h_in * op.w_in * s_out))
+            qparams.append((m, s))
+    return QuantizedNet(plan=plan, program=program.with_dtype("int8"),
+                        params=list(params), qparams=qparams,
+                        act_scales=act_scales)
+
+
+def run_net_quantized(qnet: QuantizedNet, x: jax.Array, *,
+                      backend: str = "jnp", **kwargs) -> jax.Array:
+    """Quantize ``x``, execute the int8 program on the ring, dequantize.
+
+    The pool is an int8 array — ``n_segments * seg_width`` BYTES of
+    state, the deployable footprint — and every op accumulates in int32
+    and requantizes on store (sim certifies the identical schedule)."""
+    from ..quant import QParams, dequantize, quantize
+
+    x_q = quantize(x, QParams(scale=qnet.in_scale))
+    y_q, _pool = run_program(qnet.program, x_q, qnet.qparams,
+                             backend=backend, **kwargs)
+    return dequantize(y_q, QParams(scale=qnet.out_scale))
+
+
+def quantized_agreement(qnet: QuantizedNet, *, n: int = 8, key=None,
+                        backend: str = "jnp") -> dict:
+    """Top-line int8-vs-float agreement over random inputs.
+
+    Returns ``cosine`` (mean cosine similarity of the flattened
+    outputs), ``argmax_agreement`` (fraction of inputs whose top-1
+    output index matches) and ``n``."""
+    import numpy as np
+
+    if key is None:
+        key = jax.random.PRNGKey(42)
+    program = qnet.program
+    xs = jax.random.normal(key, (n, program.in_rows, program.in_dim))
+    cos, agree = [], []
+    for x in xs:
+        ref = np.asarray(reference_forward(program, x, qnet.params))
+        got = np.asarray(run_net_quantized(qnet, x, backend=backend))
+        a, b = ref.ravel(), got.ravel()
+        denom = (np.linalg.norm(a) * np.linalg.norm(b)) or 1.0
+        cos.append(float(a @ b / denom))
+        agree.append(int(np.argmax(a) == np.argmax(b)))
+    return {"cosine": float(np.mean(cos)),
+            "argmax_agreement": float(np.mean(agree)), "n": n}

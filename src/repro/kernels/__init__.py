@@ -5,6 +5,9 @@
   inverted_bottleneck — fused PW→DW→PW(→add) module (paper Fig. 6)
   conv2d              — ring pointwise/depthwise conv, residual add,
                         global avgpool (whole-network ops, DESIGN.md §7)
+  quantized           — the int8 forms of gemm/conv_pw/conv_dw/add/
+                        avgpool: int32 accumulate + fixed-point
+                        requantize on store (DESIGN.md §8)
   elementwise         — in-place ring elementwise (delta == 0 pool ops)
   ring_decode         — decode attention over a ring KV cache
 
@@ -16,3 +19,5 @@ from .conv2d import ring_add, ring_avgpool, ring_conv_dw, ring_conv_pw
 from .elementwise import ring_elementwise
 from .ops import (SEG_WIDTH, decode_attention, fused_mlp, ring_cache_update,
                   segment_gemm)
+from .quantized import (ring_add_q, ring_avgpool_q, ring_conv_dw_q,
+                        ring_conv_pw_q, ring_gemm_q)

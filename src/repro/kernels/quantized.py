@@ -1,0 +1,426 @@
+"""Int8 ring kernels — the quantized whole-network PoolOps on TPU.
+
+Every kernel follows the fp32 skeletons (``segment_matmul`` /
+``conv2d``): the int8 pool stays in HBM/ARBITRARY, async copies perform
+the ``addr % n_segments`` circular-buffer bounds check, and input/output
+aliasing updates the pool in place.  What changes is the element math —
+the MCU deployment form:
+
+  * loads are int8 segments (one pool segment is now ``SEG_WIDTH`` bytes,
+    so the executed ring is byte-comparable to the paper's
+    ``mcu_bottleneck_bytes``),
+  * the Dot accumulates in int32 (MXU int8 path;
+    ``preferred_element_type=jnp.int32`` — the SMLAD/``VMLADAVA.S8``
+    analogue),
+  * the store epilogue is the CMSIS-NN fixed-point requantization
+    (:func:`repro.quant.requant.requantize`: multiplier+shift,
+    round-to-nearest-even, saturating int8) with per-output-channel
+    constants streamed from "Flash" like the weights.
+
+Scalar requant pairs (residual add, avgpool) are static kernel
+parameters; per-channel pairs ride as int32 operands next to the bias.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..quant.requant import act_i32 as _q_act
+from ..quant.requant import requantize, requantize_i32
+from .segment_matmul import SEG_WIDTH, _segs
+
+
+# ---------------------------------------------------------------------------
+# GEMM.
+# ---------------------------------------------------------------------------
+
+def _gemm_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
+                 y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+                 n_seg: int, block_rows: int, d_in: int, d_out: int,
+                 activation: str | None):
+    i = pl.program_id(0)
+    k_segs, n_segs = _segs(d_in), _segs(d_out)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+    in_off = jax.lax.rem(in_ptr + i * bk, n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(in_off, bk)], x_vmem,
+                                 sem_in)
+    load.start()
+    load.wait()
+    x = x_vmem[...].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
+    acc = jnp.dot(x.astype(jnp.int32), w_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
+    y = requantize(acc, m_ref[...][None, :], s_ref[...][None, :])
+    pad = n_segs * SEG_WIDTH - d_out
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    y_vmem[...] = y.reshape(bn, SEG_WIDTH)
+    out_off = jax.lax.rem(out_ptr + i * bn, n_seg)
+    store = pltpu.make_async_copy(y_vmem, out_ref.at[pl.ds(out_off, bn)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_rows", "d_in", "d_out", "in_ptr", "out_ptr",
+                     "block_rows", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_gemm_q(pool: jax.Array, w: jax.Array, b: jax.Array,
+                mult: jax.Array, shift: jax.Array, *, m_rows: int,
+                d_in: int, d_out: int, in_ptr: int, out_ptr: int,
+                block_rows: int = 8, activation: str | None = None,
+                interpret: bool = False) -> jax.Array:
+    """Int8 Fig.-4 FC kernel: int8 In @ int8 W -> int32 acc -> requantize
+    per output channel on store."""
+    n_seg = pool.shape[0]
+    k_segs, n_segs = _segs(d_in), _segs(d_out)
+    bk, bn = block_rows * k_segs, block_rows * n_segs
+    if m_rows % block_rows:
+        raise ValueError("block_rows must divide m_rows")
+    if n_seg % math.lcm(bk, bn) or in_ptr % bk or out_ptr % bn:
+        raise ValueError("pool/pointers not block-aligned")
+    kernel = functools.partial(
+        _gemm_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        block_rows=block_rows, d_in=d_in, d_out=d_out,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((bn, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b, mult, shift)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise conv.
+# ---------------------------------------------------------------------------
+
+def _pw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
+               y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+               n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
+               c_in: int, c_out: int, stride: int, resample: bool,
+               activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if resample:
+        src = jax.lax.div(p * h_in, h_out)
+    else:
+        src = p * stride
+    off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                 x_vmem, sem_in)
+    load.start()
+    load.wait()
+    x = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in]
+    q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    cols = (q * w_in) // w_out if resample else q * stride
+    xs = jnp.take(x, cols, axis=0).astype(jnp.int32)
+    acc = jnp.dot(xs, w_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
+    y = requantize(acc, m_ref[...][None, :], s_ref[...][None, :])
+    pad = nsegs * SEG_WIDTH - c_out
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "stride", "resample", "in_ptr", "out_ptr",
+                     "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_pw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
+                   mult: jax.Array, shift: jax.Array, *, h_in: int,
+                   w_in: int, h_out: int, w_out: int, c_in: int,
+                   c_out: int, stride: int = 1, resample: bool = False,
+                   in_ptr: int = 0, out_ptr: int = 0,
+                   activation: str | None = None,
+                   interpret: bool = False) -> jax.Array:
+    """Int8 pointwise conv in the ring, one output image row per step."""
+    n_seg = pool.shape[0]
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
+            or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _pw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
+        c_out=c_out, stride=stride, resample=resample,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((c_in, c_out), lambda p: (0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b, mult, shift)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv.
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
+               y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+               n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
+               c: int, rs: int, stride: int, activation: str | None):
+    p = pl.program_id(0)
+    segs = _segs(c)
+    pad = (rs - 1) // 2
+    acc = jnp.zeros((w_out, c), jnp.int32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(rs):
+        src = p * stride - pad + r
+        valid_r = (src >= 0) & (src < h_in)
+        srcc = jnp.clip(src, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
+        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
+                                     x_vmem, sem_in)
+        load.start()
+        load.wait()
+        row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
+            .astype(jnp.int32)
+        for s in range(rs):
+            cols = qs * stride - pad + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.where(ok, tap, 0) \
+                * w_ref[r, s].astype(jnp.int32)[None, :]
+    acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
+    y = requantize(acc, m_ref[...][None, :], s_ref[...][None, :])
+    padw = segs * SEG_WIDTH - c
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * segs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * segs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * segs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c", "rs", "stride",
+                     "in_ptr", "out_ptr", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
+                   mult: jax.Array, shift: jax.Array, *, h_in: int,
+                   w_in: int, h_out: int, w_out: int, c: int, rs: int = 3,
+                   stride: int = 1, in_ptr: int = 0, out_ptr: int = 0,
+                   activation: str | None = None,
+                   interpret: bool = False) -> jax.Array:
+    """Int8 depthwise RSxRS conv ('same' padding) inside the ring."""
+    n_seg = pool.shape[0]
+    segs = _segs(c)
+    if n_seg % (w_in * segs) or n_seg % (w_out * segs) \
+            or in_ptr % (w_in * segs) or out_ptr % (w_out * segs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _dw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg, h_in=h_in,
+        w_in=w_in, h_out=h_out, w_out=w_out, c=c, rs=rs, stride=stride,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((rs, rs, c), lambda p: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda p: (0,)),
+            pl.BlockSpec((c,), lambda p: (0,)),
+            pl.BlockSpec((c,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * segs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b, mult, shift)
+
+
+# ---------------------------------------------------------------------------
+# Residual add.
+# ---------------------------------------------------------------------------
+
+def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
+                in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
+                chunk: int, mult_in: int, shift_in: int, mult_aux: int,
+                shift_aux: int):
+    t = pl.program_id(0)
+    off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
+    off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
+    cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)], x_vmem,
+                                sem_in)
+    cp1.start()
+    cp1.wait()
+    cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)], r_vmem,
+                                sem_in)
+    cp2.start()
+    cp2.wait()
+    ya = requantize_i32(x_vmem[...].astype(jnp.int32), mult_in, shift_in)
+    yb = requantize_i32(r_vmem[...].astype(jnp.int32), mult_aux, shift_aux)
+    x_vmem[...] = jnp.clip(ya + yb, -128, 127).astype(x_vmem.dtype)
+    off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
+    st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
+                               sem_out)
+    st.start()
+    st.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "d", "in_ptr", "aux_ptr", "out_ptr",
+                     "mult_in", "shift_in", "mult_aux", "shift_aux",
+                     "interpret"),
+    donate_argnums=(0,))
+def ring_add_q(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
+               aux_ptr: int, out_ptr: int, mult_in: int, shift_in: int,
+               mult_aux: int, shift_aux: int,
+               interpret: bool = False) -> jax.Array:
+    """Int8 residual add: both operands requantized to the output scale,
+    summed, saturated — streamed one pixel row at a time."""
+    n_seg = pool.shape[0]
+    chunk = _segs(d)
+    if n_seg % chunk or in_ptr % chunk or aux_ptr % chunk \
+            or out_ptr % chunk:
+        raise ValueError("pool/pointers not row aligned")
+    kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
+                               out_ptr=out_ptr, n_seg=n_seg, chunk=chunk,
+                               mult_in=mult_in, shift_in=shift_in,
+                               mult_aux=mult_aux, shift_aux=shift_aux)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ARBITRARY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool)
+
+
+# ---------------------------------------------------------------------------
+# Global average pool.
+# ---------------------------------------------------------------------------
+
+def _avgpool_kernel(pool_ref, out_ref, x_vmem, y_vmem, acc_vmem, sem_in,
+                    sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
+                    h: int, w: int, c: int, mult: int, shift: int):
+    p = pl.program_id(0)
+    segs = _segs(c)
+    off = jax.lax.rem(in_ptr + p * (w * segs), n_seg)
+    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)], x_vmem,
+                                 sem_in)
+    load.start()
+    load.wait()
+    row = x_vmem[...].reshape(w, segs * SEG_WIDTH).astype(jnp.int32)
+    rowsum = jnp.sum(row, axis=0, keepdims=True)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_vmem[...] = jnp.zeros_like(acc_vmem)
+
+    acc_vmem[0:1, :] = acc_vmem[0:1, :] + rowsum
+
+    @pl.when(p == h - 1)
+    def _emit():
+        # the 1/(h*w) mean normalization is folded into the multiplier
+        y = requantize(acc_vmem[0:1, :], mult, shift)
+        y_vmem[...] = y.reshape(segs, SEG_WIDTH)
+        ooff = jax.lax.rem(out_ptr, n_seg)
+        st = pltpu.make_async_copy(y_vmem, out_ref.at[pl.ds(ooff, segs)],
+                                   sem_out)
+        st.start()
+        st.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "w", "c", "in_ptr", "out_ptr", "mult", "shift",
+                     "interpret"),
+    donate_argnums=(0,))
+def ring_avgpool_q(pool: jax.Array, *, h: int, w: int, c: int, in_ptr: int,
+                   out_ptr: int, mult: int, shift: int,
+                   interpret: bool = False) -> jax.Array:
+    """Int8 global average pool: int32 row sums accumulated in VMEM, one
+    requantized output row stored at the last step."""
+    n_seg = pool.shape[0]
+    segs = _segs(c)
+    if n_seg % (w * segs) or in_ptr % (w * segs) or out_ptr % segs:
+        raise ValueError("pool/pointers not aligned")
+    kernel = functools.partial(_avgpool_kernel, in_ptr=in_ptr,
+                               out_ptr=out_ptr, n_seg=n_seg, h=h, w=w,
+                               c=c, mult=mult, shift=shift)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ARBITRARY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((8, segs * SEG_WIDTH), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool)

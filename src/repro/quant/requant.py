@@ -1,0 +1,180 @@
+"""Fixed-point requantization — TFLite/CMSIS-NN style, as pure jnp.
+
+An int8 kernel accumulates in int32 and must map the accumulator back to
+int8 at a *different* scale: ``q_out = round(acc * s_in * s_w / s_out)``.
+Deployed runtimes (CMSIS-NN ``arm_nn_requantize``, TinyEngine, DORY)
+encode the real multiplier as a Q31 fixed-point ``(multiplier, shift)``
+pair and do the whole thing in integer arithmetic.  This module is that
+layer:
+
+  * :func:`quantize_multiplier` — encode a positive real scale as
+    ``multiplier * 2**(shift - 31)`` with ``2**30 <= multiplier < 2**31``.
+  * :func:`requantize` — ``RNE(acc * multiplier * 2**(shift - 31))``
+    saturated to int8, in ONE rounding (round-to-nearest-even), exact
+    over the full int32 accumulator range.
+
+The product ``acc * multiplier`` needs 64 bits and neither Pallas-TPU
+kernels nor default (x64-disabled) jax have an int64; the implementation
+emulates the widening multiply and the rounding shift with int32/uint32
+ops only (16-bit partial products + carry propagation — the same
+decomposition an MCU's ``SMULL``/``SMMLA`` sequence performs), so it is
+usable verbatim inside Pallas kernel bodies.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+INT32_MIN = -(1 << 31)
+INT32_MAX = (1 << 31) - 1
+
+# Valid total right-shift range of the single-rounding requant:
+# s = 31 - shift must lie in [1, 62] so ``half`` and the masks fit in
+# the emulated 64-bit product.
+SHIFT_MIN = -31
+SHIFT_MAX = 30
+
+_U16 = 0xFFFF
+_U32 = 0xFFFFFFFF
+
+
+def quantize_multiplier(real: float) -> tuple[int, int]:
+    """Encode ``real > 0`` as ``(multiplier, shift)`` with
+    ``real ~= multiplier * 2**(shift - 31)`` and ``multiplier`` a Q31
+    mantissa in ``[2**30, 2**31)`` (TFLite's QuantizeMultiplier).
+
+    ``real == 0`` encodes as ``(0, 0)``; ``shift`` outside
+    ``[SHIFT_MIN, SHIFT_MAX]`` (a scale ratio beyond ``~2**30``) raises —
+    such ratios cannot be requantized with a single rounding.
+    """
+    if real == 0.0:
+        return 0, 0
+    if real < 0.0 or not math.isfinite(real):
+        raise ValueError(f"requant multiplier must be finite and >= 0, "
+                         f"got {real}")
+    frac, exp = math.frexp(real)          # real = frac * 2**exp
+    m = round(frac * (1 << 31))
+    if m == (1 << 31):                    # frac rounded up to 1.0
+        m >>= 1
+        exp += 1
+    if not SHIFT_MIN <= exp <= SHIFT_MAX:
+        raise ValueError(f"scale ratio {real} needs shift {exp}, outside "
+                         f"[{SHIFT_MIN}, {SHIFT_MAX}]")
+    return m, exp
+
+
+def _mul64(a, b):
+    """Full 64-bit product of int32 ``a * b`` as ``(hi int32, lo uint32)``
+    using only 32-bit ops (16-bit partial products)."""
+    au = a.astype(jnp.uint32)
+    bu = b.astype(jnp.uint32)
+    al, ah = au & _U16, au >> 16
+    bl, bh = bu & _U16, bu >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    cross = (ll >> 16) + (lh & _U16) + (hl & _U16)
+    hi_u = hh + (lh >> 16) + (hl >> 16) + (cross >> 16)
+    # signed high word: mulhs(a,b) = mulhu(a,b) - (a<0)*b - (b<0)*a
+    hi_u = hi_u - jnp.where(a < 0, bu, jnp.uint32(0))
+    hi_u = hi_u - jnp.where(b < 0, au, jnp.uint32(0))
+    return hi_u.astype(jnp.int32), au * bu
+
+
+def _shr64_rne(hi, lo, s):
+    """``(hi:lo) >> s`` (arithmetic, 64-bit) rounding to nearest, ties to
+    even; ``s`` int32 in ``[1, 62]``.  Returns ``(hi, lo)`` of the
+    quotient."""
+    one = jnp.uint32(1)
+    s = s.astype(jnp.int32)
+    s1 = jnp.clip(s, 1, 31)               # clamped shift operands: every
+    s2 = jnp.clip(s - 32, 0, 31)          # jnp shift stays within [0,31]
+    su1 = s1.astype(jnp.uint32)
+    su2 = s2.astype(jnp.uint32)
+    hi_u = hi.astype(jnp.uint32)
+
+    # remainder == half detection on the PRE-offset value (tie test)
+    mask_lo = jnp.where(s >= 32, jnp.uint32(_U32), (one << su1) - one)
+    mask_hi = jnp.where(s <= 32, jnp.uint32(0),
+                        (one << jnp.clip(s - 32, 0, 31).astype(jnp.uint32))
+                        - one)
+    half_lo = jnp.where(s <= 32,
+                        one << jnp.clip(s - 1, 0, 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+    half_hi = jnp.where(s <= 32, jnp.uint32(0),
+                        one << jnp.clip(s - 33, 0, 31).astype(jnp.uint32))
+    tie = ((lo & mask_lo) == half_lo) & ((hi_u & mask_hi) == half_hi)
+
+    # 64-bit add of half (carry out of the low word)
+    lo2 = lo + half_lo
+    carry = (lo2 < lo).astype(jnp.int32)
+    hi2 = hi + half_hi.astype(jnp.int32) + carry
+    hi2_u = hi2.astype(jnp.uint32)
+
+    # 64-bit arithmetic shift right by s
+    lo_a = (lo2 >> su1) | (hi2_u << (jnp.uint32(32) - su1))
+    hi_a = hi2 >> s1
+    lo_b = (hi2 >> s2).astype(jnp.uint32)
+    hi_b = hi2 >> 31
+    res_lo = jnp.where(s <= 31, lo_a, lo_b)
+    res_hi = jnp.where(s <= 31, hi_a, hi_b)
+
+    # ties rounded up by the half-offset: pull odd results back down
+    dec = (tie & ((res_lo & one) == one)).astype(jnp.uint32)
+    new_lo = res_lo - dec
+    borrow = ((dec == one) & (res_lo == jnp.uint32(0))).astype(jnp.int32)
+    return res_hi - borrow, new_lo
+
+
+def requantize_i32(acc, multiplier, shift):
+    """``RNE(acc * multiplier * 2**(shift-31))`` as int32, saturated to
+    ``[-2**24, 2**24]`` (well clear of the int8 range, so the final int8
+    clamp downstream is unaffected) — the form residual adds use, two
+    requantized operands summed before the final clamp.
+
+    ``acc`` int32 (any shape); ``multiplier``/``shift`` int32 scalars or
+    arrays broadcastable against it (per-channel requant broadcasts a
+    trailing ``[c]`` axis).  Pure jnp — usable inside Pallas kernels.
+    """
+    acc = jnp.asarray(acc, jnp.int32)
+    multiplier = jnp.asarray(multiplier, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    acc, multiplier, shift = jnp.broadcast_arrays(acc, multiplier, shift)
+    hi, lo = _mul64(acc, multiplier)
+    q_hi, q_lo = _shr64_rne(hi, lo, jnp.int32(31) - shift)
+    # saturate the 64-bit quotient to int32, then to the working range
+    lo_i = q_lo.astype(jnp.int32)
+    fits = q_hi == (lo_i >> 31)
+    v = jnp.where(fits, lo_i,
+                  jnp.where(q_hi < 0, jnp.int32(INT32_MIN),
+                            jnp.int32(INT32_MAX)))
+    return jnp.clip(v, -(1 << 24), 1 << 24)
+
+
+def requantize(acc, multiplier, shift, *, zero_point=0):
+    """``clamp(RNE(acc * multiplier * 2**(shift-31)) + zero_point)`` to
+    int8 — ONE round-to-nearest-even over the exact 64-bit product, then
+    saturation (the behaviour the hypothesis property test pins against
+    the exact ``Fraction`` reference).  Same broadcasting / purity notes
+    as :func:`requantize_i32`, which does all the arithmetic."""
+    v = requantize_i32(acc, multiplier, shift) + jnp.int32(zero_point)
+    return jnp.clip(v, -128, 127).astype(jnp.int8)
+
+
+def act_i32(acc, activation):
+    """Int32-domain activation between accumulate and requantize.
+
+    With symmetric scales (``zero_point == 0``) relu commutes with
+    requantization, so clamping the accumulator at zero is exact;
+    anything nonlinear beyond relu has no single-multiplier int8 form
+    and is rejected at quantize time — this is the ONE definition both
+    the jnp executor ops and the Pallas kernels use, so the two
+    backends cannot drift."""
+    if activation in (None, "identity"):
+        return acc
+    if activation == "relu":
+        return jnp.maximum(acc, 0)
+    raise NotImplementedError(
+        f"activation {activation!r} has no int8 path (relu/None only)")

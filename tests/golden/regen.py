@@ -10,7 +10,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
 
-from test_codegen import _fused_program, _mini_net_program  # noqa: E402
+from test_codegen import (_fused_program, _mini_net_program,  # noqa: E402
+                          _quantized_program_and_qparams)
 
 from repro.core.codegen import emit_program  # noqa: E402
 
@@ -19,6 +20,12 @@ def main() -> None:
     out = pathlib.Path(__file__).parent
     units = emit_program(_mini_net_program(), "mini")
     units.update(emit_program(_fused_program(), "fused"))
+    qprog, qparams = _quantized_program_and_qparams()
+    units.update(emit_program(qprog, "qmini", quant=qparams))
+    for stale in out.glob("*.c"):       # goldens no longer emitted must
+        if stale.name not in units:     # not linger as if still covered
+            stale.unlink()
+            print("removed stale", stale)
     for name, src in units.items():
         (out / name).write_text(src)
         print("wrote", out / name)

@@ -57,6 +57,25 @@ def _fused_program():
     return plan_program(400, 16, [IBModuleSpec(cfg)], block_rows=1)
 
 
+def _quantized_program_and_qparams():
+    """The mini net re-typed int8 with fixed (RNG-free) requant
+    constants — pins the requant-table emission byte-for-byte."""
+    import numpy as np
+
+    prog = _mini_net_program().with_dtype("int8")
+    qparams = []
+    for i, op in enumerate(prog.ops):
+        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+            mult = np.arange(op.d_out, dtype=np.int32) + (1 << 30) + i
+            shift = np.full(op.d_out, -3 + i, np.int32)
+            qparams.append((None, None, mult, shift))
+        elif op.kind == "add":
+            qparams.append(((1 << 30) + 7, -1, (1 << 30) + 11, -2))
+        elif op.kind == "pool_avg":
+            qparams.append(((1 << 30) + 13, -5))
+    return prog, qparams
+
+
 def test_emit_program_structure():
     units = emit_program(_mini_net_program(), "mini")
     assert len(units) == 6
@@ -78,6 +97,42 @@ def test_emit_program_matches_golden_files():
     regenerating tests/golden/ (see test docstring)."""
     units = emit_program(_mini_net_program(), "mini")
     units.update(emit_program(_fused_program(), "fused"))
+    for name, src in units.items():
+        golden = GOLDEN / name
+        assert golden.exists(), f"missing golden file {name}; regenerate " \
+            "with tests/golden/regen.py"
+        assert src == golden.read_text(), f"{name} drifted from golden"
+
+
+def test_emit_quantized_program_bakes_requant_constants():
+    prog, qparams = _quantized_program_and_qparams()
+    units = emit_program(prog, "qmini", quant=qparams)
+    assert len(units) == 6
+    pw = units["qmini_op00_conv_pw.c"]
+    assert "static const int32_t op00_conv_pw_mult[48]" in pw
+    assert "static const int32_t op00_conv_pw_shift[48]" in pw
+    assert "Requant(acc" in pw and "op00_conv_pw_requant" in pw
+    assert "VQRDMULH" in pw            # the MVE/Helium idiom note
+    add = units["qmini_op03_add.c"]    # scalar pair per operand
+    assert "op03_add_mult[2]" in add
+    pool = units["qmini_op04_pool_avg.c"]
+    assert "op04_pool_avg_mult[1]" in pool
+    # the shared intrinsic structure is untouched by the quant prologue
+    for src in units.values():
+        assert "WRAP(" in src and "RAMStore" in src
+
+
+def test_emit_quantized_program_requires_qparams():
+    prog, qparams = _quantized_program_and_qparams()
+    with pytest.raises(ValueError, match="qparams"):
+        emit_program(prog, "qmini")
+    with pytest.raises(ValueError, match="entries"):
+        emit_program(prog, "qmini", quant=qparams[:-1])
+
+
+def test_quantized_units_match_golden_files():
+    prog, qparams = _quantized_program_and_qparams()
+    units = emit_program(prog, "qmini", quant=qparams)
     for name, src in units.items():
         golden = GOLDEN / name
         assert golden.exists(), f"missing golden file {name}; regenerate " \

@@ -1,0 +1,194 @@
+"""Int8 quantization primitives: fixed-point requant exactness
+(hypothesis property vs the exact Fraction reference), multiplier
+encoding, calibration/quantize round trips."""
+import numpy as np
+import pytest
+
+from repro.quant import (QParams, SHIFT_MAX, SHIFT_MIN, calibrate,
+                         dequantize, quantize, quantize_bias,
+                         quantize_multiplier, requant_pair, requantize,
+                         requantize_i32)
+
+INT32_MIN, INT32_MAX = -(1 << 31), (1 << 31) - 1
+
+
+def _ref_requant(acc: int, mult: int, shift: int) -> int:
+    """Exact reference: round-half-even of ``acc * mult * 2**(shift-31)``
+    (``round()`` on Fraction is banker's rounding), saturated to int8."""
+    from fractions import Fraction
+
+    q = round(Fraction(acc * mult, 1 << (31 - shift)))
+    return max(-128, min(127, q))
+
+
+# ---------------------------------------------------------------------------
+# Fixed cases: int32 edges and exact ties.
+# ---------------------------------------------------------------------------
+
+EDGE_ACCS = [INT32_MIN, INT32_MAX, 0, 1, -1, 127, -128, 255, -255,
+             1 << 30, -(1 << 30)]
+
+
+@pytest.mark.parametrize("mult,shift", [
+    (1 << 30, 0),            # exact x0.5: odd accs are ties
+    ((1 << 31) - 1, 0),
+    (1 << 30, SHIFT_MAX),    # extreme left shift
+    (1 << 30, SHIFT_MIN),    # extreme right shift
+    (-(1 << 31), 5),         # most negative multiplier
+    (3, -7),
+])
+def test_requantize_int32_edges(mult, shift):
+    accs = np.array(EDGE_ACCS, np.int32)
+    got = np.asarray(requantize(accs, mult, shift))
+    want = np.array([_ref_requant(int(a), mult, shift) for a in EDGE_ACCS],
+                    np.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_requantize_ties_round_to_even():
+    # acc * 2^30 / 2^31 = acc/2: every odd acc is an exact tie
+    accs = np.array([1, 3, 5, -1, -3, -5, 7, -7], np.int32)
+    got = np.asarray(requantize(accs, 1 << 30, 0))
+    np.testing.assert_array_equal(got, [0, 2, 2, 0, -2, -2, 4, -4])
+
+
+def test_requantize_saturates():
+    assert requantize(np.int32(INT32_MAX), INT32_MAX, SHIFT_MAX) == 127
+    assert requantize(np.int32(INT32_MIN), INT32_MAX, SHIFT_MAX) == -128
+
+
+def test_requantize_per_channel_broadcast():
+    acc = np.arange(-6, 6, dtype=np.int32).reshape(4, 3) * 1000
+    mult = np.array([1 << 30, 1 << 29, (1 << 31) - 1], np.int32)
+    shift = np.array([0, 3, -4], np.int32)
+    got = np.asarray(requantize(acc, mult[None, :], shift[None, :]))
+    for r in range(4):
+        for c in range(3):
+            assert got[r, c] == _ref_requant(int(acc[r, c]), int(mult[c]),
+                                             int(shift[c]))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: exactness over random multipliers/shifts/edges.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def test_requantize_random_sweep_matches_float_reference():
+    """Deterministic fallback sweep (hypothesis covers this ground much
+    more densely when installed): random (acc, mult, shift) triples plus
+    the int32 edges, bit-exact against the Fraction reference."""
+    rng = np.random.default_rng(0)
+    accs = np.concatenate([
+        rng.integers(INT32_MIN, INT32_MAX + 1, 500),
+        np.array(EDGE_ACCS, np.int64),
+        rng.integers(-512, 512, 200),
+    ]).astype(np.int32)
+    for _ in range(20):
+        mult = int(rng.integers(INT32_MIN, INT32_MAX + 1))
+        shift = int(rng.integers(SHIFT_MIN, SHIFT_MAX + 1))
+        got = np.asarray(requantize(accs, mult, shift))
+        want = np.array([_ref_requant(int(a), mult, shift) for a in accs],
+                        np.int8)
+        np.testing.assert_array_equal(got, want, err_msg=f"mult={mult} "
+                                      f"shift={shift}")
+
+
+if HAVE_HYPOTHESIS:
+    acc_st = st.one_of(
+        st.integers(INT32_MIN, INT32_MAX),
+        st.sampled_from(EDGE_ACCS),
+        # dense tie region: small accs hit exact .5 cases often
+        st.integers(-512, 512),
+    )
+
+    @given(acc=acc_st, mult=st.integers(INT32_MIN, INT32_MAX),
+           shift=st.integers(SHIFT_MIN, SHIFT_MAX))
+    @settings(max_examples=300, deadline=None)
+    def test_requantize_matches_float_reference(acc, mult, shift):
+        """The single-rounding fixed-point path equals
+        round-to-nearest-even of the REAL product for every int32
+        accumulator."""
+        got = int(np.asarray(requantize(np.int32(acc), mult, shift)))
+        assert got == _ref_requant(acc, mult, shift)
+
+    @given(acc=acc_st, mult=st.integers(1, INT32_MAX),
+           shift=st.integers(SHIFT_MIN, SHIFT_MAX))
+    @settings(max_examples=100, deadline=None)
+    def test_requantize_i32_matches_unsaturated_reference(acc, mult,
+                                                          shift):
+        from fractions import Fraction
+
+        got = int(np.asarray(requantize_i32(np.int32(acc), mult, shift)))
+        want = round(Fraction(acc * mult, 1 << (31 - shift)))
+        assert got == max(-(1 << 24), min(1 << 24, want))
+
+    @given(real=st.floats(2.0 ** -30, 2.0 ** 30, allow_nan=False,
+                          allow_infinity=False))
+    @settings(max_examples=200, deadline=None)
+    def test_quantize_multiplier_encoding(real):
+        m, shift = quantize_multiplier(real)
+        assert (1 << 30) <= m < (1 << 31)
+        assert SHIFT_MIN <= shift <= SHIFT_MAX
+        # the Q31 encoding is within half an ulp of the real multiplier
+        assert abs(m * 2.0 ** (shift - 31) - real) <= 2.0 ** (shift - 31)
+
+
+def test_quantize_multiplier_rejects_bad_scales():
+    assert quantize_multiplier(0.0) == (0, 0)
+    with pytest.raises(ValueError):
+        quantize_multiplier(-1.0)
+    with pytest.raises(ValueError):
+        quantize_multiplier(2.0 ** 40)
+
+
+# ---------------------------------------------------------------------------
+# Calibration / quantize round trips.
+# ---------------------------------------------------------------------------
+
+def test_per_tensor_roundtrip():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(7, 13)).astype(np.float32)
+    qp = calibrate(x)
+    assert not qp.per_channel and qp.zero_point == 0
+    q = np.asarray(quantize(x, qp))
+    assert q.dtype == np.int8 and q.min() >= -127 and q.max() <= 127
+    err = np.abs(np.asarray(dequantize(q, qp)) - x)
+    assert err.max() <= qp.scale / 2 + 1e-9
+
+
+def test_per_channel_scales_one_per_output_channel():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(5, 4)).astype(np.float32) * \
+        np.array([1.0, 10.0, 0.1, 100.0], np.float32)
+    qp = calibrate(w, axis=1)
+    assert np.asarray(qp.scale).shape == (4,)
+    q = np.asarray(quantize(w, qp))
+    # every channel uses its full int8 range despite 1000x scale spread
+    assert (np.abs(q).max(axis=0) == 127).all()
+
+
+def test_all_zero_channel_gets_floor_scale():
+    w = np.zeros((3, 2), np.float32)
+    qp = calibrate(w, axis=1)
+    assert (np.asarray(qp.scale) > 0).all()
+    assert np.asarray(quantize(w, qp)).max() == 0
+
+
+def test_quantize_bias_uses_accumulator_scale():
+    w_qp = QParams(scale=np.array([0.5, 0.25]), axis=1)
+    b = np.array([1.0, 1.0])
+    bq = np.asarray(quantize_bias(b, 0.1, w_qp))
+    np.testing.assert_array_equal(bq, [20, 40])   # 1/(0.5*0.1), 1/(0.25*0.1)
+
+
+def test_requant_pair_encodes_scale_ratio():
+    w_qp = QParams(scale=np.array([0.02, 0.004]), axis=1)
+    mult, shift = requant_pair(0.05, w_qp, 0.01)
+    real = np.asarray(mult, np.float64) * 2.0 ** (np.asarray(shift) - 31)
+    np.testing.assert_allclose(real, [0.1, 0.02], rtol=1e-9)

@@ -1,0 +1,202 @@
+"""Int8 quantized execution: dtype-aware geometry, backend agreement
+(jnp == pallas bitwise), sim certification of the int8-typed programs,
+and whole-MCUNet int8 runs matching the float reference."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph_planner import (MCUNET_5FPS_VWW,
+                                      MCUNET_320KB_IMAGENET)
+from repro.core.program import GemmSpec, plan_program
+from repro.graph import (build_mcunet, certify_net, init_net_params,
+                         plan_net, quantize_net, quantized_agreement,
+                         run_net_quantized)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _s7_plan(**kw):
+    """One unfused residual module: conv_pw / conv_dw / conv_pw / add."""
+    return plan_net(build_mcunet(MCUNET_5FPS_VWW[6:7], "s7",
+                                 include_head=False),
+                    fused_exec=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware geometry.
+# ---------------------------------------------------------------------------
+
+def test_with_dtype_float32_is_identity():
+    prog = plan_net(build_mcunet(MCUNET_5FPS_VWW[:2], "m2",
+                                 include_head=False)).program
+    assert prog.with_dtype("float32") is prog
+
+
+def test_int8_pool_bytes_are_byte_denominated():
+    plan = _s7_plan()
+    prog = plan.program
+    q = prog.with_dtype("int8")
+    # identical segment geometry, 4x smaller byte footprint
+    assert q.n_segments == prog.n_segments
+    assert q.pool_segments == prog.pool_segments
+    assert [(op.in_ptr, op.out_ptr, op.delta) for op in q.ops] \
+        == [(op.in_ptr, op.out_ptr, op.delta) for op in prog.ops]
+    assert q.pool_bytes * 4 == prog.pool_bytes
+    assert q.pool_bytes == q.pool_segments * q.seg_width
+    assert all(op.segment_bytes == q.seg_width for op in q.ops)
+    assert q.spec().dtype == np.int8
+
+
+def test_plan_dtype_param_equals_with_dtype():
+    g = build_mcunet(MCUNET_5FPS_VWW[6:7], "s7", include_head=False)
+    a = plan_net(g, fused_exec=False, dtype="int8").program
+    b = plan_net(g, fused_exec=False).program.with_dtype("int8")
+    assert a == b and a.quantized
+
+
+def test_elem_bytes_dtype_conflict_rejected():
+    with pytest.raises(ValueError, match="contradicts"):
+        plan_program(4, 128, [GemmSpec(128)], elem_bytes=4, dtype="int8")
+    with pytest.raises(ValueError, match="unknown pool dtype"):
+        plan_program(4, 128, [GemmSpec(128)], dtype="int4")
+
+
+def test_legacy_elem_bytes_1_keeps_float_execution():
+    """Quantized execution is opt-in via dtype="int8" ONLY: a 1-byte
+    elem_bytes (e.g. ops.segment_gemm over an int8 array) must keep the
+    byte accounting but stay on the float executor path."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    prog = plan_program(8, 128, [GemmSpec(128)], elem_bytes=1,
+                        block_rows=8)
+    assert prog.dtype == "byte" and not prog.quantized
+    assert prog.pool_bytes == prog.pool_segments * prog.seg_width
+    x = (jax.random.normal(KEY, (8, 128)) * 10).astype(jnp.int8)
+    w = jnp.eye(128, dtype=jnp.int8)
+    y, info = ops.segment_gemm(x, w, None, block_rows=8)  # float path
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_fused_exec_false_lowers_modules_unfused():
+    plan = _s7_plan()
+    kinds = [op.kind for op in plan.program.ops]
+    assert kinds == ["conv_pw", "conv_dw", "conv_pw", "add"]
+    fused = plan_net(build_mcunet(MCUNET_5FPS_VWW[6:7], "s7",
+                                  include_head=False))
+    # the byte-granular REPORTED footprints follow the exclusion rule
+    # either way — only execution lowering changes
+    assert plan.mcu_bottleneck_bytes == fused.mcu_bottleneck_bytes
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement: int8 is exact integer math, so jnp and pallas must
+# agree BITWISE (not allclose) on every kernel.
+# ---------------------------------------------------------------------------
+
+def _quantized_mini_net():
+    """Unfused module + avgpool/fc head: covers all five int8 kernels
+    (conv_pw, conv_dw, add, pool_avg, gemm)."""
+    plan = plan_net(build_mcunet(MCUNET_5FPS_VWW[6:7], "mini",
+                                 num_classes=4), fused_exec=False)
+    kinds = [op.kind for op in plan.program.ops]
+    assert kinds == ["conv_pw", "conv_dw", "conv_pw", "add", "pool_avg",
+                     "gemm"]
+    params = init_net_params(plan, KEY)
+    return plan, quantize_net(plan, params)
+
+
+def test_int8_jnp_and_pallas_agree_bitwise():
+    plan, qnet = _quantized_mini_net()
+    from repro.core.executors import run_program
+    from repro.quant import QParams, quantize
+
+    x = jax.random.normal(KEY, (plan.program.in_rows, plan.program.in_dim))
+    x_q = quantize(x, QParams(scale=qnet.in_scale))
+    y_jnp, pool_jnp = run_program(qnet.program, x_q, qnet.qparams,
+                                  backend="jnp")
+    y_pal, pool_pal = run_program(qnet.program, x_q, qnet.qparams,
+                                  backend="pallas")
+    assert y_jnp.dtype == np.int8 and y_pal.dtype == np.int8
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_pal))
+    # the ENTIRE ring state agrees, not just the fetched output
+    np.testing.assert_array_equal(np.asarray(pool_jnp.array),
+                                  np.asarray(pool_pal.array))
+
+
+def test_int8_gemm_scan_blocks_match_pallas():
+    """Multi-row-block int8 GEMM (exercises the scan path + per-channel
+    requant) bitwise across backends."""
+    from repro.core.executors import run_program
+    from repro.quant import QParams, calibrate, quantize, requant_pair
+
+    m, d_in, d_out = 16, 192, 256
+    prog = plan_program(m, d_in, [GemmSpec(d_out, activation="relu")],
+                        block_rows=4, dtype="int8")
+    key1, key2 = jax.random.split(KEY)
+    w = jax.random.normal(key1, (d_in, d_out)) / d_in ** 0.5
+    x = jax.random.normal(key2, (m, d_in))
+    s_in = float(np.abs(np.asarray(x)).max()) / 127
+    w_qp = calibrate(w, axis=1)
+    y_ref = np.maximum(np.asarray(x) @ np.asarray(w), 0.0)
+    s_out = float(np.abs(y_ref).max()) / 127
+    mult, shift = requant_pair(s_in, w_qp, s_out)
+    qparams = [(quantize(w, w_qp), None, mult, shift)]
+    x_q = quantize(x, QParams(scale=s_in))
+    y_j, _ = run_program(prog, x_q, qparams, backend="jnp")
+    y_p, _ = run_program(prog, x_q, qparams, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_j), np.asarray(y_p))
+    # and the dequantized result tracks the float GEMM
+    err = np.abs(np.asarray(y_j, np.float64) * s_out - y_ref)
+    assert err.max() <= 3 * s_out
+
+
+def test_quantize_net_rejects_fused_plans():
+    plan = plan_net(build_mcunet(MCUNET_5FPS_VWW[:1], "f1",
+                                 include_head=False))   # ib_fused op
+    params = init_net_params(plan, KEY)
+    with pytest.raises(ValueError, match="fused_exec=False"):
+        quantize_net(plan, params)
+
+
+# ---------------------------------------------------------------------------
+# Whole-network int8 acceptance.
+# ---------------------------------------------------------------------------
+
+def _acceptance(name, modules, classes, *, backend="jnp", n=8):
+    plan = plan_net(build_mcunet(modules, name, num_classes=classes),
+                    fused_exec=False, dtype="int8")
+    params = init_net_params(plan, KEY)
+    qnet = quantize_net(plan, params)
+    # sim-oracle certificate of the int8-typed program: zero clobbers
+    sim = certify_net(qnet.program)
+    assert sim.peak_live <= qnet.program.n_segments
+    # executed int8 ring is byte-denominated and 4x under fp32
+    fp32 = plan_net(build_mcunet(modules, name, num_classes=classes),
+                    fused_exec=False)
+    assert qnet.pool_bytes * 4 == fp32.program.pool_bytes
+    rep = quantized_agreement(qnet, n=n, backend=backend)
+    assert rep["cosine"] >= 0.99, rep
+    assert rep["argmax_agreement"] >= 0.95, rep
+    return qnet, rep
+
+
+def test_mcunet_vww_int8_end_to_end():
+    """MCUNet-5fps-VWW runs int8 end-to-end: zero sim clobbers, >=95%
+    argmax agreement with the float reference."""
+    _acceptance("vww", MCUNET_5FPS_VWW, 2)
+
+
+def test_mcunet_imagenet_int8_end_to_end():
+    """MCUNet-320KB-ImageNet (strided modules, resampling adapters,
+    1000-way head) int8 end-to-end."""
+    _acceptance("imagenet", MCUNET_320KB_IMAGENET, 1000)
+
+
+def test_int8_output_dequantizes_to_float():
+    plan, qnet = _quantized_mini_net()
+    x = jax.random.normal(jax.random.PRNGKey(3),
+                          (plan.program.in_rows, plan.program.in_dim))
+    y = run_net_quantized(qnet, x)
+    assert y.dtype == np.float32
+    assert y.shape == (plan.program.out_rows, plan.program.out_dim)
