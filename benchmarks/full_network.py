@@ -1,24 +1,26 @@
 """Whole-network bottleneck benchmark — the paper's headline full-DNN
-metric (61.5% memory-bottleneck reduction), from the graph compiler.
+metric (61.5% memory-bottleneck reduction), via the compile facade.
 
-Per network: the scheduled + fused NetPlan's byte-granular bottleneck vs
-the TinyEngine / HMCOS baselines, plus the executed segment-granular
-ring footprint (fp32 TPU adaptation) and op/fusion statistics.
+Per network: ``repro.compile(net, target="host-sim")`` schedules, fuses
+and plans the net, and the row reads the byte-granular bottleneck vs
+the TinyEngine / HMCOS baselines plus the executed segment-granular
+ring footprint (fp32 TPU adaptation) and op/fusion statistics off the
+CompiledNet.  Ring geometry (seg rows / DMA alignment) comes from the
+Target registry — ONE definition site shared with int8_network.
 """
 from __future__ import annotations
 
-from repro.core.graph_planner import (MCUNET_5FPS_VWW,
-                                      MCUNET_320KB_IMAGENET)
-from repro.graph import build_mcunet, plan_net
+import repro
 
-NETS = (("mcunet-5fps-vww", MCUNET_5FPS_VWW, 2),
-        ("mcunet-320kb-imagenet", MCUNET_320KB_IMAGENET, 1000))
+NETS = ("mcunet-5fps-vww", "mcunet-320kb-imagenet")
+TARGET = repro.get_target("host-sim")
 
 
 def run() -> list[dict]:
     rows = []
-    for name, modules, classes in NETS:
-        plan = plan_net(build_mcunet(modules, name, num_classes=classes))
+    for name in NETS:
+        cn = repro.compile(name, target=TARGET, certify=False)
+        plan = cn.plan
         fused = sum(1 for g in plan.groups if g.group.fused_exec)
         modules_n = sum(1 for g in plan.groups if g.group.kind == "module")
         rows.append({

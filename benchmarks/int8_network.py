@@ -1,16 +1,17 @@
 """Int8 whole-network benchmark — the executed quantized ring next to
-the paper's byte-granular MCU bottleneck.
+the paper's byte-granular MCU bottleneck, via the compile facade.
 
 With the int8 execution subsystem the *executed* ring and the *reported*
 MCU footprint are finally in the same unit (bytes of int8 state).  Per
 network this section records:
 
-  * ``int8_pool_kb``        — the executed int8 ring (seg_width=128,
-                              pallas-grade geometry; one 128-byte segment
-                              per pixel row chunk),
-  * ``int8_byte_ring_kb``   — the same unfused plan solved at byte
-                              granularity (seg_width=1; sim/jnp-grade) —
-                              the executed number comparable to
+  * ``int8_pool_kb``        — the executed int8 ring (the MCU target's
+                              registry geometry: seg_width=128 segment
+                              rows, DMA-block aligned; pallas-grade),
+  * ``int8_byte_ring_kb``   — the same unfused plan solved at the
+                              target's byte-ring granularity
+                              (seg_width=1, tight; sim/jnp-grade) — the
+                              executed number comparable to
                               ``mcu_bottleneck_kb`` at the paper's
                               granularity,
   * ``mcu_bottleneck_kb``   — the byte-granular Eq.-(2) bottleneck
@@ -19,39 +20,42 @@ network this section records:
                               execution (4x: same segment geometry, 1
                               byte per element).
 
-All numbers are deterministic planner outputs (no execution), so the
-section runs in ``--smoke`` and regressions fail CI.
+Both geometries come from the :class:`repro.compile.targets.Target`
+registry — one definition site, shared with full_network — and all
+numbers are deterministic planner outputs (``quantize=False``: no
+calibration, no execution), so the section runs in ``--smoke`` and
+regressions fail CI.
 """
 from __future__ import annotations
 
-from repro.core.graph_planner import (MCUNET_5FPS_VWW,
-                                      MCUNET_320KB_IMAGENET)
-from repro.graph import build_mcunet, plan_net
+import repro
 
-NETS = (("mcunet-5fps-vww", MCUNET_5FPS_VWW, 2),
-        ("mcunet-320kb-imagenet", MCUNET_320KB_IMAGENET, 1000))
+NETS = ("mcunet-5fps-vww", "mcunet-320kb-imagenet")
+TARGET = repro.get_target("cortex-m4")
 
 
 def run() -> list[dict]:
     rows = []
-    for name, modules, classes in NETS:
-        graph = build_mcunet(modules, name, num_classes=classes)
-        fp32 = plan_net(graph, fused_exec=False)
-        int8 = fp32.program.with_dtype("int8")
-        byte_ring = plan_net(graph, fused_exec=False, dtype="int8",
-                             seg_width=1, block_rows=None)
-        mcu = fp32.mcu_bottleneck_bytes
+    for name in NETS:
+        cn = repro.compile(name, target=TARGET, dtype="int8",
+                           quantize=False, certify=False)
+        int8 = cn.program
+        fp32 = int8.with_dtype("float32")
+        byte_ring = repro.compile(name, target=TARGET, dtype="int8",
+                                  quantize=False, certify=False,
+                                  **TARGET.byte_ring_kwargs)
+        mcu = cn.mcu_bottleneck_bytes
         rows.append({
             "net": name,
             "n_ops": len(int8.ops),
             "int8_pool_kb": int8.pool_bytes / 1000,
-            "int8_byte_ring_kb": byte_ring.program.pool_bytes / 1000,
-            "fp32_pool_kb": fp32.program.pool_bytes / 1000,
+            "int8_byte_ring_kb": byte_ring.pool_bytes / 1000,
+            "fp32_pool_kb": fp32.pool_bytes / 1000,
             "mcu_bottleneck_kb": mcu / 1000,
             "fp32_to_int8_saving":
-                1.0 - int8.pool_bytes / fp32.program.pool_bytes,
+                1.0 - int8.pool_bytes / fp32.pool_bytes,
             "byte_ring_over_mcu":
-                byte_ring.program.pool_bytes / mcu,
+                byte_ring.pool_bytes / mcu,
             "fits_256kb_int8": int8.pool_bytes <= 256_000,
         })
     return rows

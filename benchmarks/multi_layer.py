@@ -14,13 +14,16 @@ from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       hmcos_module_bytes,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
+import repro
 from repro.core.program import plan_module_program
-from repro.graph import build_mcunet, plan_net
+from repro.graph import build_mcunet
 
 
 def run(net) -> list[dict]:
     graph = build_mcunet(net, "bench", include_head=False)
-    plan = plan_net(graph, block_rows=None)
+    # tight geometry (block_rows=None) overrides the host-sim default
+    plan = repro.compile(graph, target="host-sim", block_rows=None,
+                         certify=False).plan
     by_name = {g.name: g.group for g in plan.groups
                if g.group.kind == "module"}
     rows = []

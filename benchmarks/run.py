@@ -4,8 +4,10 @@
   energy_proxy   — Fig. 8  (memory-traffic proxy for energy)
   latency        — Table 3 (ring vs naive kernel cost, CPU-relative)
   multi_layer    — Fig. 9/10 (inverted bottlenecks, S1–S8 / B1–B17)
-  full_network   — whole-DNN bottleneck via the graph compiler (§7):
+  full_network   — whole-DNN bottleneck via the compile facade (§7/§9):
                    the paper's 61.5% headline metric
+  compile_pipeline — repro.compile() pass timings + plan-artifact size
+                   for the MCUNet-VWW int8 deployment (§9)
   capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
   pool_footprint — XLA-measured ring-pool footprint (TPU adaptation)
   roofline_table — §Roofline from dry-run artifacts (if present)
@@ -44,6 +46,41 @@ def _multi_layer_rows():
             "imagenet": multi_layer.run(MCUNET_320KB_IMAGENET)}
 
 
+def _compile_pipeline_rows():
+    """One-call deployment trajectory: per-pass seconds + artifact size
+    for the MCUNet-VWW int8 flow (DESIGN.md §9)."""
+    import tempfile
+
+    import repro
+
+    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4")
+    with tempfile.NamedTemporaryFile(suffix=".plan.json") as f:
+        cn.save(f.name)
+        artifact_bytes = os.path.getsize(f.name)
+    return [{
+        "net": cn.net_name,
+        "target": cn.target.name,
+        "passes": {p.name: round(p.seconds, 4) for p in cn.passes},
+        "int8_pool_kb": cn.pool_bytes / 1000,
+        "mcu_bottleneck_kb": cn.mcu_bottleneck_bytes / 1000,
+        "sram_margin_kb": cn.target.sram_margin(
+            cn.mcu_bottleneck_bytes) / 1000,
+        "flash_used_kb": cn.flash_bytes_used / 1000,
+        "artifact_kb": artifact_bytes / 1000,
+        "n_c_units": len(cn.emit_c()),
+    }]
+
+
+def _compile_pipeline_show(rows):
+    for r in rows:
+        print(f"{r['net']} -> {r['target']}: int8_pool={r['int8_pool_kb']:.1f}KB "
+              f"mcu_bottleneck={r['mcu_bottleneck_kb']:.1f}KB "
+              f"artifact={r['artifact_kb']:.0f}KB "
+              f"c_units={r['n_c_units']}")
+        print("  passes: " + ", ".join(f"{k}={v:.2f}s"
+                                       for k, v in r["passes"].items()))
+
+
 # (name, collector-or-None, printer, in_smoke).  Collectors run once;
 # printers reuse the collected rows where the section supports it.
 SECTIONS = [
@@ -53,6 +90,8 @@ SECTIONS = [
     ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
     ("Net_full_network", full_network.run, full_network.main, True),
     ("Int8_full_network", int8_network.run, int8_network.main, True),
+    ("Compile_pipeline", _compile_pipeline_rows, _compile_pipeline_show,
+     True),
     ("Fig11_12_capacity", capacity.run, capacity.main, True),
     ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main, False),
     ("TPU_roofline_table", None, lambda rows: roofline_table.main(), False),
@@ -128,6 +167,10 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"int8/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"int8/{r['net']}/int8_byte_ring_kb"] = r["int8_byte_ring_kb"]
         out[f"int8/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]
+    for r in sections.get("Compile_pipeline", []):
+        out[f"compile/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
+        out[f"compile/{r['net']}/mcu_bottleneck_kb"] = \
+            r["mcu_bottleneck_kb"]
     ml = sections.get("Fig9_10_multi_layer_ram", {})
     for net_key, rows in (ml.items() if isinstance(ml, dict) else []):
         for r in rows:

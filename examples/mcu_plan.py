@@ -1,80 +1,93 @@
-"""Reproduce the paper's deployment story end-to-end:
+"""Reproduce the paper's deployment story end-to-end — one call:
 
-Can MCUNet-320KB-ImageNet run on a 128 KB STM32-F411RE?  TinyEngine: no
+Can MCUNet-320KB-ImageNet run on a 128 KB STM32-F446RE?  TinyEngine: no
 (247.8 KB bottleneck).  HMCOS: no.  vMCU: yes.
 
-Verdicts are computed from the whole-network graph compiler
-(``repro.graph``): the net is scheduled, fused by the paper's exclusion
-rule and planned into ONE VirtualPool ring; the legacy closed-form
-module formulas are asserted as a cross-check.  Pass ``--execute`` to
-also run the planned NetProgram through the SegmentPool clobber oracle
-and the jnp ring backend against the plain-XLA reference.
+``repro.compile(net, target)`` runs the whole flow (build -> schedule ->
+plan -> budget -> certify); the legacy closed-form module formulas are
+asserted as a cross-check of the compiled plan.  Pass ``--execute`` to
+also run the planned net on the jnp ring backend against the plain-XLA
+reference, and ``--target`` to gate against another registered board.
 
-Run:  PYTHONPATH=src python examples/mcu_plan.py [--ram-kb 128] [--execute]
+Run:  PYTHONPATH=src python examples/mcu_plan.py [--target cortex-m4]
+          [--execute] [--save-dir out/]
 """
 import argparse
 
+import repro
 from repro.core.graph_planner import (MCUNET_320KB_IMAGENET,
                                       MCUNET_5FPS_VWW, hmcos_module_bytes,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
-from repro.graph import build_mcunet, plan_net
+
+NETS = {"mcunet-5fps-vww": MCUNET_5FPS_VWW,
+        "mcunet-320kb-imagenet": MCUNET_320KB_IMAGENET}
 
 
-def deploy(net, name: str, num_classes: int, ram: int,
-           execute: bool) -> None:
-    graph = build_mcunet(net, name, num_classes=num_classes)
-    plan = plan_net(graph)
+def deploy(name: str, target, execute: bool, save_dir: str | None) -> None:
+    cn = repro.compile(name, target=target, dtype="float32",
+                       certify=execute, check_budget=False)
+    plan, modules = cn.plan, NETS[name]
 
-    # The old closed-form numbers, now cross-checks of the graph path.
+    # The old closed-form numbers, now cross-checks of the compiled plan.
     assert plan.mcu_bottleneck_bytes == max(vmcu_module_bytes(c)
-                                            for c in net)
+                                            for c in modules)
     assert plan.tinyengine_bottleneck_bytes == max(
-        tinyengine_module_bytes(c) for c in net)
+        tinyengine_module_bytes(c) for c in modules)
     assert plan.hmcos_bottleneck_bytes == max(hmcos_module_bytes(c)
-                                              for c in net)
+                                              for c in modules)
 
-    print(f"\n{name} on a {ram//1000} KB device "
-          f"({len(plan.program.ops)} ops in one ring):")
+    rep = cn.report()
+    ram = cn.target.sram_bytes
+    print(f"\n{name} on {cn.target.cpu} ({ram // 1000} KB SRAM, "
+          f"{rep['n_ops']} ops in one ring):")
     for label, b in (("vMCU", plan.mcu_bottleneck_bytes),
                      ("TinyEngine", plan.tinyengine_bottleneck_bytes),
                      ("HMCOS", plan.hmcos_bottleneck_bytes)):
         verdict = "DEPLOYABLE" if b <= ram else "out of memory"
         print(f"  {label:11s} bottleneck {b/1000:7.1f} KB -> {verdict}")
-    bot = plan.bottleneck_group()
-    print(f"  (vMCU bottleneck module: {bot.name}; reduction vs TinyEngine "
-          f"{100 * plan.reduction_vs_tinyengine:.1f}%)")
+    print(f"  (vMCU bottleneck module: {rep['bottleneck_group']}; "
+          f"reduction vs TinyEngine "
+          f"{100 * rep['reduction_vs_tinyengine']:.1f}%)")
 
     if execute:
-        import jax
         import numpy as np
+        import jax
 
-        from repro.graph import (certify_net, init_net_params,
-                                 reference_forward, run_net)
-        sim = certify_net(plan)
-        print(f"  sim oracle: zero clobbers over {sim.reads} reads / "
-              f"{sim.writes} writes (peak {sim.peak_live} of "
-              f"{plan.program.n_segments} segments)")
-        params = init_net_params(plan)
+        from repro.graph import reference_forward
+
+        cert = cn.certificate
+        print(f"  sim oracle: zero clobbers over {cert['reads']} reads / "
+              f"{cert['writes']} writes (peak {cert['peak_live']} of "
+              f"{cert['n_segments']} segments)")
         x = jax.random.normal(jax.random.PRNGKey(0),
-                              (plan.program.in_rows, plan.program.in_dim))
-        y = run_net(plan, x, params, backend="jnp")
-        ref = reference_forward(plan, x, params)
+                              (cn.program.in_rows, cn.program.in_dim))
+        y = cn.run(x, backend="jnp")
+        ref = reference_forward(cn.program, x, cn.ensure_params())
         err = float(np.abs(np.asarray(y) - np.asarray(ref)).max())
         print(f"  jnp ring execution matches plain-XLA reference "
               f"(max |err| = {err:.2e})")
 
+    if save_dir:
+        import pathlib
+
+        out = pathlib.Path(save_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        path = cn.save(str(out / f"{name}.plan.json"))
+        print(f"  plan artifact -> {path} (repro.load() re-runs nothing)")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--ram-kb", type=int, default=128)
+    ap.add_argument("--target", default="cortex-m4",
+                    help=f"one of {repro.list_targets()}")
     ap.add_argument("--execute", action="store_true",
-                    help="also run the NetPrograms (sim oracle + jnp)")
+                    help="also run the compiled nets (sim oracle + jnp)")
+    ap.add_argument("--save-dir", default=None,
+                    help="write .plan.json artifacts here")
     args = ap.parse_args()
-    ram = args.ram_kb * 1000
-    deploy(MCUNET_5FPS_VWW, "MCUNet-5fps-VWW", 2, ram, args.execute)
-    deploy(MCUNET_320KB_IMAGENET, "MCUNet-320KB-ImageNet", 1000, ram,
-           args.execute)
+    for name in NETS:
+        deploy(name, args.target, args.execute, args.save_dir)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""vMCU reproduction, grown into a jax/Pallas system.
+
+The deployment front door is one call (DESIGN.md §9):
+
+    import repro
+    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4")
+    y = cn.run(x)            # any executor backend
+    cn.emit_c("out/")        # intrinsic-C units, requant tables baked in
+    cn.report()              # footprint vs the target's SRAM budget
+    cn.save("vww.plan.json") # solved plan artifact; load() never
+                             # re-runs the scheduler
+
+Subsystem packages stay importable directly: ``repro.core`` (pool +
+planner + executors), ``repro.graph`` (whole-network compiler),
+``repro.quant`` (int8), ``repro.kernels`` (Pallas ring kernels).
+
+Note: ``repro.compile`` is the *function*; the package it lives in is
+reachable as ``repro.compile.targets`` etc. via normal ``from`` imports.
+"""
+from .compile import (CompiledNet, CompileError, PASS_NAMES, PassRecord,
+                      REQUANT_IDIOMS, SRAMBudgetError, Target,
+                      available_nets, compile, get_target, list_targets,
+                      load, register_target)
+
+__all__ = [
+    "CompiledNet", "CompileError", "PASS_NAMES", "PassRecord",
+    "REQUANT_IDIOMS", "SRAMBudgetError", "Target", "available_nets",
+    "compile", "get_target", "list_targets", "load", "register_target",
+]

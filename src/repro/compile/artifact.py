@@ -1,0 +1,89 @@
+"""Serializable plan artifacts (DESIGN.md §9).
+
+A compiled net is a *closed* deployment artifact: the solved
+:class:`PoolProgram` (pure ints — the Eq.-(1)/(2) offsets, so loading
+never re-runs the branch-and-bound scheduler), the parameter payloads
+(float weights, int8 weights + int32 biases, requant multiplier/shift
+tables) and the byte-granular MCU accounting.  This module is the
+JSON codec for those payloads:
+
+  * arrays  -> ``{"__array__": <base64 raw bytes>, dtype, shape}`` —
+    bit-exact roundtrips for every dtype (int8/int32/float32/bfloat16),
+  * tuples  -> ``{"__tuple__": [...]}`` (parameter entries are tuples;
+    executors index them positionally),
+  * ints / floats / strings / None / lists / dicts pass through as JSON
+    scalars (Python's JSON float codec is repr-based, so activation
+    scales roundtrip bit-exactly too).
+"""
+from __future__ import annotations
+
+import base64
+import json
+
+import numpy as np
+
+SCHEMA = 1
+KIND = "vmcu-compiled-net"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax's extended dtypes (bfloat16 et al.)
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode(obj):
+    """Recursively encode params/qparams into JSON-safe structures."""
+    if obj is None or isinstance(obj, (bool, str)):
+        return obj
+    if isinstance(obj, (int, np.integer)):
+        return int(obj)
+    if isinstance(obj, (float, np.floating)):
+        return float(obj)
+    if isinstance(obj, tuple):
+        return {"__tuple__": [encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [encode(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: encode(v) for k, v in obj.items()}
+    arr = np.asarray(obj)  # jax arrays land here (device -> host copy)
+    return {"__array__": base64.b64encode(arr.tobytes()).decode("ascii"),
+            "dtype": arr.dtype.name, "shape": list(arr.shape)}
+
+
+def decode(obj):
+    """Inverse of :func:`encode`; arrays come back as jnp arrays so the
+    executors treat loaded and freshly-compiled params identically."""
+    import jax.numpy as jnp
+
+    if isinstance(obj, dict):
+        if "__tuple__" in obj:
+            return tuple(decode(v) for v in obj["__tuple__"])
+        if "__array__" in obj:
+            dt = _np_dtype(obj["dtype"])
+            raw = np.frombuffer(base64.b64decode(obj["__array__"]),
+                                dtype=dt)
+            return jnp.asarray(raw.reshape(obj["shape"]))
+        return {k: decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [decode(v) for v in obj]
+    return obj
+
+
+def dump(payload: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("kind") != KIND:
+        raise ValueError(f"{path} is not a {KIND} artifact")
+    if payload.get("schema") != SCHEMA:
+        raise ValueError(f"artifact schema {payload.get('schema')} != "
+                         f"supported {SCHEMA}")
+    return payload

@@ -1,0 +1,480 @@
+"""The one-call deployment driver: ``repro.compile(net, target)``.
+
+The paper's value proposition is an end-to-end flow — model in,
+segment-ring plan + MCU kernels out.  This driver packages the repo's
+previously hand-wired steps (``build_* -> reorder -> plan_net ->
+quantize_net -> sim certify -> emit_program``) as a named pass pipeline
+over a :class:`repro.compile.targets.Target` descriptor, DORY /
+TinyEngine-style:
+
+  ``build``     resolve the net (Graph or registered name) and validate,
+  ``schedule``  operator reordering (branch-and-bound over topo orders),
+  ``plan``      solve ONE segment ring for the whole net (Eq. 1/2),
+  ``budget``    gate the byte-granular bottleneck on the target's SRAM
+                (pure arithmetic — runs BEFORE the expensive passes so
+                an over-budget net fails in milliseconds),
+  ``quantize``  int8 calibration + requant tables (int8 targets),
+  ``certify``   replay the plan through the SegmentPool clobber oracle.
+
+The result is a :class:`CompiledNet`: ``.run(x)`` on any executor
+backend, ``.emit_c(dir)`` for the intrinsic-C units, ``.report()`` for
+footprint-vs-budget accounting, and ``.save()``/``.load()`` JSON plan
+artifacts — deployment never re-runs the scheduler (DESIGN.md §9).
+
+``plan_net`` / ``quantize_net`` remain importable as deprecated shims
+over the same internals this driver calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core.codegen import emit_program
+from ..core.program import PoolProgram, dtype_itemsize
+from ..graph.ir import Graph, build_mcunet
+from ..graph.netplan import NetPlan, _plan_net
+from ..graph.run import (QuantizedNet, _quantize_net, certify_net,
+                         init_net_params, run_net, run_net_quantized)
+from ..graph.schedule import reorder
+from . import artifact
+from .targets import Target, get_target
+
+PASS_NAMES = ("build", "schedule", "plan", "budget", "quantize", "certify")
+
+_UNSET = object()
+
+
+class CompileError(Exception):
+    """A pass of the compile pipeline failed."""
+
+
+class SRAMBudgetError(CompileError):
+    """The planned net does not fit the target's SRAM budget."""
+
+
+# ---------------------------------------------------------------------------
+# Net registry — names the CLI / benchmarks compile by.
+# ---------------------------------------------------------------------------
+
+def _vww() -> Graph:
+    from ..core.graph_planner import MCUNET_5FPS_VWW
+
+    return build_mcunet(MCUNET_5FPS_VWW, "mcunet-5fps-vww", num_classes=2)
+
+
+def _imagenet() -> Graph:
+    from ..core.graph_planner import MCUNET_320KB_IMAGENET
+
+    return build_mcunet(MCUNET_320KB_IMAGENET, "mcunet-320kb-imagenet",
+                        num_classes=1000)
+
+
+_NET_BUILDERS = {"mcunet-5fps-vww": _vww, "mcunet-320kb-imagenet": _imagenet}
+_NET_ALIASES = {"mcunet-vww": "mcunet-5fps-vww",
+                "mcunet-imagenet": "mcunet-320kb-imagenet"}
+
+
+def available_nets() -> tuple[str, ...]:
+    return tuple(sorted(_NET_BUILDERS))
+
+
+def _resolve_net(net) -> Graph:
+    if isinstance(net, Graph):
+        return net
+    if isinstance(net, str):
+        name = _NET_ALIASES.get(net, net)
+        try:
+            return _NET_BUILDERS[name]()
+        except KeyError:
+            raise ValueError(f"unknown net {net!r}; known: "
+                             f"{available_nets()}") from None
+    raise TypeError(f"net must be a Graph or a registered name, got "
+                    f"{type(net).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# CompiledNet.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PassRecord:
+    name: str
+    seconds: float
+    note: str = ""
+
+
+def _nbytes(obj) -> int:
+    """Total array bytes in a params/qparams structure (flash estimate)."""
+    import numpy as np
+
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return 0
+    if isinstance(obj, (list, tuple)):
+        return sum(_nbytes(v) for v in obj)
+    return np.asarray(obj).nbytes
+
+
+def _flash_param_bytes(program: PoolProgram) -> int:
+    """Analytic float-parameter storage (4 B/element, the init_net_params
+    shapes) — lets ``report()`` account flash without materializing
+    parameters on planner-only compiles."""
+    total = 0
+    for op in program.ops:
+        if op.kind in ("gemm", "conv_pw"):
+            total += op.d_in * op.d_out
+        elif op.kind == "conv_dw":
+            total += op.rs * op.rs * op.d_in
+        elif op.kind == "ib_fused":
+            total += (op.d_in * op.d_mid + op.rs * op.rs * op.d_mid
+                      + op.d_mid * op.d_out)
+        elif op.kind == "fused_mlp":
+            total += 3 * op.d_in * op.d_ff
+    return total * 4
+
+
+@dataclasses.dataclass
+class CompiledNet:
+    """A deployed network: one solved ring + everything needed to run,
+    emit, report and serialize it.
+
+    ``program`` is the *executed* program (int8-typed for quantized
+    targets); ``plan``/``graph`` carry the full NetPlan and IR when the
+    net was compiled in-process and are ``None`` after :meth:`load`
+    (the artifact is self-contained — ``mcu`` snapshots the
+    byte-granular accounting)."""
+
+    net_name: str
+    target: Target
+    dtype: str
+    program: PoolProgram
+    params: list | None        # lazily He-initialized (planner-only
+                               # compiles never materialize parameters)
+    qnet: QuantizedNet | None
+    mcu: dict
+    certificate: dict | None
+    passes: list
+    plan: NetPlan | None = None
+    graph: Graph | None = None
+    init_key: object = None    # PRNG key for lazy parameter init
+
+    # -- classification ----------------------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self.qnet is not None
+
+    def ensure_params(self) -> list:
+        """Materialize the float parameters on first need (run/save of a
+        planner-only compile); quantized compiles already carry them."""
+        if self.params is None:
+            if self.plan is None:
+                raise CompileError("no parameters in this CompiledNet "
+                                   "and no plan to initialize them from")
+            self.params = init_net_params(self.plan, self.init_key)
+        return self.params
+
+    # -- footprints --------------------------------------------------------
+    @property
+    def pool_bytes(self) -> int:
+        """The executed ring footprint (bytes of pool state)."""
+        return self.program.pool_bytes
+
+    @property
+    def mcu_bottleneck_bytes(self) -> int:
+        """The byte-granular deployable bottleneck (paper Fig. 9/10)."""
+        return self.mcu["mcu_bottleneck_bytes"]
+
+    @property
+    def flash_bytes_used(self) -> int:
+        """Parameter storage the target's flash must hold (exact for
+        materialized params/qparams, analytic otherwise)."""
+        if self.quantized:
+            return _nbytes(self.qnet.qparams)
+        if self.params is not None:
+            return _nbytes(self.params)
+        return _flash_param_bytes(self.program)
+
+    def fits(self) -> bool:
+        return self.target.fits_sram(self.mcu_bottleneck_bytes)
+
+    # -- execution ---------------------------------------------------------
+    def run(self, x, *, backend: str | None = None, **kwargs):
+        """Run the compiled net on ``x`` (float in / float out; int8
+        targets quantize on entry and dequantize on exit)."""
+        backend = backend or self.target.default_backend
+        if self.quantized:
+            return run_net_quantized(self.qnet, x, backend=backend,
+                                     **kwargs)
+        if self.program.quantized:
+            raise CompileError(
+                "this is a planner-only int8 compile (quantize=False): "
+                "the ring geometry exists but no calibrated qparams — "
+                "recompile with quantize=True to execute")
+        return run_net(self.program, x, self.ensure_params(),
+                       backend=backend, **kwargs)
+
+    # -- C emission --------------------------------------------------------
+    def emit_c(self, outdir=None, *, name: str | None = None,
+               geometry_only: bool = False,
+               idiom: str | None = _UNSET) -> dict[str, str]:
+        """Emit one intrinsic-C unit per op (``{filename: source}``).
+
+        Quantized nets bake their requant tables in; ``geometry_only``
+        emits just the solved ring skeleton (byte-typed pool header, no
+        requant constants — the deterministic form the CLI smoke gate
+        diffs against goldens).  ``idiom`` defaults to the target's
+        requant idiom banner.  ``outdir`` additionally writes the files.
+        """
+        if idiom is _UNSET:
+            idiom = (self.target.requant_idiom
+                     if self.target.requant_idiom != "none" else None)
+        name = name or self.net_name
+        if geometry_only or not self.quantized:
+            if not geometry_only and self.program.quantized:
+                raise CompileError(
+                    "this is a planner-only int8 compile (quantize="
+                    "False): no requant tables to bake — recompile with "
+                    "quantize=True, or pass geometry_only=True for the "
+                    "ring skeleton")
+            prog = (self.program.with_dtype("byte") if geometry_only
+                    else self.program)
+            units = emit_program(prog, name, idiom=idiom)
+        else:
+            units = emit_program(self.qnet.program, name,
+                                 quant=self.qnet.qparams, idiom=idiom)
+        if outdir is not None:
+            import pathlib
+
+            out = pathlib.Path(outdir)
+            out.mkdir(parents=True, exist_ok=True)
+            for fname, src in units.items():
+                (out / fname).write_text(src)
+        return units
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> dict:
+        """Footprint / bottleneck accounting against the target budget."""
+        t = self.target
+        bot = self.mcu_bottleneck_bytes
+        flash = self.flash_bytes_used
+        rep = {
+            "net": self.net_name,
+            "target": t.name,
+            "cpu": t.cpu,
+            "dtype": self.dtype,
+            "n_ops": len(self.program.ops),
+            "pool_bytes": self.pool_bytes,
+            "physical_pool_bytes": self.program.physical_pool_bytes,
+            "mcu_bottleneck_bytes": bot,
+            "tinyengine_bottleneck_bytes":
+                self.mcu.get("tinyengine_bottleneck_bytes"),
+            "hmcos_bottleneck_bytes":
+                self.mcu.get("hmcos_bottleneck_bytes"),
+            "reduction_vs_tinyengine":
+                self.mcu.get("reduction_vs_tinyengine"),
+            "reduction_vs_hmcos": self.mcu.get("reduction_vs_hmcos"),
+            "bottleneck_group": self.mcu.get("bottleneck_group"),
+            "sram_bytes": t.sram_bytes,
+            "sram_margin_bytes": t.sram_margin(bot),
+            "fits_sram": t.fits_sram(bot),
+            "flash_bytes": t.flash_bytes,
+            "flash_bytes_used": flash,
+            "fits_flash": flash <= t.flash_bytes,
+            "certificate": self.certificate,
+            "passes": [[p.name, round(p.seconds, 4), p.note]
+                       for p in self.passes],
+        }
+        return rep
+
+    # -- plan artifacts ----------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the solved plan + payloads as a JSON artifact.
+
+        Loading it back (:meth:`load`) reproduces ``pool_bytes``, the
+        emitted C and bit-identical execution without ever re-running
+        the branch-and-bound scheduler."""
+        payload = {
+            "schema": artifact.SCHEMA,
+            "kind": artifact.KIND,
+            "net": self.net_name,
+            "target": dataclasses.asdict(self.target),
+            "dtype": self.dtype,
+            "program": self.program.to_json_dict(),
+            "params": artifact.encode(self.ensure_params()),
+            "quant": None if not self.quantized else {
+                "act_scales": list(self.qnet.act_scales),
+                "qparams": artifact.encode(self.qnet.qparams),
+            },
+            "mcu": self.mcu,
+            "certificate": self.certificate,
+            "passes": [[p.name, p.seconds, p.note] for p in self.passes],
+        }
+        artifact.dump(payload, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledNet":
+        payload = artifact.load(path)
+        target = Target(**payload["target"])
+        program = PoolProgram.from_json_dict(payload["program"])
+        params = artifact.decode(payload["params"])
+        qnet = None
+        if payload["quant"] is not None:
+            qnet = QuantizedNet(
+                plan=None, program=program, params=params,
+                qparams=artifact.decode(payload["quant"]["qparams"]),
+                act_scales=tuple(payload["quant"]["act_scales"]))
+        return cls(net_name=payload["net"], target=target,
+                   dtype=payload["dtype"], program=program, params=params,
+                   qnet=qnet, mcu=payload["mcu"],
+                   certificate=payload["certificate"],
+                   passes=[PassRecord(n, s, note)
+                           for n, s, note in payload["passes"]])
+
+
+def load(path: str) -> CompiledNet:
+    """Load a saved plan artifact (module-level alias)."""
+    return CompiledNet.load(path)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline.
+# ---------------------------------------------------------------------------
+
+def _mcu_summary(plan: NetPlan) -> dict:
+    """Snapshot the byte-granular accounting so it survives save/load."""
+    return {
+        "mcu_bottleneck_bytes": plan.mcu_bottleneck_bytes,
+        "tinyengine_bottleneck_bytes": plan.tinyengine_bottleneck_bytes,
+        "hmcos_bottleneck_bytes": plan.hmcos_bottleneck_bytes,
+        "reduction_vs_tinyengine": plan.reduction_vs_tinyengine,
+        "reduction_vs_hmcos": plan.reduction_vs_hmcos,
+        "mcu_pool_bytes": plan.mcu_pool_bytes,
+        "bottleneck_group": plan.bottleneck_group().name,
+        "n_groups": len(plan.groups),
+        "groups": [{"name": g.name, "kind": g.group.kind,
+                    "fused_exec": g.group.fused_exec,
+                    "mcu_bytes": g.group.mcu_bytes,
+                    "te_bytes": g.group.te_bytes,
+                    "hmcos_bytes": g.group.hmcos_bytes}
+                   for g in plan.groups],
+    }
+
+
+def compile(net, target: str | Target = "host-sim", *, dtype=None,
+            fused_exec: bool | None = None, seg_width: int | None = None,
+            block_rows=_UNSET, order=None, params=None, key=None,
+            calib=None, n_calib: int = 2, quantize: bool = True,
+            certify: bool = True, check_budget: bool = True) -> CompiledNet:
+    """Compile ``net`` for ``target`` — the repo's deployment front door.
+
+    ``net`` is a :class:`repro.graph.Graph` or a registered net name
+    (:func:`available_nets`); ``target`` a :class:`Target` or registry
+    name.  Every knob defaults from the target descriptor: ``dtype``
+    (``target.default_dtype``), ring geometry (``seg_width`` /
+    ``block_rows``), and ``fused_exec`` (unfused for int8 — the
+    CMSIS-NN deployment form quantization requires).  ``params`` /
+    ``key`` seed the float parameters (He-init with PRNGKey(0) when
+    omitted — deterministic, and materialized lazily so planner-only
+    compiles never pay for init); ``calib``/``n_calib`` feed int8
+    calibration.  ``quantize=False`` plans an int8 ring without
+    calibrating (planner-only, ``.run`` unavailable); ``certify=False``
+    skips the sim oracle; ``check_budget=False`` records the SRAM
+    verdict without raising :class:`SRAMBudgetError`.
+    """
+    t = get_target(target)
+    dtype = dtype or t.default_dtype
+    dtype_itemsize(dtype)  # fail fast on unknown dtypes
+    if fused_exec is None:
+        fused_exec = dtype != "int8"
+    elif fused_exec and dtype == "int8":
+        raise CompileError(
+            "int8 compilation requires unfused module lowering "
+            "(fused_exec=False): quantized execution requantizes "
+            "between the pw/dw/pw ops")
+    seg_width = t.seg_width if seg_width is None else seg_width
+    block_rows = t.block_rows if block_rows is _UNSET else block_rows
+
+    passes: list[PassRecord] = []
+
+    def run_pass(name, fn):
+        t0 = time.perf_counter()
+        out, note = fn()
+        passes.append(PassRecord(name, time.perf_counter() - t0, note))
+        return out
+
+    # build ----------------------------------------------------------------
+    def _build():
+        g = _resolve_net(net)
+        g.validate()
+        return g, f"{len(g.nodes)} nodes, {len(g.modules)} modules"
+    graph = run_pass("build", _build)
+
+    # schedule -------------------------------------------------------------
+    def _schedule():
+        if order is not None:
+            return list(order), f"caller order ({len(order)} nodes)"
+        o, peak = reorder(graph)
+        return o, f"peak live {peak} B over {len(o)} nodes"
+    sched_order = run_pass("schedule", _schedule)
+
+    # plan -----------------------------------------------------------------
+    def _plan():
+        p = _plan_net(graph, order=sched_order, seg_width=seg_width,
+                      block_rows=block_rows, dtype=dtype,
+                      fused_exec=fused_exec)
+        return p, (f"{len(p.program.ops)} ops in one ring, "
+                   f"pool {p.program.pool_bytes} B")
+    plan = run_pass("plan", _plan)
+
+    # budget ---------------------------------------------------------------
+    # Pure arithmetic on the solved plan: gate BEFORE the expensive
+    # quantize/certify passes so an over-budget net fails in ms.
+    def _budget():
+        bot = plan.mcu_bottleneck_bytes
+        margin = t.sram_margin(bot)
+        verdict = "fits" if margin >= 0 else "OVER"
+        note = (f"bottleneck {bot} B vs {t.sram_bytes} B SRAM "
+                f"({verdict}, margin {margin} B)")
+        if check_budget and margin < 0:
+            raise SRAMBudgetError(
+                f"{graph.name} needs {bot} B (byte-granular bottleneck) "
+                f"but target {t.name!r} has {t.sram_bytes} B SRAM "
+                f"(over by {-margin} B); pass check_budget=False to "
+                "record the verdict without gating")
+        return (bot, margin), note
+    run_pass("budget", _budget)
+
+    # quantize -------------------------------------------------------------
+    # (parameters materialize lazily: planner-only compiles — the
+    # benchmark sections — never pay for init_net_params)
+    qnet = None
+    if dtype == "int8" and quantize:
+        def _quant():
+            nonlocal params
+            if params is None:
+                params = init_net_params(plan, key)
+            q = _quantize_net(plan, params, calib=calib, n_calib=n_calib)
+            return q, (f"{len(q.qparams)} q-ops, requant tables for "
+                       f"{sum(1 for op in q.program.ops if op.kind != 'add')}"
+                       " stores")
+        qnet = run_pass("quantize", _quant)
+
+    program = qnet.program if qnet is not None else plan.program
+
+    # certify --------------------------------------------------------------
+    certificate = None
+    if certify:
+        def _certify():
+            sim = certify_net(program)
+            cert = {"clobbers": 0, "peak_live": sim.peak_live,
+                    "reads": sim.reads, "writes": sim.writes,
+                    "n_segments": program.n_segments}
+            return cert, (f"zero clobbers; peak {sim.peak_live}/"
+                          f"{program.n_segments} segments live")
+        certificate = run_pass("certify", _certify)
+
+    return CompiledNet(net_name=graph.name, target=t, dtype=dtype,
+                       program=program, params=params, qnet=qnet,
+                       mcu=_mcu_summary(plan), certificate=certificate,
+                       passes=passes, plan=plan, graph=graph,
+                       init_key=key)

@@ -392,6 +392,21 @@ class PoolProgram:
         return dataclasses.replace(self, dtype=dtype, elem_bytes=eb,
                                    ops=ops)
 
+    # -- serialization (plan artifacts, DESIGN.md §9) ----------------------
+    def to_json_dict(self) -> dict:
+        """The program as a JSON-safe dict (every field is an int/str/
+        bool/None) — the solved plan IS the artifact; loading it back
+        never re-runs the offset solver."""
+        d = dataclasses.asdict(self)     # recurses into ops already
+        d["ops"] = list(d["ops"])        # tuple -> JSON array
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "PoolProgram":
+        ops = tuple(PoolOp(**op) for op in d["ops"])
+        return cls(**{**{k: v for k, v in d.items() if k != "ops"},
+                      "ops": ops})
+
     # -- validation --------------------------------------------------------
     def op_blocks(self, op: PoolOp) -> tuple[int, int]:
         """(in, out) contiguous DMA block sizes of ``op``, in segments.

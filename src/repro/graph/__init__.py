@@ -15,6 +15,10 @@ Schedule, fuse and execute full DNNs on ONE VirtualPool:
                    baselines.
   * ``run``      — the executor bridge: stage, execute on sim/jnp/pallas,
                    fetch; plus the plain-XLA reference forward pass.
+
+The deployment front door over this package is ``repro.compile(net,
+target)`` (DESIGN.md §9); ``plan_net``/``quantize_net`` remain
+importable here as deprecated shims over the driver's internals.
 """
 from .ir import Graph, Node, Tensor, build_mcunet, build_mlp_tower
 from .schedule import (FusionGroup, peak_live_bytes, reorder, select_groups,

@@ -162,11 +162,11 @@ def group_specs(graph: Graph, group: FusionGroup) -> list[LayerSpec]:
 # plan_net.
 # ---------------------------------------------------------------------------
 
-def plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
-             block_rows: int | None = 1, elem_bytes: int | None = None,
-             dtype: str = "float32", delta_slack: int = 0,
-             fused_exec: bool = True,
-             order: Sequence[str] | None = None) -> NetPlan:
+def _plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
+              block_rows: int | None = 1, elem_bytes: int | None = None,
+              dtype: str = "float32", delta_slack: int = 0,
+              fused_exec: bool = True,
+              order: Sequence[str] | None = None) -> NetPlan:
     """Plan a whole network into one ring.
 
     ``block_rows=1`` (default) produces the DMA-aligned geometry all
@@ -214,3 +214,21 @@ def plan_net(graph: Graph, *, seg_width: int = SEG_WIDTH,
     return NetPlan(name=graph.name, graph=graph, order=tuple(order),
                    groups=tuple(gplans), program=program,
                    mcu_pool_bytes=mcu_pool)
+
+
+def plan_net(graph: Graph, **kwargs) -> NetPlan:
+    """Deprecated direct entry — use :func:`repro.compile`.
+
+    ``plan_net`` is now the ``plan`` pass of the compile driver
+    (``repro.compile(net, target=...)``), which sources seg-width /
+    alignment / dtype knobs from the :class:`repro.compile.targets.
+    Target` registry instead of per-call-site wiring.  The shim keeps
+    the exact legacy behavior (same defaults, same NetPlan)."""
+    import warnings
+
+    warnings.warn(
+        "direct plan_net() entry is deprecated; use "
+        "repro.compile(net, target=...) — the driver runs plan_net as "
+        "its 'plan' pass with knobs from the Target registry",
+        DeprecationWarning, stacklevel=2)
+    return _plan_net(graph, **kwargs)

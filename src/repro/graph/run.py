@@ -238,8 +238,8 @@ def _check_quantizable(program: PoolProgram) -> None:
                              "form (relu/None only)")
 
 
-def quantize_net(plan, params, *, calib: jax.Array | None = None,
-                 n_calib: int = 2, key=None) -> QuantizedNet:
+def _quantize_net(plan, params, *, calib: jax.Array | None = None,
+                  n_calib: int = 2, key=None) -> QuantizedNet:
     """Calibrate an int8 deployment from the float reference forward.
 
     ``plan`` must lower to the unfused op vocabulary (``plan_net(...,
@@ -297,6 +297,21 @@ def quantize_net(plan, params, *, calib: jax.Array | None = None,
     return QuantizedNet(plan=plan, program=program.with_dtype("int8"),
                         params=list(params), qparams=qparams,
                         act_scales=act_scales)
+
+
+def quantize_net(plan, params, **kwargs) -> QuantizedNet:
+    """Deprecated direct entry — use ``repro.compile(net, target=...,
+    dtype="int8")``, whose ``quantize`` pass runs this calibration with
+    the target's dtype/idiom defaults.  The shim keeps the exact legacy
+    behavior (same defaults, same QuantizedNet)."""
+    import warnings
+
+    warnings.warn(
+        "direct quantize_net() entry is deprecated; use "
+        "repro.compile(net, target=..., dtype='int8') — the driver runs "
+        "quantize_net as its 'quantize' pass",
+        DeprecationWarning, stacklevel=2)
+    return _quantize_net(plan, params, **kwargs)
 
 
 def run_net_quantized(qnet: QuantizedNet, x: jax.Array, *,

@@ -4,6 +4,16 @@ Run after an intentional change to the emitted intrinsic skeletons or
 the planner's solved offsets:
 
     PYTHONPATH=src python tests/golden/regen.py
+
+Two golden sets:
+
+  * ``*.c``       — the mini/fused/qmini unit-test programs
+                    (tests/test_codegen.py),
+  * ``vww/*.c``   — the whole MCUNet-5fps-VWW int8 deployment plan's
+                    ring-geometry units (byte-typed pool header, target
+                    idiom banner, no requant tables — fully determined
+                    by the planner's solved integer offsets).  This is
+                    what ``vmcu-compile --smoke`` diffs in CI.
 """
 import pathlib
 import sys
@@ -16,12 +26,21 @@ from test_codegen import (_fused_program, _mini_net_program,  # noqa: E402
 from repro.core.codegen import emit_program  # noqa: E402
 
 
-def main() -> None:
-    out = pathlib.Path(__file__).parent
-    units = emit_program(_mini_net_program(), "mini")
-    units.update(emit_program(_fused_program(), "fused"))
-    qprog, qparams = _quantized_program_and_qparams()
-    units.update(emit_program(qprog, "qmini", quant=qparams))
+def _vww_geometry_units() -> dict[str, str]:
+    """The CLI smoke-gate goldens: MCUNet-VWW's int8 deployment ring.
+
+    Emitted through the SAME facade path ``vmcu-compile --smoke`` uses,
+    so the cortex-m4 Target descriptor (geometry, dtype, idiom) stays
+    the one definition site for both sides of the diff."""
+    import repro
+
+    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4",
+                       quantize=False, certify=False)
+    return cn.emit_c(geometry_only=True, name="vww")
+
+
+def _write(out: pathlib.Path, units: dict[str, str]) -> None:
+    out.mkdir(parents=True, exist_ok=True)
     for stale in out.glob("*.c"):       # goldens no longer emitted must
         if stale.name not in units:     # not linger as if still covered
             stale.unlink()
@@ -29,6 +48,16 @@ def main() -> None:
     for name, src in units.items():
         (out / name).write_text(src)
         print("wrote", out / name)
+
+
+def main() -> None:
+    out = pathlib.Path(__file__).parent
+    units = emit_program(_mini_net_program(), "mini")
+    units.update(emit_program(_fused_program(), "fused"))
+    qprog, qparams = _quantized_program_and_qparams()
+    units.update(emit_program(qprog, "qmini", quant=qparams))
+    _write(out, units)
+    _write(out / "vww", _vww_geometry_units())
 
 
 if __name__ == "__main__":

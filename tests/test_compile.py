@@ -1,0 +1,229 @@
+"""The one-call deployment API: target registry, pass pipeline,
+CompiledNet surface, budget gating, and the deprecation shims over the
+legacy plan_net/quantize_net entry points."""
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.compile.targets import Target, get_target, register_target
+from repro.core.graph_planner import MCUNET_5FPS_VWW
+from repro.graph import build_mcunet, plan_net, quantize_net
+from repro.graph.ir import Graph
+from repro.graph.netplan import _plan_net
+from repro.graph.run import (_quantize_net, init_net_params,
+                             reference_forward)
+
+GOLDEN_VWW = pathlib.Path(__file__).parent / "golden" / "vww"
+
+
+def _s7_graph() -> Graph:
+    """One unfused residual module — the small compile fixture."""
+    return build_mcunet(MCUNET_5FPS_VWW[6:7], "s7", include_head=False)
+
+
+# ---------------------------------------------------------------------------
+# Target registry.
+# ---------------------------------------------------------------------------
+
+def test_registry_ships_the_stock_targets():
+    assert {"cortex-m4", "cortex-m7", "host-sim"} <= set(
+        repro.list_targets())
+    m4 = get_target("cortex-m4")
+    assert m4.requant_idiom == "smlad" and m4.default_dtype == "int8"
+    assert get_target("cortex-m55").requant_idiom == "mve"
+    assert get_target("host-sim").default_dtype == "float32"
+    # descriptors pass through unchanged
+    assert get_target(m4) is m4
+
+
+def test_unknown_target_and_idiom_rejected():
+    with pytest.raises(ValueError, match="unknown target"):
+        get_target("cortex-m999")
+    with pytest.raises(ValueError, match="idiom"):
+        Target(name="x", cpu="x", sram_bytes=1, flash_bytes=1,
+               requant_idiom="avx512")
+
+
+def test_register_custom_target():
+    t = Target(name="test-board", cpu="test", sram_bytes=64_000,
+               flash_bytes=256_000)
+    register_target(t, "tb", overwrite=True)
+    assert get_target("tb") is t
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(t)
+
+
+def test_target_knobs_are_the_single_definition_site():
+    m4 = get_target("cortex-m4")
+    assert m4.plan_kwargs == {"seg_width": 128, "block_rows": 1}
+    assert m4.byte_ring_kwargs == {"seg_width": 1, "block_rows": None}
+    assert m4.fits_sram(128_000) and not m4.fits_sram(128_001)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline.
+# ---------------------------------------------------------------------------
+
+def test_float_compile_equals_manual_plan():
+    g = _s7_graph()
+    cn = repro.compile(g, target="host-sim")
+    manual = _plan_net(g)
+    assert cn.program == manual.program
+    assert cn.mcu_bottleneck_bytes == manual.mcu_bottleneck_bytes
+    assert [p.name for p in cn.passes] == ["build", "schedule", "plan",
+                                           "budget", "certify"]
+
+
+def test_int8_compile_runs_all_passes():
+    cn = repro.compile(_s7_graph(), target="cortex-m4")
+    assert cn.quantized and cn.dtype == "int8"
+    assert [p.name for p in cn.passes] == ["build", "schedule", "plan",
+                                           "budget", "quantize", "certify"]
+    assert cn.certificate["clobbers"] == 0
+    assert cn.program.quantized  # executed program is the int8-typed one
+
+
+def test_compile_run_matches_reference():
+    cn = repro.compile(_s7_graph(), target="host-sim")
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (cn.program.in_rows, cn.program.in_dim))
+    y = np.asarray(cn.run(x))
+    ref = np.asarray(reference_forward(cn.program, x, cn.ensure_params()))
+    np.testing.assert_allclose(y, ref, atol=1e-4)
+
+
+def test_planner_only_int8_run_raises_clearly():
+    cn = repro.compile(_s7_graph(), target="cortex-m4", quantize=False,
+                       certify=False)
+    assert cn.qnet is None and cn.program.quantized
+    x = jax.numpy.zeros((cn.program.in_rows, cn.program.in_dim))
+    with pytest.raises(repro.CompileError, match="quantize=True"):
+        cn.run(x)
+    with pytest.raises(repro.CompileError, match="geometry_only"):
+        cn.emit_c()
+    assert len(cn.emit_c(geometry_only=True)) == len(cn.program.ops)
+
+
+def test_planner_only_compile_never_materializes_params():
+    """Benchmark-grade compiles stay planner-fast: no init_net_params
+    until .run()/.save() actually needs parameters."""
+    cn = repro.compile(_s7_graph(), target="host-sim", certify=False)
+    assert cn.params is None
+    analytic = cn.report()["flash_bytes_used"]   # analytic, no init
+    assert analytic > 0 and cn.params is None
+    cn.ensure_params()
+    assert cn.params is not None
+    assert cn.flash_bytes_used == analytic       # exact == analytic
+
+
+def test_compile_by_registered_name_and_errors():
+    cn = repro.compile("mcunet-vww", target="host-sim", certify=False)
+    assert cn.net_name == "mcunet-5fps-vww"
+    assert "mcunet-5fps-vww" in repro.available_nets()
+    with pytest.raises(ValueError, match="unknown net"):
+        repro.compile("mcunet-nope", target="host-sim")
+    with pytest.raises(TypeError, match="Graph or a registered name"):
+        repro.compile(42, target="host-sim")
+    with pytest.raises(repro.CompileError, match="unfused"):
+        repro.compile(_s7_graph(), target="cortex-m4", fused_exec=True)
+
+
+def test_sram_budget_gate():
+    tiny = Target(name="tiny-board", cpu="t", sram_bytes=1_000,
+                  flash_bytes=1_000_000)
+    with pytest.raises(repro.SRAMBudgetError, match="OVER|over by"):
+        repro.compile(_s7_graph(), target=tiny, quantize=False,
+                      certify=False)
+    # check_budget=False records the verdict without raising
+    cn = repro.compile(_s7_graph(), target=tiny, quantize=False,
+                       certify=False, check_budget=False)
+    rep = cn.report()
+    assert rep["fits_sram"] is False and rep["sram_margin_bytes"] < 0
+
+
+def test_report_accounts_against_the_target():
+    cn = repro.compile(_s7_graph(), target="cortex-m4")
+    rep = cn.report()
+    for key in ("net", "target", "dtype", "n_ops", "pool_bytes",
+                "mcu_bottleneck_bytes", "sram_margin_bytes", "fits_sram",
+                "flash_bytes_used", "certificate", "passes"):
+        assert key in rep, key
+    assert rep["dtype"] == "int8"
+    assert rep["sram_bytes"] == 128_000
+    assert rep["flash_bytes_used"] > 0
+    assert rep["pool_bytes"] == cn.program.pool_bytes
+
+
+def test_emit_c_bakes_target_idiom_banner():
+    cn = repro.compile(_s7_graph(), target="cortex-m4")
+    units = cn.emit_c()
+    assert all(src.startswith("// target idiom: __SMLAD")
+               for src in units.values())
+    assert any("_requant" in src for src in units.values())
+    mve = cn.emit_c(idiom="mve")
+    assert all("VMLADAVA.S8" in src.splitlines()[0]
+               for src in mve.values())
+    geom = cn.emit_c(geometry_only=True)
+    assert all("_mult[" not in src for src in geom.values())
+
+
+def test_vww_geometry_emission_matches_cli_goldens():
+    """The tier-1 pin of the ``vmcu-compile --smoke`` golden gate: the
+    compiled VWW deployment plan's ring-geometry units are byte-stable."""
+    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4",
+                       quantize=False, certify=False)
+    units = cn.emit_c(geometry_only=True, name="vww")
+    assert len(units) == len(list(GOLDEN_VWW.glob("*.c")))
+    for name, src in units.items():
+        golden = GOLDEN_VWW / name
+        assert golden.exists(), f"missing golden {name}; regenerate with " \
+            "tests/golden/regen.py"
+        assert src == golden.read_text(), f"{name} drifted from golden"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (direct legacy entry keeps working, with a warning).
+# ---------------------------------------------------------------------------
+
+def test_plan_net_shim_warns_and_matches_internal():
+    g = _s7_graph()
+    with pytest.warns(DeprecationWarning, match="repro.compile"):
+        via_shim = plan_net(g, fused_exec=False, dtype="int8")
+    direct = _plan_net(g, fused_exec=False, dtype="int8")
+    assert via_shim.program == direct.program
+    assert via_shim.mcu_bottleneck_bytes == direct.mcu_bottleneck_bytes
+
+
+def test_quantize_net_shim_warns_and_matches_internal():
+    plan = _plan_net(_s7_graph(), fused_exec=False, dtype="int8")
+    params = init_net_params(plan)
+    with pytest.warns(DeprecationWarning, match="repro.compile"):
+        via_shim = quantize_net(plan, params)
+    direct = _quantize_net(plan, params)
+    assert via_shim.act_scales == direct.act_scales
+    assert via_shim.program == direct.program
+    for a, b in zip(via_shim.qparams, direct.qparams):
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+def test_cli_smoke_gate_passes():
+    from repro.cli import main
+
+    # no --target/--dtype: --smoke pins the int8 cortex-m4 configuration
+    rc = main(["--smoke", "--golden-dir", str(GOLDEN_VWW)])
+    assert rc == 0
+
+
+def test_cli_list_targets():
+    from repro.cli import main
+
+    assert main(["--list-targets"]) == 0
+    assert main(["--list-nets"]) == 0

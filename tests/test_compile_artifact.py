@@ -1,0 +1,137 @@
+"""Plan artifacts: the codec is bit-exact, and save()/load() reproduces
+identical pool_bytes, identical emitted C and bit-identical int8
+execution on both MCUNet nets — without re-running the scheduler.
+
+Also the acceptance equivalence: ``repro.compile(net, target, int8)``
+is byte-identical to the manual ``plan_net + quantize_net +
+emit_program`` wiring it replaced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.compile import artifact
+from repro.core.codegen import emit_program
+from repro.core.graph_planner import (MCUNET_5FPS_VWW,
+                                      MCUNET_320KB_IMAGENET)
+from repro.core.program import PoolProgram
+from repro.graph import build_mcunet
+from repro.graph.netplan import _plan_net
+from repro.graph.run import (_quantize_net, init_net_params,
+                             run_net_quantized)
+
+
+# ---------------------------------------------------------------------------
+# Codec.
+# ---------------------------------------------------------------------------
+
+def test_codec_roundtrips_arrays_bit_exactly():
+    entries = [
+        (jnp.arange(-7, 5, dtype=jnp.int8).reshape(3, 4),
+         jnp.asarray([1 << 30, -5], jnp.int32)),
+        (jax.random.normal(jax.random.PRNGKey(0), (4, 3)), None),
+        None,
+        ((1 << 30) + 7, -1, (1 << 30) + 11, -2),
+    ]
+    back = artifact.decode(artifact.encode(entries))
+    assert isinstance(back, list) and isinstance(back[0], tuple)
+    assert back[2] is None and back[3] == entries[3]
+    np.testing.assert_array_equal(np.asarray(back[0][0]),
+                                  np.asarray(entries[0][0]))
+    assert np.asarray(back[1][0]).tobytes() \
+        == np.asarray(entries[1][0]).tobytes()  # bit-exact floats
+
+
+def test_codec_roundtrips_bfloat16():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5,)).astype(jnp.bfloat16)
+    y = artifact.decode(artifact.encode(x))
+    assert y.dtype == jnp.bfloat16
+    assert np.asarray(y).tobytes() == np.asarray(x).tobytes()
+
+
+def test_program_json_roundtrip():
+    prog = _plan_net(build_mcunet(MCUNET_5FPS_VWW[6:7], "s7",
+                                  include_head=False),
+                     fused_exec=False, dtype="int8").program
+    back = PoolProgram.from_json_dict(prog.to_json_dict())
+    assert back == prog
+
+
+def test_artifact_rejects_foreign_payloads(tmp_path):
+    import json
+
+    p = tmp_path / "x.json"
+    p.write_text(json.dumps({"kind": "something-else", "schema": 1}))
+    with pytest.raises(ValueError, match="not a vmcu"):
+        artifact.load(str(p))
+    p.write_text(json.dumps({"kind": artifact.KIND, "schema": 99}))
+    with pytest.raises(ValueError, match="schema"):
+        artifact.load(str(p))
+
+
+# ---------------------------------------------------------------------------
+# Whole-net acceptance: facade == manual wiring, and save/load == facade.
+# ---------------------------------------------------------------------------
+
+NETS = (("mcunet-5fps-vww", MCUNET_5FPS_VWW, 2, "cortex-m4"),
+        ("mcunet-320kb-imagenet", MCUNET_320KB_IMAGENET, 1000,
+         "cortex-m7"))
+
+
+def _roundtrip_net(tmp_path, name, modules, classes, target):
+    # the facade (certify elsewhere; this test pins artifacts + parity)
+    cn = repro.compile(name, target=target, dtype="int8", certify=False)
+
+    # the manual wiring it replaced
+    g = build_mcunet(modules, name, num_classes=classes)
+    plan = _plan_net(g, fused_exec=False, dtype="int8")
+    params = init_net_params(plan)
+    qnet = _quantize_net(plan, params)
+
+    x = jax.random.normal(jax.random.PRNGKey(5),
+                          (plan.program.in_rows, plan.program.in_dim))
+
+    # byte-identical pool accounting + golden C + int8 execution
+    assert cn.pool_bytes == qnet.pool_bytes
+    assert cn.program == qnet.program
+    idiom = cn.target.requant_idiom
+    manual_units = emit_program(qnet.program, name, quant=qnet.qparams,
+                                idiom=idiom)
+    assert cn.emit_c() == manual_units
+    y_facade = np.asarray(cn.run(x))
+    y_manual = np.asarray(run_net_quantized(qnet, x))
+    np.testing.assert_array_equal(y_facade, y_manual)
+
+    # save -> load -> run: identical without re-solving the schedule
+    path = cn.save(str(tmp_path / f"{name}.plan.json"))
+    loaded = repro.load(path)
+    assert loaded.plan is None          # nothing to re-solve with
+    assert loaded.pool_bytes == cn.pool_bytes
+    assert loaded.program == cn.program
+    assert loaded.mcu == cn.mcu
+    assert loaded.emit_c() == manual_units
+    np.testing.assert_array_equal(np.asarray(loaded.run(x)), y_facade)
+    assert loaded.report()["fits_sram"] == cn.report()["fits_sram"]
+
+
+def test_vww_artifact_roundtrip_and_manual_parity(tmp_path):
+    _roundtrip_net(tmp_path, *NETS[0])
+
+
+def test_imagenet_artifact_roundtrip_and_manual_parity(tmp_path):
+    _roundtrip_net(tmp_path, *NETS[1])
+
+
+def test_float_artifact_roundtrip(tmp_path):
+    cn = repro.compile(build_mcunet(MCUNET_5FPS_VWW[6:7], "s7",
+                                    include_head=False),
+                       target="host-sim", certify=False)
+    x = jax.random.normal(jax.random.PRNGKey(6),
+                          (cn.program.in_rows, cn.program.in_dim))
+    y = np.asarray(cn.run(x))
+    loaded = repro.load(cn.save(str(tmp_path / "s7.plan.json")))
+    assert not loaded.quantized
+    assert loaded.program == cn.program
+    np.testing.assert_array_equal(np.asarray(loaded.run(x)), y)

@@ -8,8 +8,8 @@ import pytest
 from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       MCUNET_320KB_IMAGENET)
 from repro.graph import (build_mcunet, build_mlp_tower, certify_net,
-                         init_net_params, plan_net, reference_forward,
-                         run_net)
+                         init_net_params, reference_forward, run_net)
+from repro.graph.netplan import _plan_net as plan_net
 
 KEY = jax.random.PRNGKey(0)
 

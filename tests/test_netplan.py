@@ -7,7 +7,8 @@ from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       MCUNET_320KB_IMAGENET,
                                       tinyengine_module_bytes,
                                       vmcu_module_bytes)
-from repro.graph import build_mcunet, build_mlp_tower, certify_net, plan_net
+from repro.graph import build_mcunet, build_mlp_tower, certify_net
+from repro.graph.netplan import _plan_net as plan_net
 
 
 def test_vww_whole_network_bottleneck_reproduces_paper_reduction():

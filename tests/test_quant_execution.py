@@ -9,8 +9,9 @@ from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       MCUNET_320KB_IMAGENET)
 from repro.core.program import GemmSpec, plan_program
 from repro.graph import (build_mcunet, certify_net, init_net_params,
-                         plan_net, quantize_net, quantized_agreement,
-                         run_net_quantized)
+                         quantized_agreement, run_net_quantized)
+from repro.graph.netplan import _plan_net as plan_net
+from repro.graph.run import _quantize_net as quantize_net
 
 KEY = jax.random.PRNGKey(0)
 
