@@ -33,7 +33,8 @@ import time
 import jax
 
 from . import (capacity, energy_proxy, full_network, int8_network, latency,
-               multi_layer, pool_footprint, roofline_table, single_layer)
+               model_zoo, multi_layer, pool_footprint, roofline_table,
+               single_layer)
 from .timing import bench_us
 
 BENCH_JSON = "BENCH_vmcu.json"
@@ -90,6 +91,7 @@ SECTIONS = [
     ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
     ("Net_full_network", full_network.run, full_network.main, True),
     ("Int8_full_network", int8_network.run, int8_network.main, True),
+    ("Zoo_k2d", model_zoo.run, model_zoo.main, True),
     ("Compile_pipeline", _compile_pipeline_rows, _compile_pipeline_show,
      True),
     ("Fig11_12_capacity", capacity.run, capacity.main, True),
@@ -167,6 +169,9 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"int8/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"int8/{r['net']}/int8_byte_ring_kb"] = r["int8_byte_ring_kb"]
         out[f"int8/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]
+    for r in sections.get("Zoo_k2d", []):
+        out[f"zoo/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
+        out[f"zoo/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]
     for r in sections.get("Compile_pipeline", []):
         out[f"compile/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"compile/{r['net']}/mcu_bottleneck_kb"] = \

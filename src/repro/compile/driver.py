@@ -31,7 +31,8 @@ import time
 
 from ..core.codegen import emit_program
 from ..core.program import PoolProgram, dtype_itemsize
-from ..graph.ir import Graph, build_mcunet
+from ..graph.ir import (Graph, build_ds_cnn, build_mcunet,
+                        build_mobilenet_v1, build_resnet8)
 from ..graph.netplan import NetPlan, _plan_net
 from ..graph.run import (QuantizedNet, _quantize_net, certify_net,
                          init_net_params, run_net, run_net_quantized)
@@ -69,9 +70,15 @@ def _imagenet() -> Graph:
                         num_classes=1000)
 
 
-_NET_BUILDERS = {"mcunet-5fps-vww": _vww, "mcunet-320kb-imagenet": _imagenet}
+# MLPerf-Tiny-class model zoo: real k x k spatial convs (conv_k2d)
+# through the same one-ring planner as the MCUNet tables.
+_NET_BUILDERS = {"mcunet-5fps-vww": _vww, "mcunet-320kb-imagenet": _imagenet,
+                 "ds-cnn": build_ds_cnn, "resnet-8": build_resnet8,
+                 "mobilenetv1-0.25": build_mobilenet_v1}
 _NET_ALIASES = {"mcunet-vww": "mcunet-5fps-vww",
-                "mcunet-imagenet": "mcunet-320kb-imagenet"}
+                "mcunet-imagenet": "mcunet-320kb-imagenet",
+                "dscnn": "ds-cnn", "resnet8": "resnet-8",
+                "mobilenet-v1": "mobilenetv1-0.25"}
 
 
 def available_nets() -> tuple[str, ...]:
@@ -122,6 +129,8 @@ def _flash_param_bytes(program: PoolProgram) -> int:
     for op in program.ops:
         if op.kind in ("gemm", "conv_pw"):
             total += op.d_in * op.d_out
+        elif op.kind == "conv_k2d":
+            total += op.rs * op.rs * op.d_in * op.d_out
         elif op.kind == "conv_dw":
             total += op.rs * op.rs * op.d_in
         elif op.kind == "ib_fused":

@@ -28,11 +28,12 @@ from .baselines import (FIG7_CASES, LayerShape, hmcos_bytes,
                         pointwise_conv_layer, tinyengine_bytes)
 from .vpool import (LANE, SEG_WIDTH, PoolSpec, VirtualPool, ceil_div,
                     fetch_rows, segments_for, stage_rows)
-from .program import (ACTIVATIONS, AvgPoolSpec, ConvDWSpec, ConvPWSpec,
-                      ElementwiseSpec, FusedChainSpec, FusedMLPSpec,
-                      GemmSpec, IBModuleSpec, InvertedBottleneckSpec,
-                      PoolOp, PoolProgram, ResidualAddSpec,
-                      concat_programs, plan_module_program, plan_program,
+from .program import (ACTIVATIONS, AvgPoolSpec, ConvDWSpec, ConvK2DSpec,
+                      ConvPWSpec, ElementwiseSpec, FusedChainSpec,
+                      FusedMLPSpec, GemmSpec, IBModuleSpec,
+                      InvertedBottleneckSpec, PoolOp, PoolProgram,
+                      ResidualAddSpec, concat_programs,
+                      plan_module_program, plan_program,
                       plan_stream_chain_program, resolve_activation)
 from .executors import (execute, executor_names, register_executor,
                         run_program, run_program_jnp, run_program_pallas,
@@ -47,8 +48,8 @@ __all__ = [
     "PoolOp", "PoolProgram", "plan_program", "plan_module_program",
     "plan_stream_chain_program", "concat_programs", "GemmSpec",
     "FusedMLPSpec", "ElementwiseSpec", "FusedChainSpec",
-    "InvertedBottleneckSpec", "ConvPWSpec", "ConvDWSpec", "IBModuleSpec",
-    "ResidualAddSpec", "AvgPoolSpec",
+    "InvertedBottleneckSpec", "ConvPWSpec", "ConvDWSpec", "ConvK2DSpec",
+    "IBModuleSpec", "ResidualAddSpec", "AvgPoolSpec",
     "ACTIVATIONS", "resolve_activation",
     "execute", "executor_names", "register_executor", "run_program",
     "run_program_sim", "run_program_jnp", "run_program_pallas",

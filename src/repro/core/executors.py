@@ -99,7 +99,7 @@ def _normalize_qparams(program: PoolProgram, params):
                          f"{len(program.ops)} ops")
     out = []
     for op, p in zip(program.ops, params):
-        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
             w, b, mult, shift = p
             if b is None:
                 b = jnp.zeros((op.d_out,), jnp.int32)
@@ -109,7 +109,8 @@ def _normalize_qparams(program: PoolProgram, params):
         else:
             raise NotImplementedError(
                 f"op kind {op.kind!r} has no int8 execution path — lower "
-                "the net with plan_net(..., fused_exec=False)")
+                "the net with fused_exec=False (repro.compile does for "
+                "int8 targets)")
     return out
 
 
@@ -124,7 +125,7 @@ def _normalize_params(program: PoolProgram, params):
                          f"{len(program.ops)} ops")
     out = []
     for op, p in zip(program.ops, params):
-        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
             w, b = p
             if b is None:
                 b = jnp.zeros((op.d_out,), w.dtype)
@@ -307,6 +308,32 @@ def conv_dw_ring(pool, w, b, *, op, n_segments):
     return _store_image(pool, op, y, n_segments)
 
 
+def _k2d_geometry(op) -> tuple[int, int, int]:
+    """(pad_lo, pad_hi, stride) of a conv_k2d op — generous high padding
+    (extra rows are zeros and never selected by the strided slice)."""
+    from .rowsched import conv_k2d_pad
+
+    pad_lo = conv_k2d_pad(op.rs, op.padding)
+    pad_hi = pad_lo + op.stride if op.padding == "same" else 0
+    return pad_lo, pad_hi, op.stride
+
+
+def conv_k2d_ring(pool, w, b, *, op, n_segments):
+    """General k x k conv: ``w`` is ``[k, k, c_in, c_out]``."""
+    img = _fetch_image(pool, op, n_segments)
+    pad_lo, pad_hi, s = _k2d_geometry(op)
+    padded = jnp.pad(img, ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.float32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + jnp.einsum("hwc,cd->hwd", tap,
+                                   w[r, c].astype(jnp.float32))
+    y = resolve_activation(op.activation)(acc + b.astype(jnp.float32))
+    return _store_image(pool, op, y, n_segments)
+
+
 def ib_fused_ring(pool, w1, wd, w2, *, op, n_segments):
     """Fused inverted bottleneck, same math as
     ``kernels.inverted_bottleneck.inverted_bottleneck_ref`` (stride 1,
@@ -330,7 +357,8 @@ def ib_fused_ring(pool, w1, wd, w2, *, op, n_segments):
 def add_ring(pool, *, op, n_segments):
     x = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n_segments)
     res = fetch_rows(pool, op.aux_ptr, op.rows_in, op.d_in, n_segments)
-    y = (x.astype(jnp.float32) + res.astype(jnp.float32)).astype(pool.dtype)
+    y = resolve_activation(op.activation)(
+        x.astype(jnp.float32) + res.astype(jnp.float32)).astype(pool.dtype)
     return stage_rows(pool, y, op.out_ptr, n_segments)
 
 
@@ -366,6 +394,27 @@ def conv_pw_ring_q(pool, w, b, mult, shift, *, op, n_segments):
     ridx, cidx = _pw_maps(op)
     sub = img[jnp.array(ridx)][:, jnp.array(cidx)]
     acc = jnp.einsum("hwc,cd->hwd", sub, w.astype(jnp.int32))
+    acc = _q_act(acc + b.astype(jnp.int32), op.activation)
+    q = requantize(acc, mult[None, None, :], shift[None, None, :])
+    return _store_image(pool, op, q, n_segments)
+
+
+def conv_k2d_ring_q(pool, w, b, mult, shift, *, op, n_segments):
+    """Int8 k x k conv: int32 accumulate over every tap, per-channel
+    requantize on store (zero padding is exact — symmetric quantization
+    keeps the zero point at 0)."""
+    from ..quant.requant import requantize
+
+    img = _fetch_image_q(pool, op, n_segments)
+    pad_lo, pad_hi, s = _k2d_geometry(op)
+    padded = jnp.pad(img, ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.int32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + jnp.einsum("hwc,cd->hwd", tap,
+                                   w[r, c].astype(jnp.int32))
     acc = _q_act(acc + b.astype(jnp.int32), op.activation)
     q = requantize(acc, mult[None, None, :], shift[None, None, :])
     return _store_image(pool, op, q, n_segments)
@@ -426,7 +475,8 @@ def add_ring_q(pool, mult_in, shift_in, mult_aux, shift_aux, *, op,
     res = fetch_rows(pool, op.aux_ptr, op.rows_in, op.d_in, n_segments)
     ya = requantize_i32(x.astype(jnp.int32), mult_in, shift_in)
     yb = requantize_i32(res.astype(jnp.int32), mult_aux, shift_aux)
-    q = jnp.clip(ya + yb, -128, 127).astype(jnp.int8)
+    acc = _q_act(ya + yb, op.activation)   # post-add relu (int32 domain)
+    q = jnp.clip(acc, -128, 127).astype(jnp.int8)
     return stage_rows(pool, q, op.out_ptr, n_segments)
 
 
@@ -462,6 +512,10 @@ def _run_jnp_q(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
             w, b, mult, shift = p
             pool = conv_dw_ring_q(pool, w, b, mult, shift, op=op,
                                   n_segments=n)
+        elif op.kind == "conv_k2d":
+            w, b, mult, shift = p
+            pool = conv_k2d_ring_q(pool, w, b, mult, shift, op=op,
+                                   n_segments=n)
         elif op.kind == "add":
             mi, si, ma, sa = p
             pool = add_ring_q(pool, mi, si, ma, sa, op=op, n_segments=n)
@@ -507,6 +561,9 @@ def _run_jnp(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
         elif op.kind == "conv_dw":
             w, b = p
             pool = conv_dw_ring(pool, w, b, op=op, n_segments=n)
+        elif op.kind == "conv_k2d":
+            w, b = p
+            pool = conv_k2d_ring(pool, w, b, op=op, n_segments=n)
         elif op.kind == "ib_fused":
             w1, wd, w2 = p
             pool = ib_fused_ring(pool, w1, wd, w2, op=op, n_segments=n)
@@ -535,7 +592,7 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                        interpret: bool | None = None, **_kw):
     # Lazy import: core must stay importable without the kernels package.
     from ..kernels.conv2d import (ring_add, ring_avgpool, ring_conv_dw,
-                                  ring_conv_pw)
+                                  ring_conv_k2d, ring_conv_pw)
     from ..kernels.elementwise import ring_elementwise
     from ..kernels.fused_mlp import ring_fused_mlp
     from ..kernels.inverted_bottleneck import ring_inverted_bottleneck
@@ -592,6 +649,15 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
                                activation=op.activation,
                                interpret=interpret)
+        elif op.kind == "conv_k2d":
+            w, b = p
+            arr = ring_conv_k2d(arr, w, b, h_in=op.h_in, w_in=op.w_in,
+                                h_out=op.h_out, w_out=op.w_out,
+                                c_in=op.d_in, c_out=op.d_out, k=op.rs,
+                                stride=op.stride, padding=op.padding,
+                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                activation=op.activation,
+                                interpret=interpret)
         elif op.kind == "ib_fused":
             w1, wd, w2 = p
             arr = ring_inverted_bottleneck(
@@ -602,7 +668,7 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
         elif op.kind == "add":
             arr = ring_add(arr, rows=rows, d=op.d_in, in_ptr=op.in_ptr,
                            aux_ptr=op.aux_ptr, out_ptr=op.out_ptr,
-                           interpret=interpret)
+                           activation=op.activation, interpret=interpret)
         elif op.kind == "pool_avg":
             arr = ring_avgpool(arr, h=op.h_in, w=op.w_in, c=op.d_in,
                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
@@ -615,8 +681,8 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
 def _run_pallas_q(arr, params, program: PoolProgram, br, interpret):
     """Int8 program on the Pallas ring kernels (``kernels.quantized``)."""
     from ..kernels.quantized import (ring_add_q, ring_avgpool_q,
-                                     ring_conv_dw_q, ring_conv_pw_q,
-                                     ring_gemm_q)
+                                     ring_conv_dw_q, ring_conv_k2d_q,
+                                     ring_conv_pw_q, ring_gemm_q)
 
     for op, p in zip(program.ops, params):
         rows = op.rows_in or program.m_rows
@@ -646,12 +712,23 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret):
                                  out_ptr=op.out_ptr,
                                  activation=op.activation,
                                  interpret=interpret)
+        elif op.kind == "conv_k2d":
+            w, b, mult, shift = p
+            arr = ring_conv_k2d_q(arr, w, b, mult, shift, h_in=op.h_in,
+                                  w_in=op.w_in, h_out=op.h_out,
+                                  w_out=op.w_out, c_in=op.d_in,
+                                  c_out=op.d_out, k=op.rs,
+                                  stride=op.stride, padding=op.padding,
+                                  in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                  activation=op.activation,
+                                  interpret=interpret)
         elif op.kind == "add":
             mi, si, ma, sa = p
             arr = ring_add_q(arr, rows=rows, d=op.d_in, in_ptr=op.in_ptr,
                              aux_ptr=op.aux_ptr, out_ptr=op.out_ptr,
                              mult_in=mi, shift_in=si, mult_aux=ma,
-                             shift_aux=sa, interpret=interpret)
+                             shift_aux=sa, activation=op.activation,
+                             interpret=interpret)
         elif op.kind == "pool_avg":
             mult, shift = p
             arr = ring_avgpool_q(arr, h=op.h_in, w=op.w_in, c=op.d_in,
@@ -677,10 +754,13 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
     sched = schedule_for_op(op, program.seg_width)
     frees = sched.frees()
     ic, oc = sched.in_chunk, sched.out_chunk
+    # branch ops (in_op >= 0) read the held INPUT of op in_op — segment
+    # ownership tags carry that op's index, exactly like aux reads
+    iown = op.in_op if op.in_op >= 0 else i
     for t in range(sched.steps):
         for r in sched.reads[t]:
             for s in range(ic):
-                sim.read(op.in_ptr + r * ic + s, owner=(i, r * ic + s))
+                sim.read(op.in_ptr + r * ic + s, owner=(iown, r * ic + s))
         if sched.aux_reads is not None:
             ac = sched.aux_chunk
             for r in sched.aux_reads[t]:
@@ -691,7 +771,8 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
         if not op.hold_input:
             for r in frees[t]:
                 for s in range(ic):
-                    sim.free(op.in_ptr + r * ic + s, owner=(i, r * ic + s))
+                    sim.free(op.in_ptr + r * ic + s,
+                             owner=(iown, r * ic + s))
         for r in sched.writes[t]:
             for s in range(oc):
                 seg = r * oc + s

@@ -37,7 +37,7 @@ from .planner import gemm_offset_closed_form
 from .vpool import PoolSpec, SEG_WIDTH, ceil_div, segments_for
 
 EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise", "conv_pw",
-                    "conv_dw", "ib_fused", "add", "pool_avg")
+                    "conv_dw", "conv_k2d", "ib_fused", "add", "pool_avg")
 PLAN_ONLY_KINDS = ("fused_chain", "inverted_bottleneck")
 
 # Pool element dtypes a program can be planned for.  The name is the
@@ -154,6 +154,8 @@ class ConvPWSpec:
     stride: int = 1
     resample_to: tuple[int, int] | None = None
     activation: str | None = None
+    input_from: int = 0   # > 0: branch conv reading a held tensor
+    #                       (see ConvK2DSpec.input_from)
 
     @property
     def out_hw(self) -> tuple[int, int]:
@@ -181,6 +183,40 @@ class ConvDWSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ConvK2DSpec:
+    """General k x k spatial conv over pixel rows:
+    ``[h_in, w_in, c_in] -> [h_out, w_out, c_out]``.
+
+    ``k`` in {3, 5}, ``stride`` in {1, 2}, ``padding`` 'same' (low pad
+    ``(k-1)//2``, out = ceil(in/stride)) or 'valid' (no pad, out =
+    ``(in-k)//stride + 1``).  The k-row input halo widens the Eq.-(1)
+    safe-offset frontier (``core.rowsched.conv_k2d_schedule``).
+
+    ``input_from=m`` (> 0) makes this a *branch* conv: instead of the
+    chained tensor it reads the input tensor of the op ``m`` positions
+    back (the planner holds that tensor live, exactly like a
+    :class:`ResidualAddSpec` source) while the chained tensor stays
+    resident for a later consumer — the ResNet shortcut-projection
+    pattern."""
+
+    h_in: int
+    w_in: int
+    c_in: int
+    c_out: int
+    k: int = 3
+    stride: int = 1
+    padding: str = "same"
+    activation: str | None = None
+    input_from: int = 0
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        from .rowsched import conv_k2d_out
+        return (conv_k2d_out(self.h_in, self.k, self.stride, self.padding),
+                conv_k2d_out(self.w_in, self.k, self.stride, self.padding))
+
+
+@dataclasses.dataclass(frozen=True)
 class IBModuleSpec:
     """EXECUTABLE fused inverted-bottleneck module (Fig. 6, row-granular).
 
@@ -195,9 +231,12 @@ class IBModuleSpec:
 @dataclasses.dataclass(frozen=True)
 class ResidualAddSpec:
     """Add the *input tensor of the op ``src`` steps back* (still resident
-    in the pool — the planner holds it live) to the current tensor."""
+    in the pool — the planner holds it live) to the current tensor.
+
+    ``activation`` applies after the sum (ResNet's post-add ReLU)."""
 
     src: int = 3  # pw1 -> dw -> pw2 -> add
+    activation: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,7 +250,7 @@ class AvgPoolSpec:
 
 LayerSpec = Union[GemmSpec, FusedMLPSpec, ElementwiseSpec, FusedChainSpec,
                   InvertedBottleneckSpec, ConvPWSpec, ConvDWSpec,
-                  IBModuleSpec, ResidualAddSpec, AvgPoolSpec]
+                  ConvK2DSpec, IBModuleSpec, ResidualAddSpec, AvgPoolSpec]
 
 
 # ---------------------------------------------------------------------------
@@ -252,13 +291,16 @@ class PoolOp:
     h_out: int = 0
     w_out: int = 0
     stride: int = 1
-    rs: int = 0               # depthwise kernel extent
+    rs: int = 0               # depthwise / k2d kernel extent
+    padding: str = "same"     # conv_k2d halo convention (same/valid)
     resample: bool = False    # nearest-grid adapter row map
     d_mid: int = 0            # fused module expansion width
     aux_ptr: int = 0          # residual-source pool offset ("add" ops)
     aux_op: int = -1          # op index whose INPUT is the residual source
+    in_op: int = -1           # branch convs: op index whose (held) INPUT
+                              # this op reads instead of the chained tensor
     hold_input: bool = False  # input is a residual source: op must not
-                              # free it; the consuming "add" frees it
+                              # free it; the consuming op frees it
 
     @property
     def span_segments(self) -> int:
@@ -420,7 +462,7 @@ class PoolProgram:
         br = self.block_rows or 1
         ci = segments_for(op.d_in, sw)
         co = segments_for(op.d_out, sw)
-        if op.kind in ("conv_pw", "conv_dw", "ib_fused"):
+        if op.kind in ("conv_pw", "conv_dw", "conv_k2d", "ib_fused"):
             return op.w_in * ci, op.w_out * co
         if op.kind == "pool_avg":
             return op.w_in * ci, co
@@ -473,7 +515,7 @@ def _conv_state(spec, rows: int, dim: int, img, pos: int):
     elif img != (spec.h_in, spec.w_in):
         raise ValueError(f"layer {pos}: conv image {spec.h_in}x{spec.w_in} "
                          f"!= running image {img[0]}x{img[1]}")
-    c_in = spec.c_in if isinstance(spec, ConvPWSpec) else spec.c
+    c_in = spec.c if isinstance(spec, ConvDWSpec) else spec.c_in
     if dim != c_in:
         raise ValueError(f"layer {pos}: conv c_in={c_in} != running "
                          f"dim={dim}")
@@ -533,9 +575,11 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     if br <= 0:
         raise ValueError(f"block_rows={block_rows} must be positive")
 
-    # Pre-scan residual adds: ops in (src..add] must avoid the held
-    # tensor; the held interval stays in the live span through the add.
+    # Pre-scan residual adds AND branch convs (input_from): ops in
+    # (src..consumer] must avoid the held tensor; the held interval stays
+    # in the live span through its consumer.
     aux_src: dict[int, int] = {}
+    in_src: dict[int, int] = {}
     avoid_at: list[set[int]] = [set() for _ in layers]
     hold_at: list[set[int]] = [set() for _ in layers]
     for i, s in enumerate(layers):
@@ -549,6 +593,25 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                 avoid_at[k].add(j)
             for k in range(j, i + 1):
                 hold_at[k].add(j)
+        elif getattr(s, "input_from", 0):
+            j = i - s.input_from
+            if j < 0:
+                raise ValueError(f"layer {i}: input_from {s.input_from} "
+                                 "ops back reaches before the program "
+                                 "input")
+            in_src[i] = j
+            for k in range(j, i):
+                avoid_at[k].add(j)
+            for k in range(j, i + 1):
+                hold_at[k].add(j)
+    # (consumer, held-record) pairs.  Op ``p`` must not free the tensor
+    # it READS — record ``in_src.get(p, p)`` — iff a LATER consumer
+    # still needs that record; the consumer frees it itself.
+    holders = list(aux_src.items()) + list(in_src.items())
+
+    def _hold_input(p: int) -> bool:
+        r = in_src.get(p, p)
+        return any(j == r and i > p for i, j in holders)
 
     ops: list[PoolOp] = []
     rows, cur, img = m_rows, d_in, None
@@ -557,8 +620,12 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     spans_t: list[int] = []
     spans_a: list[int] = []
     aligns: list[int] = [1]
-    # per-op input tensor record (tight ptr, aligned ptr, total segments)
+    # per-op CHAINED input tensor record (tight ptr, aligned ptr, total
+    # segments) — for branch ops (input_from) this stays the chained
+    # tensor that remains resident, NOT the held tensor the op reads
     tens: list[tuple[int, int, int]] = []
+    # chain state (rows, dim, image) entering each op
+    states: list[tuple[int, int, tuple | None]] = []
 
     def _avoid(out, out_tot, pos, coord, round_to=None, cur=None):
         """Push ``out`` below every held interval it overlaps.
@@ -585,11 +652,21 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
             resolve_activation(spec.activation)  # fail at plan time
         elif isinstance(spec, ElementwiseSpec):
             resolve_activation(spec.fn)
-        elif isinstance(spec, (ConvPWSpec, ConvDWSpec)):
+        elif isinstance(spec, (ConvPWSpec, ConvDWSpec, ConvK2DSpec,
+                               ResidualAddSpec)):
             resolve_activation(spec.activation)
+        states.append((rows, cur, img))
         rows_in = rows
         it, ia = pt, pa
         extra: dict = {}
+        src_j = in_src.get(pos)
+        if src_j is not None:
+            if not isinstance(spec, (ConvPWSpec, ConvK2DSpec)):
+                raise TypeError(f"layer {pos}: input_from is only "
+                                "supported on ConvPWSpec/ConvK2DSpec")
+            # the op reads the HELD input of op src_j; the chained
+            # tensor stays resident at (pt, pa) for a later consumer
+            it, ia = tens[src_j][0], tens[src_j][1]
         if isinstance(spec, GemmSpec):
             if rows % br:
                 raise ValueError(f"block_rows={br} must divide rows={rows}")
@@ -645,12 +722,16 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                              rows_out=rows)
             aligns.append(bd)
             new_state = (rows, cur, img)
-        elif isinstance(spec, (ConvPWSpec, ConvDWSpec)):
-            _conv_state(spec, rows, cur, img, pos)
+        elif isinstance(spec, (ConvPWSpec, ConvDWSpec, ConvK2DSpec)):
+            if src_j is not None:   # branch conv: validate vs held state
+                v_rows, v_dim, v_img = states[src_j]
+            else:
+                v_rows, v_dim, v_img = rows, cur, img
+            _conv_state(spec, v_rows, v_dim, v_img, pos)
             h_in, w_in = spec.h_in, spec.w_in
             h_out, w_out = spec.out_hw
-            c_in = spec.c_in if isinstance(spec, ConvPWSpec) else spec.c
-            c_out = spec.c_out if isinstance(spec, ConvPWSpec) else spec.c
+            c_in = spec.c if isinstance(spec, ConvDWSpec) else spec.c_in
+            c_out = spec.c if isinstance(spec, ConvDWSpec) else spec.c_out
             ci = segments_for(c_in, seg_width)
             co = segments_for(c_out, seg_width)
             in_chunk, out_chunk = w_in * ci, w_out * co
@@ -661,6 +742,13 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                 kind = "conv_pw"
                 extra = dict(activation=spec.activation, stride=spec.stride,
                              resample=spec.resample_to is not None)
+            elif isinstance(spec, ConvK2DSpec):
+                sched = rowsched.conv_k2d_schedule(
+                    h_in, h_out, in_chunk, out_chunk, k=spec.k,
+                    stride=spec.stride, padding=spec.padding)
+                kind = "conv_k2d"
+                extra = dict(activation=spec.activation, stride=spec.stride,
+                             rs=spec.k, padding=spec.padding)
             else:
                 sched = rowsched.conv_dw_schedule(
                     h_in, h_out, in_chunk, out_chunk, rs=spec.rs,
@@ -670,14 +758,20 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                              rs=spec.rs)
             delta = sched.solve_delta() - delta_slack
             in_tot, out_tot = h_in * w_in * ci, h_out * w_out * co
-            ot = _avoid(pt - delta, out_tot, pos, 0,
-                        cur=(it, ia, in_tot))
+            if src_j is not None:
+                # the in-flight avoid record is the CHAINED tensor (it
+                # stays resident for a later consumer, e.g. the add)
+                chain_rec = (pt, pa, rows * segments_for(cur, seg_width))
+                extra["in_op"] = src_j
+            else:
+                chain_rec = (it, ia, in_tot)
+            ot = _avoid(it - delta, out_tot, pos, 0, cur=chain_rec)
             oa = (ot if not aligned else
-                  _avoid(_floor_mult(pa - delta, out_chunk), out_tot, pos,
-                         1, round_to=out_chunk, cur=(it, ia, in_tot)))
+                  _avoid(_floor_mult(ia - delta, out_chunk), out_tot, pos,
+                         1, round_to=out_chunk, cur=chain_rec))
             d_out = c_out
             extra.update(h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out,
-                         rows_in=rows, rows_out=h_out * w_out)
+                         rows_in=v_rows, rows_out=h_out * w_out)
             aligns.append(math.lcm(in_chunk, out_chunk))
             new_state = (h_out * w_out, c_out, (h_out, w_out))
         elif isinstance(spec, IBModuleSpec):
@@ -719,10 +813,10 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
             new_state = (rows, cfg.c_out, (h, w))
         elif isinstance(spec, ResidualAddSpec):
             j = aux_src[pos]
-            src_rows = ops[j].rows_in or m_rows
-            if src_rows != rows or (ops[j].d_in != cur):
+            src_rows, src_dim, _src_img = states[j]
+            if src_rows != rows or src_dim != cur:
                 raise ValueError(f"layer {pos}: residual source shape "
-                                 f"({src_rows},{ops[j].d_in}) != current "
+                                 f"({src_rows},{src_dim}) != current "
                                  f"({rows},{cur})")
             d_segs = segments_for(cur, seg_width)
             delta = -delta_slack
@@ -730,6 +824,7 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
             in_tot = out_tot = rows * d_segs
             kind, d_out = "add", cur
             extra = dict(rows_in=rows, rows_out=rows,
+                         activation=spec.activation,
                          aux_op=j, aux_ptr=tens[j][0 if not aligned else 1])
             aligns.append(d_segs)
             new_state = (rows, cur, img)
@@ -759,9 +854,12 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
         op = PoolOp(kind=kind, in_ptr=ia, out_ptr=oa, delta=delta,
                     in_segments=in_tot, out_segments=out_tot,
                     segment_bytes=seg_width * elem_bytes,
-                    d_in=cur, d_out=d_out,
-                    hold_input=pos in aux_src.values(), **extra)
-        tens.append((it, ia, in_tot))
+                    d_in=states[src_j][1] if src_j is not None else cur,
+                    d_out=d_out, hold_input=_hold_input(pos), **extra)
+        if src_j is not None:
+            tens.append(chain_rec)   # the chained tensor, not the held one
+        else:
+            tens.append((it, ia, in_tot))
         # Live span at this op: In, Out and every held residual interval.
         lo_t, hi_t = min(it, ot), max(it + in_tot, ot + out_tot)
         lo_a, hi_a = min(ia, oa), max(ia + in_tot, oa + out_tot)

@@ -152,6 +152,44 @@ def conv_dw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                        reads=tuple(reads), writes=tuple(writes))
 
 
+def conv_k2d_pad(k: int, padding: str) -> int:
+    """Low-side row/column padding of a k x k conv (the one definition
+    the planner, executors and codegen share)."""
+    if padding == "same":
+        return (k - 1) // 2
+    if padding == "valid":
+        return 0
+    raise ValueError(f"unknown padding {padding!r} (same/valid)")
+
+
+def conv_k2d_out(h_in: int, k: int, stride: int, padding: str) -> int:
+    """Output extent of a k x k conv along one spatial axis."""
+    if padding == "same":
+        return -(-h_in // stride)
+    if h_in < k:
+        raise ValueError(f"valid conv needs h_in >= k ({h_in} < {k})")
+    return (h_in - k) // stride + 1
+
+
+def conv_k2d_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
+                      *, k: int, stride: int = 1,
+                      padding: str = "same") -> RowSchedule:
+    """General k x k spatial conv: output row ``p`` reads the input halo
+    rows ``p*stride - pad .. p*stride - pad + k - 1`` (rows outside the
+    image are padding and never read) — the k-row read frontier that
+    widens the Eq.-(1) safe offset vs the pointwise case."""
+    pad = conv_k2d_pad(k, padding)
+    reads, writes = [], []
+    for p in range(h_out):
+        win = sorted({p * stride - pad + r for r in range(k)
+                      if 0 <= p * stride - pad + r < h_in})
+        reads.append(tuple(win))
+        writes.append((p,))
+    return RowSchedule(steps=h_out, in_rows=h_in, out_rows=h_out,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=tuple(reads), writes=tuple(writes))
+
+
 def ib_fused_schedule(h: int, in_chunk: int, out_chunk: int, *, rs: int,
                       residual: bool) -> RowSchedule:
     """The Fig.-6 fused kernel's row schedule (``ring_inverted_bottleneck``):
@@ -209,6 +247,10 @@ def schedule_for_op(op, seg_width: int) -> RowSchedule:
     if op.kind == "conv_dw":
         return conv_dw_schedule(op.h_in, op.h_out, op.w_in * ci,
                                 op.w_out * co, rs=op.rs, stride=op.stride)
+    if op.kind == "conv_k2d":
+        return conv_k2d_schedule(op.h_in, op.h_out, op.w_in * ci,
+                                 op.w_out * co, k=op.rs, stride=op.stride,
+                                 padding=op.padding)
     if op.kind == "ib_fused":
         return ib_fused_schedule(op.h_in, op.w_in * ci, op.w_out * co,
                                  rs=op.rs, residual=op.residual)

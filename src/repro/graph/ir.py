@@ -4,8 +4,8 @@ A :class:`Graph` is an ordered DAG of :class:`Node` ops over quantized
 :class:`Tensor` values (per-tensor byte sizes drive the lifetime
 analysis in ``graph.schedule``).  Node kinds:
 
-  ``input`` ``conv_pw`` ``conv_dw`` ``add`` ``avgpool`` ``flatten``
-  ``fc`` ``mlp`` ``elementwise``
+  ``input`` ``conv_pw`` ``conv_dw`` ``conv_k2d`` ``add`` ``avgpool``
+  ``flatten`` ``fc`` ``mlp`` ``elementwise``
 
 Builders lower the paper's MCUNet module tables
 (:data:`repro.core.graph_planner.MCUNET_5FPS_VWW` /
@@ -19,6 +19,13 @@ Where consecutive table modules do not chain (channel or resolution
 mismatch — the tables list benchmark modules, not a closed network), the
 builder inserts a pointwise *adapter* conv: strided when the resolution
 divides down exactly, nearest-grid resampling otherwise.
+
+The MLPerf-Tiny-class model zoo (``build_ds_cnn`` / ``build_resnet8`` /
+``build_mobilenet_v1``) builds on the general ``conv_k2d`` node: real
+k x k spatial convs with halo frontiers, incl. ResNet residual blocks
+whose shortcut projection reads the *held* block input (``block``-tagged
+node runs — lowered by ``graph.schedule.select_groups`` as one planning
+unit).
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import dataclasses
 from typing import Iterable, Sequence
 
 from ..core.graph_planner import ModuleConfig
+from ..core.rowsched import conv_k2d_out
 from ..core.vpool import ceil_div
 
 
@@ -56,11 +64,13 @@ class Node:
     out: Tensor
     stride: int = 1
     rs: int = 0
+    padding: str = "same"     # conv_k2d halo convention (same/valid)
     resample: bool = False
     activation: str | None = None
     d_ff: int = 0
     gated: bool = False
     module: str = ""          # module tag for fusion-group selection
+    block: str = ""           # residual-block tag (ResNet-style groups)
 
 
 class Graph:
@@ -136,7 +146,8 @@ class Graph:
                     raise ValueError("input node cannot have inputs")
                 continue
             t = self.in_tensor(n.id)
-            if n.kind in ("conv_pw", "conv_dw") and t.h * t.w != t.rows:
+            if n.kind in ("conv_pw", "conv_dw", "conv_k2d") \
+                    and t.h * t.w != t.rows:
                 raise ValueError(f"{n.id}: conv over non-image tensor")
             if n.kind == "add":
                 if len(n.inputs) != 2:
@@ -217,6 +228,123 @@ def build_mcunet(modules: Iterable[ModuleConfig], name: str, *,
         src = g.add("head.flatten", "flatten", [src], pooled)
         logits = Tensor(1, num_classes, 1, 1, elem_bytes)
         src = g.add("head.fc", "fc", [src], logits)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# MLPerf-Tiny-class model zoo (conv_k2d workloads).
+# ---------------------------------------------------------------------------
+
+def _k2d(g: Graph, id: str, src: str, cur: Tensor, c_out: int, *, k: int,
+         stride: int = 1, padding: str = "same",
+         activation: str | None = "relu", block: str = "",
+         elem_bytes: int = 1) -> tuple[str, Tensor]:
+    h = conv_k2d_out(cur.h, k, stride, padding)
+    w = conv_k2d_out(cur.w, k, stride, padding)
+    out = Tensor(rows=h * w, d=c_out, h=h, w=w, elem_bytes=elem_bytes)
+    nid = g.add(id, "conv_k2d", [src], out, stride=stride, rs=k,
+                padding=padding, activation=activation, block=block)
+    return nid, out
+
+
+def _head(g: Graph, src: str, cur: Tensor, num_classes: int,
+          elem_bytes: int) -> None:
+    pooled = Tensor(1, cur.d, 1, 1, elem_bytes)
+    src = g.add("head.pool", "avgpool", [src], pooled)
+    src = g.add("head.flatten", "flatten", [src], pooled)
+    logits = Tensor(1, num_classes, 1, 1, elem_bytes)
+    g.add("head.fc", "fc", [src], logits)
+
+
+def build_ds_cnn(*, num_classes: int = 12, c: int = 64,
+                 elem_bytes: int = 1) -> Graph:
+    """DS-CNN keyword spotting (MLPerf Tiny): 49x10x1 MFCC input, a
+    strided k x k stem conv, four depthwise-separable blocks, avgpool +
+    fc head.
+
+    The reference stem is a (10, 4)-shaped stride-2 filter; the segment
+    ring's conv vocabulary is square k in {3, 5}, so the stem is the
+    closest square member: 5x5 stride 2 (same channel count and output
+    grid)."""
+    g = Graph("ds-cnn", elem_bytes=elem_bytes)
+    cur = Tensor(rows=49 * 10, d=1, h=49, w=10, elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    src, cur = _k2d(g, "stem", src, cur, c, k=5, stride=2,
+                    elem_bytes=elem_bytes)
+    for i in range(4):
+        out = Tensor(cur.rows, c, cur.h, cur.w, elem_bytes)
+        src = g.add(f"B{i}.dw", "conv_dw", [src], out, rs=3,
+                    activation="relu")
+        src = g.add(f"B{i}.pw", "conv_pw", [src], out, activation="relu")
+        cur = out
+    _head(g, src, cur, num_classes, elem_bytes)
+    g.validate()
+    return g
+
+
+def build_resnet8(*, num_classes: int = 10, elem_bytes: int = 1) -> Graph:
+    """ResNet-8 (MLPerf Tiny image classification): 32x32x3 input, a
+    3x3 stem and three residual stacks (16/32/64 channels; stacks 2 and
+    3 downsample with stride 2 and a 1x1 stride-2 shortcut projection),
+    avgpool + fc head.
+
+    Each stack is a ``block``-tagged node run so the scheduler lowers it
+    as one planning unit: the main-path convs run while the planner
+    holds the block input, the shortcut projection reads that held
+    tensor (``input_from``), and the post-add relu rides on the ``add``
+    op."""
+    g = Graph("resnet-8", elem_bytes=elem_bytes)
+    cur = Tensor(rows=32 * 32, d=3, h=32, w=32, elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    src, cur = _k2d(g, "stem", src, cur, 16, k=3, elem_bytes=elem_bytes)
+    for i, (c, stride) in enumerate(((16, 1), (32, 2), (64, 2))):
+        tag = f"R{i}"
+        block_in, tin = src, cur
+        src, cur = _k2d(g, f"{tag}.c1", src, cur, c, k=3, stride=stride,
+                        block=tag, elem_bytes=elem_bytes)
+        src, cur = _k2d(g, f"{tag}.c2", src, cur, c, k=3, stride=1,
+                        activation=None, block=tag,
+                        elem_bytes=elem_bytes)
+        res = block_in
+        if stride != 1 or tin.d != c:
+            res = g.add(f"{tag}.sc", "conv_pw", [block_in], cur,
+                        stride=stride, activation=None, block=tag)
+        src = g.add(f"{tag}.add", "add", [src, res], cur,
+                    activation="relu", block=tag)
+    _head(g, src, cur, num_classes, elem_bytes)
+    g.validate()
+    return g
+
+
+def build_mobilenet_v1(*, hw: int = 96, num_classes: int = 2,
+                       width_mult: float = 0.25,
+                       elem_bytes: int = 1) -> Graph:
+    """MobileNetV1 (width multiplier 0.25, 96x96 input by default — the
+    MLPerf Tiny visual-wake-words configuration): a real 3x3 stride-2
+    stem conv (the op MCUNet-style tables never exercise) followed by
+    13 depthwise-separable blocks and the avgpool/fc head."""
+    def ch(c: int) -> int:
+        return max(8, int(c * width_mult + 0.5) // 8 * 8)
+
+    g = Graph(f"mobilenetv1-{width_mult}", elem_bytes=elem_bytes)
+    cur = Tensor(rows=hw * hw, d=3, h=hw, w=hw, elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    src, cur = _k2d(g, "stem", src, cur, ch(32), k=3, stride=2,
+                    elem_bytes=elem_bytes)
+    blocks = ((64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+              (512, 1), (512, 1), (512, 1), (512, 1), (512, 1),
+              (1024, 2), (1024, 1))
+    for i, (c, stride) in enumerate(blocks):
+        h = ceil_div(cur.h, stride)
+        w = ceil_div(cur.w, stride)
+        dwt = Tensor(h * w, cur.d, h, w, elem_bytes)
+        src = g.add(f"B{i}.dw", "conv_dw", [src], dwt, rs=3,
+                    stride=stride, activation="relu")
+        out = Tensor(h * w, ch(c), h, w, elem_bytes)
+        src = g.add(f"B{i}.pw", "conv_pw", [src], out, activation="relu")
+        cur = out
+    _head(g, src, cur, num_classes, elem_bytes)
     g.validate()
     return g
 

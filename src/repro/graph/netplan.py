@@ -25,9 +25,10 @@ import dataclasses
 from typing import Sequence
 
 from ..core.graph_planner import ModuleConfig
-from ..core.program import (AvgPoolSpec, ConvDWSpec, ConvPWSpec, GemmSpec,
-                            FusedMLPSpec, IBModuleSpec, LayerSpec,
-                            PoolProgram, ResidualAddSpec, plan_program)
+from ..core.program import (AvgPoolSpec, ConvDWSpec, ConvK2DSpec,
+                            ConvPWSpec, GemmSpec, FusedMLPSpec,
+                            IBModuleSpec, LayerSpec, PoolProgram,
+                            ResidualAddSpec, plan_program)
 from ..core.vpool import SEG_WIDTH, ceil_div
 from .ir import Graph
 from .schedule import FusionGroup, reorder, select_groups
@@ -122,17 +123,27 @@ def _module_specs(graph: Graph, group: FusionGroup,
     return specs
 
 
-def _node_spec(graph: Graph, nid: str) -> list[LayerSpec]:
+def _node_spec(graph: Graph, nid: str,
+               input_from: int = 0) -> list[LayerSpec]:
     n = graph.nodes[nid]
     tin = graph.in_tensor(nid)
+    if input_from and n.kind not in ("conv_pw", "conv_k2d"):
+        raise ValueError(f"{nid}: only conv_pw/conv_k2d nodes can read a "
+                         "held branch tensor")
     if n.kind == "conv_pw":
         return [ConvPWSpec(tin.h, tin.w, tin.d, n.out.d, stride=n.stride,
                            resample_to=((n.out.h, n.out.w) if n.resample
                                         else None),
-                           activation=n.activation)]
+                           activation=n.activation,
+                           input_from=input_from)]
     if n.kind == "conv_dw":
         return [ConvDWSpec(tin.h, tin.w, tin.d, rs=n.rs, stride=n.stride,
                            activation=n.activation)]
+    if n.kind == "conv_k2d":
+        return [ConvK2DSpec(tin.h, tin.w, tin.d, n.out.d, k=n.rs,
+                            stride=n.stride, padding=n.padding,
+                            activation=n.activation,
+                            input_from=input_from)]
     if n.kind == "avgpool":
         return [AvgPoolSpec(tin.h, tin.w, tin.d)]
     if n.kind == "fc":
@@ -148,10 +159,55 @@ def _node_spec(graph: Graph, nid: str) -> list[LayerSpec]:
     raise ValueError(f"cannot lower node kind {n.kind!r}")
 
 
+def resblock_specs(graph: Graph, ids: Sequence[str]) -> list[LayerSpec]:
+    """Lower a ``block``-tagged residual run (in scheduled order) to
+    plan_program specs.
+
+    The run is a linear chain plus at most one branch per node: a node
+    whose graph input is not the chained tensor becomes a branch conv
+    (``input_from`` — it reads the *held* input of the op whose chained
+    tensor it needs, e.g. the ResNet shortcut projection reading the
+    block input), and the closing ``add``'s residual operand resolves to
+    whichever op's chained input produced it (``ResidualAddSpec.src``).
+    """
+    nodes = [graph.nodes[i] for i in ids]
+    if len(nodes) < 2 or nodes[-1].kind != "add":
+        raise ValueError(f"res block {ids}: must end in an add node")
+    # chained tensor entering op j: the previous node's output (op 0
+    # chains from the block input)
+    chain_in = [nodes[0].inputs[0]] + [n.id for n in nodes[:-1]]
+    specs: list[LayerSpec] = []
+    for j, n in enumerate(nodes[:-1]):
+        src_id = n.inputs[0]
+        input_from = 0
+        if src_id != chain_in[j]:
+            k = chain_in.index(src_id)
+            if k >= j:
+                raise ValueError(f"{n.id}: branch source {src_id!r} not "
+                                 "available earlier in the block")
+            input_from = j - k
+        specs.extend(_node_spec(graph, n.id, input_from=input_from))
+    add = nodes[-1]
+    main, aux = add.inputs
+    if main != nodes[-2].id:
+        main, aux = aux, main
+    if main != nodes[-2].id:
+        raise ValueError(f"{add.id}: neither add operand chains from the "
+                         f"preceding node {nodes[-2].id!r}")
+    if aux not in chain_in:
+        raise ValueError(f"{add.id}: residual operand {aux!r} is not a "
+                         "tensor the block holds")
+    src = (len(nodes) - 1) - chain_in.index(aux)
+    specs.append(ResidualAddSpec(src, activation=add.activation))
+    return specs
+
+
 def group_specs(graph: Graph, group: FusionGroup) -> list[LayerSpec]:
     """Lower one fusion group to ``plan_program`` layer specs."""
     if group.kind == "module":
         return _module_specs(graph, group, graph.modules[group.name])
+    if group.kind == "resblock":
+        return resblock_specs(graph, group.node_ids)
     specs: list[LayerSpec] = []
     for nid in group.node_ids:
         specs.extend(_node_spec(graph, nid))

@@ -41,6 +41,12 @@ def init_net_params(plan, key=None, dtype=jnp.float32) -> list:
             key, k1 = jax.random.split(key)
             w = jax.random.normal(k1, (op.rs, op.rs, op.d_in), dtype)
             params.append((w / op.rs, None))
+        elif op.kind == "conv_k2d":
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (op.rs, op.rs, op.d_in, op.d_out),
+                                  dtype)
+            params.append((w * gain / ((op.rs * op.rs * op.d_in) ** 0.5),
+                           None))
         elif op.kind == "ib_fused":
             key, k1, k2, k3 = jax.random.split(key, 4)
             w1 = jax.random.normal(k1, (op.d_in, op.d_mid), dtype) \
@@ -95,7 +101,7 @@ def reference_forward(plan, x: jax.Array, params, *,
     every op followed by the network output — the taps int8 calibration
     (:func:`quantize_net`) derives its activation scales from.
     """
-    from ..core.rowsched import resample_src
+    from ..core.rowsched import conv_k2d_pad, resample_src
 
     program = _prog(plan)
     saved: dict[int, jax.Array] = {}
@@ -104,13 +110,16 @@ def reference_forward(plan, x: jax.Array, params, *,
         saved[i] = cur
         if intermediates is not None:
             intermediates.append(cur)
+        # branch convs (ResNet shortcut projections) read the held input
+        # of op ``in_op``, not the chained tensor
+        src = saved[op.in_op] if op.in_op >= 0 else cur
         act = resolve_activation(op.activation)
         if op.kind in ("gemm", "conv_pw"):
             w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
             wf = w.astype(jnp.float32)
             if op.kind == "conv_pw" and op.resample:
                 # the nearest-grid adapter is gather-by-definition
-                img = cur.reshape(op.h_in, op.w_in, op.d_in)
+                img = src.reshape(op.h_in, op.w_in, op.d_in)
                 ridx = [resample_src(r, op.h_in, op.h_out)
                         for r in range(op.h_out)]
                 cidx = [resample_src(c, op.w_in, op.w_out)
@@ -119,16 +128,16 @@ def reference_forward(plan, x: jax.Array, params, *,
                 y = jnp.einsum("hwc,cd->hwd", sub, wf)
                 cur = act(y + b).reshape(op.rows_out, op.d_out)
             elif op.kind == "conv_pw":
-                img = cur.reshape(op.h_in, op.w_in, op.d_in)
+                img = src.reshape(op.h_in, op.w_in, op.d_in)
                 y = _conv_ref(img, wf.reshape(1, 1, op.d_in, op.d_out),
                               stride=op.stride, pad_lo=0,
                               h_out=op.h_out, w_out=op.w_out)
                 cur = act(y + b).reshape(op.rows_out, op.d_out)
             else:
-                cur = act(cur @ wf + b)
+                cur = act(src @ wf + b)
         elif op.kind == "conv_dw":
             w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
-            img = cur.reshape(op.h_in, op.w_in, op.d_in)
+            img = src.reshape(op.h_in, op.w_in, op.d_in)
             y = _conv_ref(img,
                           w.astype(jnp.float32).reshape(op.rs, op.rs, 1,
                                                         op.d_in),
@@ -136,16 +145,24 @@ def reference_forward(plan, x: jax.Array, params, *,
                           h_out=op.h_out, w_out=op.w_out,
                           groups=op.d_in)
             cur = act(y + b).reshape(op.rows_out, op.d_out)
+        elif op.kind == "conv_k2d":
+            w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
+            img = src.reshape(op.h_in, op.w_in, op.d_in)
+            y = _conv_ref(img, w.astype(jnp.float32),
+                          stride=op.stride,
+                          pad_lo=conv_k2d_pad(op.rs, op.padding),
+                          h_out=op.h_out, w_out=op.w_out)
+            cur = act(y + b).reshape(op.rows_out, op.d_out)
         elif op.kind == "ib_fused":
             from ..kernels.inverted_bottleneck import \
                 inverted_bottleneck_ref
             w1, wd, w2 = p
-            a = cur.reshape(op.h_in, op.w_in, op.d_in)
+            a = src.reshape(op.h_in, op.w_in, op.d_in)
             cur = inverted_bottleneck_ref(a, w1, wd, w2,
                                           residual=op.residual) \
                 .astype(jnp.float32).reshape(op.rows_out, op.d_out)
         elif op.kind == "add":
-            cur = cur + saved[op.aux_op]
+            cur = act(cur + saved[op.aux_op])
         elif op.kind == "pool_avg":
             img = cur.reshape(op.h_in, op.w_in, op.d_in)
             cur = jnp.mean(img, axis=(0, 1))[None, :]
@@ -189,7 +206,7 @@ def certify_net(plan):
 # Int8 quantized execution (DESIGN.md §8).
 # ---------------------------------------------------------------------------
 
-_Q_KINDS = ("gemm", "conv_pw", "conv_dw", "add", "pool_avg")
+_Q_KINDS = ("gemm", "conv_pw", "conv_dw", "conv_k2d", "add", "pool_avg")
 _Q_ACTIVATIONS = (None, "identity", "relu")
 
 
@@ -275,10 +292,13 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
     # 2. per-op weight quantization + requant constants
     qparams: list = []
     for i, (op, p) in enumerate(zip(program.ops, params)):
-        s_in, s_out = act_scales[i], act_scales[i + 1]
-        if op.kind in ("gemm", "conv_pw", "conv_dw"):
+        # branch convs read the held input of op ``in_op`` — their input
+        # scale is that tensor's, not the chained tensor's
+        s_in = act_scales[op.in_op if op.in_op >= 0 else i]
+        s_out = act_scales[i + 1]
+        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
             w, b = p if p[1] is not None else (p[0], None)
-            axis = 2 if op.kind == "conv_dw" else 1
+            axis = {"conv_dw": 2, "conv_k2d": 3}.get(op.kind, 1)
             w_qp = calibrate(w, axis=axis)
             w_q = quantize(w, w_qp)
             b_q = (quantize_bias(b, s_in, w_qp) if b is not None

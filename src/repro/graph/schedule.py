@@ -155,7 +155,8 @@ class FusionGroup:
     win AND kernel applicability)."""
 
     name: str
-    kind: str                 # module | mlp_chain | fc_chain | single
+    kind: str                 # module | resblock | mlp_chain | fc_chain
+    #                           | single
     node_ids: tuple[str, ...]
     fused_bytes_win: bool = False
     fused_exec: bool = False
@@ -186,19 +187,42 @@ def _module_group(graph: Graph, ids: tuple[str, ...], cfg: ModuleConfig,
                        delta_bytes=delta)
 
 
+def _resblock_group(graph: Graph, ids: tuple[str, ...]) -> FusionGroup:
+    """Byte-granular plan of a ``block``-tagged residual run (ResNet
+    basic block): the SAME spec lowering the executable planner uses
+    (``netplan.resblock_specs`` — main-path convs with the block input
+    held, optional shortcut projection reading the held tensor, post-add
+    relu), solved at one byte per segment through ``plan_program``."""
+    from ..core.program import plan_program
+    from .netplan import resblock_specs
+
+    specs = resblock_specs(graph, ids)
+    tin = graph.in_tensor(ids[0])
+    prog = plan_program(tin.rows, tin.d, specs, seg_width=1,
+                        block_rows=None, elem_bytes=graph.elem_bytes)
+    naive = prog.naive_bytes
+    return FusionGroup(name=f"res[{ids[0]}..{ids[-1]}]", kind="resblock",
+                       node_ids=tuple(ids), fused_bytes_win=True,
+                       mcu_bytes=prog.pool_bytes, te_bytes=naive,
+                       hmcos_bytes=naive,
+                       delta_bytes=prog.input_ptr - prog.output_ptr)
+
+
 def _single_group(graph: Graph, nid: str) -> FusionGroup:
-    """Byte plan of a standalone node (adapter conv / pool / fc)."""
+    """Byte plan of a standalone node (adapter/spatial conv / pool / fc)."""
     import numpy as np
 
     from ..core.graph_planner import solve_stream_offset
+    from ..core.rowsched import conv_k2d_pad
 
     n = graph.nodes[nid]
     if n.kind == "add":
         raise ValueError(
             f"{nid}: standalone residual adds are not plannable — tag the "
-            "pw/dw/pw/add run with a module so the planner can hold the "
-            "source tensor (ResidualAddSpec); free-form skip connections "
-            "outside module groups are future work")
+            "pw/dw/pw/add run with a module (or a ResNet run with a "
+            "block) so the planner can hold the source tensor "
+            "(ResidualAddSpec); free-form skip connections outside "
+            "module/block groups are future work")
     tin = graph.in_tensor(nid)
     tout = n.out
     eb = graph.elem_bytes
@@ -209,6 +233,19 @@ def _single_group(graph: Graph, nid: str) -> FusionGroup:
             sp, sq = (op * tin.h) // tout.h, (oq * tin.w) // tout.w
         else:
             sp, sq = op * n.stride, oq * n.stride
+        read_start = (sp * tin.w + sq) * tin.d * eb
+        write_end = (p + 1) * tout.d * eb
+        delta = solve_stream_offset(write_end, read_start)
+    elif n.kind in ("conv_dw", "conv_k2d"):
+        # k-row/col halo window: output pixel (op, oq) still needs the
+        # input from its window's low corner on — the Eq.-(2) frontier
+        # the conv_k2d schedule widens vs the pointwise case
+        pad = (conv_k2d_pad(n.rs, n.padding) if n.kind == "conv_k2d"
+               else (n.rs - 1) // 2)
+        p = np.arange(tout.rows, dtype=np.int64)
+        op, oq = p // tout.w, p % tout.w
+        sp = np.clip(op * n.stride - pad, 0, tin.h - 1)
+        sq = np.clip(oq * n.stride - pad, 0, tin.w - 1)
         read_start = (sp * tin.w + sq) * tin.d * eb
         write_end = (p + 1) * tout.d * eb
         delta = solve_stream_offset(write_end, read_start)
@@ -282,6 +319,14 @@ def select_groups(graph: Graph, order: Sequence[str], *,
             ids = tuple(order[i:j])
             groups.append(_module_group(graph, ids, graph.modules[tag],
                                         seg_width))
+            i = j
+        elif node.block:
+            tag = node.block
+            j = i
+            while j < len(order) and graph.nodes[order[j]].block == tag:
+                j += 1
+            ids = tuple(order[i:j])
+            groups.append(_resblock_group(graph, ids))
             i = j
         elif node.kind in ("mlp", "fc"):
             kind = node.kind

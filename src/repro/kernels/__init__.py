@@ -3,10 +3,11 @@
   segment_matmul      — ring-buffer GEMM (paper Fig. 4 FC kernel)
   fused_mlp           — in-place streaming MLP (transformer Fig.-6 analogue)
   inverted_bottleneck — fused PW→DW→PW(→add) module (paper Fig. 6)
-  conv2d              — ring pointwise/depthwise conv, residual add,
-                        global avgpool (whole-network ops, DESIGN.md §7)
-  quantized           — the int8 forms of gemm/conv_pw/conv_dw/add/
-                        avgpool: int32 accumulate + fixed-point
+  conv2d              — ring pointwise/depthwise/general-k2d conv,
+                        residual add, global avgpool (whole-network
+                        ops, DESIGN.md §7/§10)
+  quantized           — the int8 forms of gemm/conv_pw/conv_dw/conv_k2d/
+                        add/avgpool: int32 accumulate + fixed-point
                         requantize on store (DESIGN.md §8)
   elementwise         — in-place ring elementwise (delta == 0 pool ops)
   ring_decode         — decode attention over a ring KV cache
@@ -15,9 +16,10 @@ All are reachable through the unified API: ``repro.core.execute(program,
 pool, params, backend="pallas")``.  Validated in interpret mode against
 :mod:`repro.kernels.ref` oracles and the jnp executor backend.
 """
-from .conv2d import ring_add, ring_avgpool, ring_conv_dw, ring_conv_pw
+from .conv2d import (ring_add, ring_avgpool, ring_conv_dw, ring_conv_k2d,
+                     ring_conv_pw)
 from .elementwise import ring_elementwise
 from .ops import (SEG_WIDTH, decode_attention, fused_mlp, ring_cache_update,
                   segment_gemm)
 from .quantized import (ring_add_q, ring_avgpool_q, ring_conv_dw_q,
-                        ring_conv_pw_q, ring_gemm_q)
+                        ring_conv_k2d_q, ring_conv_pw_q, ring_gemm_q)

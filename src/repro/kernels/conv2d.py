@@ -213,12 +213,110 @@ def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
 
 
 # ---------------------------------------------------------------------------
+# General k x k spatial conv.
+# ---------------------------------------------------------------------------
+
+def _k2d_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
+                sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
+                h_in: int, w_in: int, h_out: int, w_out: int, c_in: int,
+                c_out: int, k: int, stride: int, pad: int,
+                activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    acc = jnp.zeros((w_out, c_out), jnp.float32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(k):
+        src = p * stride - pad + r
+        valid_r = (src >= 0) & (src < h_in)
+        srcc = jnp.clip(src, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
+        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                     x_vmem, sem_in)
+        load.start()
+        load.wait()
+        row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+            .astype(jnp.float32)
+        for s in range(k):
+            cols = qs * stride - pad + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.dot(jnp.where(ok, tap, 0.0),
+                                w_ref[r, s].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    y = resolve_activation(activation)(acc + b_ref[...].astype(jnp.float32))
+    y = y.astype(x_vmem.dtype)
+    padw = nsegs * SEG_WIDTH - c_out
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "k", "stride", "padding", "in_ptr", "out_ptr",
+                     "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_k2d(pool: jax.Array, w: jax.Array, b: jax.Array, *,
+                  h_in: int, w_in: int, h_out: int, w_out: int, c_in: int,
+                  c_out: int, k: int = 3, stride: int = 1,
+                  padding: str = "same", in_ptr: int = 0, out_ptr: int = 0,
+                  activation: str | None = None,
+                  interpret: bool = False) -> jax.Array:
+    """General k x k conv ``[h_in, w_in, c_in] -> [h_out, w_out, c_out]``
+    inside the ring.
+
+    ``w``: [k, k, c_in, c_out]; output row ``p`` RAMLoads the k input
+    halo rows ``p*stride - pad .. + k - 1`` (rows/cols outside the image
+    masked to the zero padding), dots each tap against the Flash weight
+    slice and RAMStores one output image row at the solved offset."""
+    from ..core.rowsched import conv_k2d_pad
+
+    n_seg = pool.shape[0]
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
+            or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _k2d_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
+        c_out=c_out, k=k, stride=stride, pad=conv_k2d_pad(k, padding),
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((k, k, c_in, c_out), lambda p: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b)
+
+
+# ---------------------------------------------------------------------------
 # Residual add.
 # ---------------------------------------------------------------------------
 
 def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
                 in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
-                chunk: int):
+                chunk: int, activation: str | None):
     t = pl.program_id(0)
     off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
     off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
@@ -230,8 +328,9 @@ def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
                                 sem_in)
     cp2.start()
     cp2.wait()
-    y = (x_vmem[...].astype(jnp.float32)
-         + r_vmem[...].astype(jnp.float32)).astype(x_vmem.dtype)
+    y = resolve_activation(activation)(
+        x_vmem[...].astype(jnp.float32)
+        + r_vmem[...].astype(jnp.float32)).astype(x_vmem.dtype)
     x_vmem[...] = y
     off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
     st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
@@ -243,21 +342,22 @@ def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
 @functools.partial(
     jax.jit,
     static_argnames=("rows", "d", "in_ptr", "aux_ptr", "out_ptr",
-                     "interpret"),
+                     "activation", "interpret"),
     donate_argnums=(0,))
 def ring_add(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
-             aux_ptr: int, out_ptr: int,
+             aux_ptr: int, out_ptr: int, activation: str | None = None,
              interpret: bool = False) -> jax.Array:
-    """``Out[t] = In[t] + Res[t]`` streamed one pixel row at a time; the
-    residual source rows die exactly as they are read (the planner held
-    them live until here)."""
+    """``Out[t] = act(In[t] + Res[t])`` streamed one pixel row at a time;
+    the residual source rows die exactly as they are read (the planner
+    held them live until here)."""
     n_seg = pool.shape[0]
     chunk = _segs(d)
     if n_seg % chunk or in_ptr % chunk or aux_ptr % chunk \
             or out_ptr % chunk:
         raise ValueError("pool/pointers not row aligned")
     kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
-                               out_ptr=out_ptr, n_seg=n_seg, chunk=chunk)
+                               out_ptr=out_ptr, n_seg=n_seg, chunk=chunk,
+                               activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(rows,),

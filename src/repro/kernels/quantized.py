@@ -290,13 +290,110 @@ def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# General k x k spatial conv.
+# ---------------------------------------------------------------------------
+
+def _k2d_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
+                y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+                n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
+                c_in: int, c_out: int, k: int, stride: int, pad: int,
+                activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    acc = jnp.zeros((w_out, c_out), jnp.int32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(k):
+        src = p * stride - pad + r
+        valid_r = (src >= 0) & (src < h_in)
+        srcc = jnp.clip(src, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
+        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                     x_vmem, sem_in)
+        load.start()
+        load.wait()
+        row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+            .astype(jnp.int32)
+        for s in range(k):
+            cols = qs * stride - pad + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.dot(jnp.where(ok, tap, 0),
+                                w_ref[r, s].astype(jnp.int32),
+                                preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
+    y = requantize(acc, m_ref[...][None, :], s_ref[...][None, :])
+    padw = nsegs * SEG_WIDTH - c_out
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "k", "stride", "padding", "in_ptr", "out_ptr",
+                     "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_k2d_q(pool: jax.Array, w: jax.Array, b: jax.Array,
+                    mult: jax.Array, shift: jax.Array, *, h_in: int,
+                    w_in: int, h_out: int, w_out: int, c_in: int,
+                    c_out: int, k: int = 3, stride: int = 1,
+                    padding: str = "same", in_ptr: int = 0,
+                    out_ptr: int = 0, activation: str | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Int8 k x k conv inside the ring: int8 halo rows -> int32 dot per
+    tap -> per-output-channel requantize on store (symmetric zero point
+    keeps the padding exact)."""
+    from ..core.rowsched import conv_k2d_pad
+
+    n_seg = pool.shape[0]
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
+            or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
+        raise ValueError("pool/pointers not image-row aligned")
+    kernel = functools.partial(
+        _k2d_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
+        h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
+        c_out=c_out, k=k, stride=stride, pad=conv_k2d_pad(k, padding),
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((k, k, c_in, c_out), lambda p: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b, mult, shift)
+
+
+# ---------------------------------------------------------------------------
 # Residual add.
 # ---------------------------------------------------------------------------
 
 def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
                 in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
                 chunk: int, mult_in: int, shift_in: int, mult_aux: int,
-                shift_aux: int):
+                shift_aux: int, activation: str | None):
     t = pl.program_id(0)
     off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
     off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
@@ -310,7 +407,8 @@ def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
     cp2.wait()
     ya = requantize_i32(x_vmem[...].astype(jnp.int32), mult_in, shift_in)
     yb = requantize_i32(r_vmem[...].astype(jnp.int32), mult_aux, shift_aux)
-    x_vmem[...] = jnp.clip(ya + yb, -128, 127).astype(x_vmem.dtype)
+    acc = _q_act(ya + yb, activation)   # post-add relu (int32 domain)
+    x_vmem[...] = jnp.clip(acc, -128, 127).astype(x_vmem.dtype)
     off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
     st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
                                sem_out)
@@ -322,14 +420,16 @@ def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
     jax.jit,
     static_argnames=("rows", "d", "in_ptr", "aux_ptr", "out_ptr",
                      "mult_in", "shift_in", "mult_aux", "shift_aux",
-                     "interpret"),
+                     "activation", "interpret"),
     donate_argnums=(0,))
 def ring_add_q(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
                aux_ptr: int, out_ptr: int, mult_in: int, shift_in: int,
                mult_aux: int, shift_aux: int,
+               activation: str | None = None,
                interpret: bool = False) -> jax.Array:
     """Int8 residual add: both operands requantized to the output scale,
-    summed, saturated — streamed one pixel row at a time."""
+    summed (optional int32-domain relu), saturated — streamed one pixel
+    row at a time."""
     n_seg = pool.shape[0]
     chunk = _segs(d)
     if n_seg % chunk or in_ptr % chunk or aux_ptr % chunk \
@@ -338,7 +438,8 @@ def ring_add_q(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
     kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
                                out_ptr=out_ptr, n_seg=n_seg, chunk=chunk,
                                mult_in=mult_in, shift_in=shift_in,
-                               mult_aux=mult_aux, shift_aux=shift_aux)
+                               mult_aux=mult_aux, shift_aux=shift_aux,
+                               activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(rows,),

@@ -1,13 +1,26 @@
-"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+"""Pure-jnp oracles for every executable op kind (the ``ref.py`` contract).
 
 Each oracle computes the mathematical result with no ring/pool mechanics;
-tests stage inputs into a ring, run the kernel, fetch outputs, and
-``assert_allclose`` against these.
+tests stage inputs into a ring, run the op on a backend, fetch outputs,
+and compare against these.  This file is THE reference the conformance
+matrix (``tests/test_conformance_matrix.py``) pins every (op kind,
+backend, dtype) cell against:
+
+  * fp32 oracles — ``assert_allclose``; the conv oracles go through
+    ``lax.conv_general_dilated`` so a shared gather/tap indexing bug in
+    the executors cannot cancel out,
+  * int8 oracles (``*_q_ref``) — BITWISE equality; integer accumulation
+    is order-independent, so these simple formulations pin the ring
+    kernels exactly (they share only the one
+    :func:`repro.quant.requant.requantize` definition with them).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ..core.program import resolve_activation
+from ..core.rowsched import conv_k2d_pad
 
 
 def gemm_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
@@ -31,6 +44,187 @@ def fused_mlp_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     if residual:
         y = y + xf
     return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fp32 whole-network op oracles.
+# ---------------------------------------------------------------------------
+
+def _act(y, activation):
+    return resolve_activation(activation)(y)
+
+
+def _conv2d(img, w, *, stride: int, pad_lo: int, h_out: int, w_out: int,
+            groups: int = 1) -> jax.Array:
+    """``lax.conv_general_dilated`` with the repo's halo convention: low
+    padding fixed, high padding whatever makes the output shape exact."""
+    h_in, w_in, _ = img.shape
+    rs = w.shape[0]
+    ph = (h_out - 1) * stride + rs - pad_lo - h_in
+    pw = (w_out - 1) * stride + rs - pad_lo - w_in
+    out = jax.lax.conv_general_dilated(
+        img[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad_lo, ph), (pad_lo, pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return out[0]
+
+
+def conv_pw_ref(img: jax.Array, w: jax.Array, b: jax.Array, *,
+                stride: int = 1, activation: str | None = None
+                ) -> jax.Array:
+    """Pointwise conv ``[h, w, c_in] -> [ceil(h/s), ceil(w/s), c_out]``."""
+    h_out = -(-img.shape[0] // stride)
+    w_out = -(-img.shape[1] // stride)
+    c_in, c_out = w.shape
+    y = _conv2d(img, w.reshape(1, 1, c_in, c_out), stride=stride,
+                pad_lo=0, h_out=h_out, w_out=w_out)
+    return _act(y + b.astype(jnp.float32), activation).astype(img.dtype)
+
+
+def conv_dw_ref(img: jax.Array, w: jax.Array, b: jax.Array, *,
+                stride: int = 1, activation: str | None = None
+                ) -> jax.Array:
+    """Depthwise RSxRS conv, 'same' padding; ``w``: [rs, rs, c]."""
+    rs, _, c = w.shape
+    h_out = -(-img.shape[0] // stride)
+    w_out = -(-img.shape[1] // stride)
+    y = _conv2d(img, w.reshape(rs, rs, 1, c), stride=stride,
+                pad_lo=(rs - 1) // 2, h_out=h_out, w_out=w_out, groups=c)
+    return _act(y + b.astype(jnp.float32), activation).astype(img.dtype)
+
+
+def conv_k2d_ref(img: jax.Array, w: jax.Array, b: jax.Array, *,
+                 stride: int = 1, padding: str = "same",
+                 activation: str | None = None) -> jax.Array:
+    """General k x k conv; ``w``: [k, k, c_in, c_out]."""
+    from ..core.rowsched import conv_k2d_out
+
+    k = w.shape[0]
+    h_out = conv_k2d_out(img.shape[0], k, stride, padding)
+    w_out = conv_k2d_out(img.shape[1], k, stride, padding)
+    y = _conv2d(img, w, stride=stride, pad_lo=conv_k2d_pad(k, padding),
+                h_out=h_out, w_out=w_out)
+    return _act(y + b.astype(jnp.float32), activation).astype(img.dtype)
+
+
+def add_ref(x: jax.Array, res: jax.Array, *,
+            activation: str | None = None) -> jax.Array:
+    return _act(x.astype(jnp.float32) + res.astype(jnp.float32),
+                activation).astype(x.dtype)
+
+
+def avgpool_ref(img: jax.Array) -> jax.Array:
+    """Global average pool ``[h, w, c] -> [1, c]``."""
+    return jnp.mean(img.astype(jnp.float32), axis=(0, 1),
+                    keepdims=False)[None, :].astype(img.dtype)
+
+
+def elementwise_ref(x: jax.Array, fn: str) -> jax.Array:
+    return _act(x.astype(jnp.float32), fn).astype(x.dtype)
+
+
+def ib_fused_ref(a: jax.Array, w1: jax.Array, wd: jax.Array,
+                 w2: jax.Array, *, residual: bool = True) -> jax.Array:
+    """Fused inverted bottleneck (Fig. 6) oracle — re-exported so every
+    executable op kind has its reference here."""
+    from .inverted_bottleneck import inverted_bottleneck_ref
+
+    return inverted_bottleneck_ref(a, w1, wd, w2, residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# int8 op oracles: int8 operands -> int32 accumulate -> the ONE shared
+# requantize definition.  Bitwise contracts for the quantized kernels.
+# ---------------------------------------------------------------------------
+
+def _q_act(acc, activation):
+    from ..quant.requant import act_i32
+
+    return act_i32(acc, activation)
+
+
+def gemm_q_ref(x_q, w_q, b_q, mult, shift, *, activation=None):
+    from ..quant.requant import requantize
+
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b_q.astype(jnp.int32), activation)
+    return requantize(acc, mult[None, :], shift[None, :])
+
+
+def conv_pw_q_ref(img_q, w_q, b_q, mult, shift, *, stride=1,
+                  activation=None):
+    sub = img_q[::stride, ::stride].astype(jnp.int32)
+    acc = jnp.einsum("hwc,cd->hwd", sub, w_q.astype(jnp.int32))
+    return _requant_img(acc, b_q, mult, shift, activation)
+
+
+def conv_dw_q_ref(img_q, w_q, b_q, mult, shift, *, stride=1,
+                  activation=None):
+    rs, _, c = w_q.shape
+    acc = _tap_acc(img_q, w_q.reshape(rs, rs, 1, c), stride,
+                   (rs - 1) // 2, "same", depthwise=True)
+    return _requant_img(acc, b_q, mult, shift, activation)
+
+
+def conv_k2d_q_ref(img_q, w_q, b_q, mult, shift, *, stride=1,
+                   padding="same", activation=None):
+    k = w_q.shape[0]
+    acc = _tap_acc(img_q, w_q, stride, conv_k2d_pad(k, padding), padding)
+    return _requant_img(acc, b_q, mult, shift, activation)
+
+
+def _tap_acc(img_q, w_q, stride, pad_lo, padding, *, depthwise=False):
+    """Int32 tap-sum conv (exact — integer addition is associative)."""
+    k = w_q.shape[0]
+    h_in, w_in, _ = img_q.shape
+    if padding == "same":
+        h_out, w_out = -(-h_in // stride), -(-w_in // stride)
+    else:
+        h_out = (h_in - k) // stride + 1
+        w_out = (w_in - k) // stride + 1
+    pad_hi = pad_lo + stride if padding == "same" else 0
+    padded = jnp.pad(img_q.astype(jnp.int32),
+                     ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    c_out = w_q.shape[2] if depthwise else w_q.shape[3]
+    acc = jnp.zeros((h_out, w_out, c_out), jnp.int32)
+    for r in range(k):
+        for c in range(k):
+            tap = padded[r:r + stride * (h_out - 1) + 1:stride,
+                         c:c + stride * (w_out - 1) + 1:stride]
+            if depthwise:
+                acc = acc + tap * w_q[r, c, 0].astype(jnp.int32)[None,
+                                                                 None]
+            else:
+                acc = acc + jnp.einsum("hwc,cd->hwd", tap,
+                                       w_q[r, c].astype(jnp.int32))
+    return acc
+
+
+def _requant_img(acc, b_q, mult, shift, activation):
+    from ..quant.requant import requantize
+
+    acc = _q_act(acc + b_q.astype(jnp.int32), activation)
+    return requantize(acc, mult[None, None, :], shift[None, None, :])
+
+
+def add_q_ref(x_q, res_q, mult_in, shift_in, mult_aux, shift_aux, *,
+              activation=None):
+    from ..quant.requant import requantize_i32
+
+    ya = requantize_i32(x_q.astype(jnp.int32), mult_in, shift_in)
+    yb = requantize_i32(res_q.astype(jnp.int32), mult_aux, shift_aux)
+    return jnp.clip(_q_act(ya + yb, activation), -128, 127) \
+        .astype(jnp.int8)
+
+
+def avgpool_q_ref(img_q, mult, shift):
+    from ..quant.requant import requantize
+
+    acc = jnp.sum(img_q.astype(jnp.int32), axis=(0, 1))[None, :]
+    return requantize(acc, mult, shift)
 
 
 def ring_decode_ref(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,

@@ -26,6 +26,17 @@ from test_codegen import (_fused_program, _mini_net_program,  # noqa: E402
 from repro.core.codegen import emit_program  # noqa: E402
 
 
+def _net_geometry_units(net: str, name: str) -> dict[str, str]:
+    """Ring-geometry goldens of a registered net's int8 cortex-m4 plan
+    (byte-typed pool header, target idiom banner, no requant tables —
+    fully determined by the planner's solved integer offsets)."""
+    import repro
+
+    cn = repro.compile(net, target="cortex-m4",
+                       quantize=False, certify=False)
+    return cn.emit_c(geometry_only=True, name=name)
+
+
 def _vww_geometry_units() -> dict[str, str]:
     """The CLI smoke-gate goldens: MCUNet-VWW's int8 deployment ring.
 
@@ -34,9 +45,7 @@ def _vww_geometry_units() -> dict[str, str]:
     the one definition site for both sides of the diff."""
     import repro
 
-    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4",
-                       quantize=False, certify=False)
-    return cn.emit_c(geometry_only=True, name="vww")
+    return _net_geometry_units("mcunet-5fps-vww", "vww")
 
 
 def _write(out: pathlib.Path, units: dict[str, str]) -> None:
@@ -58,6 +67,9 @@ def main() -> None:
     units.update(emit_program(qprog, "qmini", quant=qparams))
     _write(out, units)
     _write(out / "vww", _vww_geometry_units())
+    # ResNet-8 (conv_k2d ops incl. the shortcut-projection branch):
+    # pinned by tests/test_codegen.py and the CI freshness gate
+    _write(out / "resnet8", _net_geometry_units("resnet-8", "resnet8"))
 
 
 if __name__ == "__main__":

@@ -104,6 +104,28 @@ def test_emit_program_matches_golden_files():
         assert src == golden.read_text(), f"{name} drifted from golden"
 
 
+def test_resnet8_geometry_units_match_golden_files():
+    """The ResNet-8 int8 deployment plan's ring-geometry units (conv_k2d
+    halo loops, branch shortcut conv, post-add relu) are pinned
+    byte-for-byte under tests/golden/resnet8/ — the CI freshness gate
+    (regen.py + git diff) keeps them honest."""
+    import repro
+
+    cn = repro.compile("resnet-8", target="cortex-m4", quantize=False,
+                       certify=False)
+    units = cn.emit_c(geometry_only=True, name="resnet8")
+    assert sum("conv_k2d" in n for n in units) == 7
+    assert sum("add" in n for n in units) == 3
+    golden_dir = GOLDEN / "resnet8"
+    for name, src in units.items():
+        golden = golden_dir / name
+        assert golden.exists(), f"missing golden file {name}; regenerate " \
+            "with tests/golden/regen.py"
+        assert src == golden.read_text(), f"{name} drifted from golden"
+    # no stale goldens lingering as if still covered
+    assert {p.name for p in golden_dir.glob("*.c")} == set(units)
+
+
 def test_emit_quantized_program_bakes_requant_constants():
     prog, qparams = _quantized_program_and_qparams()
     units = emit_program(prog, "qmini", quant=qparams)

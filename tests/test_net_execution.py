@@ -5,6 +5,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow   # whole-network execution: full lane only
+
 from repro.core.graph_planner import (MCUNET_5FPS_VWW,
                                       MCUNET_320KB_IMAGENET)
 from repro.graph import (build_mcunet, build_mlp_tower, certify_net,

@@ -1,36 +1,59 @@
-"""Property test: solve_stream_offset is SAFE and TIGHT for random
+"""Property tests: solve_stream_offset is SAFE and TIGHT for random
 read/write frontiers, proven against the SegmentPool byte oracle.
 
 Safety: replaying the schedule with In placed ``delta`` bytes above Out
 never clobbers.  Tightness: ``delta - 1`` always clobbers (when
 ``delta > 0``) — the solver returns the exact optimum, not a bound.
+
+Two layers of coverage:
+
+  * generic random frontiers (hypothesis),
+  * the ``conv_k2d`` k x k halo/stride/padding frontiers — a
+    deterministic exhaustive sweep over k in {1, 3, 5} x stride in
+    {1, 2} x padding in {same, valid} that runs even without
+    hypothesis, plus a randomized hypothesis version over arbitrary
+    geometries.
 """
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
 from repro.core.graph_planner import solve_stream_offset
 from repro.core.pool import PoolClobberError, SegmentPool
+from repro.core.rowsched import (RowSchedule, conv_k2d_out,
+                                 conv_k2d_schedule)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
 
 
-@st.composite
-def _schedules(draw):
-    """A random streaming schedule: per step, a set of input bytes read
-    (monotone-ish frontier with halo re-reads) and bytes written."""
-    steps = draw(st.integers(2, 12))
-    in_size = draw(st.integers(steps, 40))
-    halo = draw(st.integers(0, 3))
-    stride = draw(st.integers(1, 3))
-    out_per_step = draw(st.integers(1, 5))
-    reads = []
-    for t in range(steps):
-        base = min(t * stride, in_size - 1)
-        lo = max(0, base - halo)
-        hi = min(in_size - 1, base + halo)
-        reads.append(list(range(lo, hi + 1)))
-    return reads, in_size, out_per_step
+# ---------------------------------------------------------------------------
+# Generic random frontiers.
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _schedules(draw):
+        """A random streaming schedule: per step, a set of input bytes
+        read (monotone-ish frontier with halo re-reads) and bytes
+        written."""
+        steps = draw(st.integers(2, 12))
+        in_size = draw(st.integers(steps, 40))
+        halo = draw(st.integers(0, 3))
+        stride = draw(st.integers(1, 3))
+        out_per_step = draw(st.integers(1, 5))
+        reads = []
+        for t in range(steps):
+            base = min(t * stride, in_size - 1)
+            lo = max(0, base - halo)
+            hi = min(in_size - 1, base + halo)
+            reads.append(list(range(lo, hi + 1)))
+        return reads, in_size, out_per_step
 
 
 def _frontiers(reads, in_size, out_per_step):
@@ -76,18 +99,21 @@ def _replay(reads, in_size, out_per_step, last_read, delta):
         pool.read(b, owner=("out", b))
 
 
-@given(_schedules())
-@settings(max_examples=60, deadline=None)
-def test_solved_delta_is_clobber_free_and_tight(sched):
-    reads, in_size, out_per_step = sched
-    read_start, write_end, last_read = _frontiers(reads, in_size,
-                                                  out_per_step)
-    delta = solve_stream_offset(write_end, read_start)
-    assert delta >= 0
-    _replay(reads, in_size, out_per_step, last_read, delta)  # must pass
-    if delta > 0:
-        with pytest.raises(PoolClobberError):
-            _replay(reads, in_size, out_per_step, last_read, delta - 1)
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(_schedules())
+    @settings(max_examples=60, deadline=None)
+    def test_solved_delta_is_clobber_free_and_tight(sched):
+        reads, in_size, out_per_step = sched
+        read_start, write_end, last_read = _frontiers(reads, in_size,
+                                                      out_per_step)
+        delta = solve_stream_offset(write_end, read_start)
+        assert delta >= 0
+        _replay(reads, in_size, out_per_step, last_read, delta)
+        if delta > 0:
+            with pytest.raises(PoolClobberError):
+                _replay(reads, in_size, out_per_step, last_read,
+                        delta - 1)
 
 
 def test_known_gemm_case_matches_closed_form():
@@ -96,3 +122,79 @@ def test_known_gemm_case_matches_closed_form():
     read_start = np.zeros(N, dtype=np.int64)      # whole row needed
     write_end = (np.arange(N, dtype=np.int64) + 1)
     assert solve_stream_offset(write_end, read_start) == N - 1
+
+
+# ---------------------------------------------------------------------------
+# conv_k2d halo/stride/padding frontiers.
+# ---------------------------------------------------------------------------
+
+def _replay_rowsched(sched: RowSchedule, delta: int) -> None:
+    """Drive a RowSchedule through the oracle exactly the way the sim
+    executor does (``executors._sim_rowsched_op``): reads, then
+    Eq.-(2) frees, then writes, per step; In at ``delta`` chunks above
+    Out."""
+    ic, oc = sched.in_chunk, sched.out_chunk
+    in_tot, out_tot = sched.in_rows * ic, sched.out_rows * oc
+    n = max(in_tot + max(delta, 0), out_tot, 1)
+    pool = SegmentPool(n, segment_bytes=1)
+    for s in range(in_tot):
+        pool.write(delta + s, owner=("in", s))
+    frees = sched.frees()
+    for t in range(sched.steps):
+        for r in sched.reads[t]:
+            for s in range(ic):
+                pool.read(delta + r * ic + s, owner=("in", r * ic + s))
+        for r in frees[t]:
+            for s in range(ic):
+                pool.free(delta + r * ic + s, owner=("in", r * ic + s))
+        for r in sched.writes[t]:
+            for s in range(oc):
+                pool.write(r * oc + s, owner=("out", r * oc + s))
+    for s in range(out_tot):
+        pool.read(s, owner=("out", s))
+
+
+def _check_safe_and_tight(sched: RowSchedule) -> int:
+    delta = sched.solve_delta()
+    assert delta >= 0
+    _replay_rowsched(sched, delta)            # safe: must not clobber
+    if delta > 0:
+        with pytest.raises(PoolClobberError):  # tight: exact optimum
+            _replay_rowsched(sched, delta - 1)
+    return delta
+
+
+@pytest.mark.parametrize("k", (1, 3, 5))
+@pytest.mark.parametrize("stride", (1, 2))
+@pytest.mark.parametrize("padding", ("same", "valid"))
+@pytest.mark.parametrize("h_in,in_chunk,out_chunk",
+                         ((7, 3, 2), (12, 4, 4), (9, 2, 5)))
+def test_conv_k2d_frontier_safe_and_tight(k, stride, padding, h_in,
+                                          in_chunk, out_chunk):
+    """Deterministic sweep (runs without hypothesis): the k-row halo
+    widens the safe-offset frontier and the solved delta stays exact
+    for every (k, stride, padding) geometry."""
+    h_out = conv_k2d_out(h_in, k, stride, padding)
+    sched = conv_k2d_schedule(h_in, h_out, in_chunk, out_chunk, k=k,
+                              stride=stride, padding=padding)
+    delta = _check_safe_and_tight(sched)
+    if padding == "same" and stride == 1 and out_chunk >= in_chunk:
+        # the trailing (k-1)//2 halo rows alone force delta > 0
+        assert delta >= (k - 1) // 2 * in_chunk
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(k=st.sampled_from((1, 3, 5)),
+           stride=st.sampled_from((1, 2)),
+           padding=st.sampled_from(("same", "valid")),
+           h_in=st.integers(5, 24),
+           in_chunk=st.integers(1, 6),
+           out_chunk=st.integers(1, 6))
+    @settings(max_examples=80, deadline=None)
+    def test_conv_k2d_frontier_random_geometry(k, stride, padding, h_in,
+                                               in_chunk, out_chunk):
+        h_out = conv_k2d_out(h_in, k, stride, padding)
+        sched = conv_k2d_schedule(h_in, h_out, in_chunk, out_chunk, k=k,
+                                  stride=stride, padding=padding)
+        _check_safe_and_tight(sched)
