@@ -47,39 +47,94 @@ def _multi_layer_rows():
             "imagenet": multi_layer.run(MCUNET_320KB_IMAGENET)}
 
 
+#: (net, target, full) — full=True additionally quantizes + saves the
+#: artifact; the rest are planner-only (ring + certificate only).
+_PIPELINE_ZOO = [("mcunet-5fps-vww", "cortex-m4", True),
+                 ("mcunet-320kb-imagenet", "cortex-m7", False),
+                 ("ds-cnn", "cortex-m4", False),
+                 ("resnet-8", "cortex-m4", False),
+                 ("mobilenetv1-0.25", "cortex-m4", False)]
+
+
+def _best_of(fn, n=3):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def _compile_pipeline_rows():
     """One-call deployment trajectory: per-pass seconds + artifact size
-    for the MCUNet-VWW int8 flow (DESIGN.md §9)."""
+    for the MCUNet-VWW int8 flow, plus certify-mode timings (static
+    proof vs sim replay, best-of-3) for every zoo net (DESIGN.md §9/§11).
+    """
     import tempfile
 
     import repro
+    from repro.analysis import verify_program
+    from repro.graph.run import certify_net
 
-    cn = repro.compile("mcunet-5fps-vww", target="cortex-m4")
-    with tempfile.NamedTemporaryFile(suffix=".plan.json") as f:
-        cn.save(f.name)
-        artifact_bytes = os.path.getsize(f.name)
-    return [{
-        "net": cn.net_name,
-        "target": cn.target.name,
-        "passes": {p.name: round(p.seconds, 4) for p in cn.passes},
-        "int8_pool_kb": cn.pool_bytes / 1000,
-        "mcu_bottleneck_kb": cn.mcu_bottleneck_bytes / 1000,
-        "sram_margin_kb": cn.target.sram_margin(
-            cn.mcu_bottleneck_bytes) / 1000,
-        "flash_used_kb": cn.flash_bytes_used / 1000,
-        "artifact_kb": artifact_bytes / 1000,
-        "n_c_units": len(cn.emit_c()),
-    }]
+    rows = []
+    for net, target, full in _PIPELINE_ZOO:
+        cn = repro.compile(net, target=target, quantize=full,
+                           certify="static")
+        program = cn.program
+        t_sim = _best_of(lambda: certify_net(program))
+        assert verify_program(program).safe is True
+        t_static = _best_of(lambda: verify_program(program))
+        row = {
+            "net": cn.net_name,
+            "target": cn.target.name,
+            "passes": {p.name: round(p.seconds, 4) for p in cn.passes},
+            "int8_pool_kb": cn.pool_bytes / 1000,
+            "mcu_bottleneck_kb": cn.mcu_bottleneck_bytes / 1000,
+            "sram_margin_kb": cn.target.sram_margin(
+                cn.mcu_bottleneck_bytes) / 1000,
+            "flash_used_kb": cn.flash_bytes_used / 1000,
+            "certify_sim_s": round(t_sim, 6),
+            "certify_static_s": round(t_static, 6),
+            "certify_speedup": round(t_sim / t_static, 1),
+        }
+        if full:
+            with tempfile.NamedTemporaryFile(suffix=".plan.json") as f:
+                cn.save(f.name)
+                row["artifact_kb"] = os.path.getsize(f.name) / 1000
+            row["n_c_units"] = len(cn.emit_c())
+        rows.append(row)
+    return rows
 
 
 def _compile_pipeline_show(rows):
     for r in rows:
+        extra = ""
+        if "artifact_kb" in r:
+            extra = (f" artifact={r['artifact_kb']:.0f}KB "
+                     f"c_units={r['n_c_units']}")
         print(f"{r['net']} -> {r['target']}: int8_pool={r['int8_pool_kb']:.1f}KB "
-              f"mcu_bottleneck={r['mcu_bottleneck_kb']:.1f}KB "
-              f"artifact={r['artifact_kb']:.0f}KB "
-              f"c_units={r['n_c_units']}")
+              f"mcu_bottleneck={r['mcu_bottleneck_kb']:.1f}KB" + extra)
         print("  passes: " + ", ".join(f"{k}={v:.2f}s"
                                        for k, v in r["passes"].items()))
+        print(f"  certify: sim={r['certify_sim_s'] * 1e3:.2f}ms "
+              f"static={r['certify_static_s'] * 1e3:.2f}ms "
+              f"({r['certify_speedup']:.0f}x)")
+
+
+def check_certify_gate(rows) -> list[str]:
+    """--smoke gate: the static proof must cost <10% of the sim replay
+    on MCUNet-VWW (the acceptance headline; other nets are recorded
+    but not gated — their replay is too quick for a stable ratio)."""
+    bad = []
+    for r in rows:
+        if r["net"] != "mcunet-5fps-vww":
+            continue
+        if r["certify_static_s"] >= 0.1 * r["certify_sim_s"]:
+            bad.append(
+                f"certify gate: static {r['certify_static_s'] * 1e3:.2f}ms"
+                f" >= 10% of sim {r['certify_sim_s'] * 1e3:.2f}ms on "
+                f"{r['net']}")
+    return bad
 
 
 # (name, collector-or-None, printer, in_smoke).  Collectors run once;
@@ -231,6 +286,14 @@ def main(argv=None) -> None:
         "section_time_s": section_times,
         "sections": section_rows,
     }
+
+    if args.smoke and "Compile_pipeline" in section_rows:
+        bad = check_certify_gate(section_rows["Compile_pipeline"])
+        if bad:
+            print("\n# STATIC-CERTIFY GATE FAILED:")
+            for msg in bad:
+                print(f"#   {msg}")
+            sys.exit(1)
 
     if old_payload is not None:
         bad = check_regressions(old_payload, payload)

@@ -12,7 +12,10 @@ The deployment front door is one call (DESIGN.md §9):
 
 Subsystem packages stay importable directly: ``repro.core`` (pool +
 planner + executors), ``repro.graph`` (whole-network compiler),
-``repro.quant`` (int8), ``repro.kernels`` (Pallas ring kernels).
+``repro.quant`` (int8), ``repro.kernels`` (Pallas ring kernels),
+``repro.analysis`` (static ring-safety verifier + ``vmcu-lint``;
+``repro.compile(..., certify="static")`` proves plans instead of
+replaying them).
 
 Note: ``repro.compile`` is the *function*; the package it lives in is
 reachable as ``repro.compile.targets`` etc. via normal ``from`` imports.

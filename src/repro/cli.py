@@ -72,8 +72,13 @@ def main(argv=None) -> int:
     ap.add_argument("--from-artifact", action="store_true",
                     help="treat NET as a saved artifact and load it "
                          "instead of compiling")
+    ap.add_argument("--certify", choices=("sim", "static"), default="sim",
+                    help="certification mode: replay the sim clobber "
+                         "oracle, or statically prove clobber-freedom "
+                         "(repro.analysis; falls back to sim outside "
+                         "the decidable fragment)")
     ap.add_argument("--no-certify", action="store_true",
-                    help="skip the sim-oracle certification pass")
+                    help="skip the certification pass entirely")
     ap.add_argument("--no-budget", action="store_true",
                     help="record the SRAM verdict without gating")
     ap.add_argument("--list-targets", action="store_true")
@@ -116,7 +121,8 @@ def main(argv=None) -> int:
         net = args.net or "mcunet-5fps-vww"
         try:
             cn = repro.compile(net, target=target, dtype=args.dtype,
-                               certify=not args.no_certify,
+                               certify=(False if args.no_certify
+                                        else args.certify),
                                check_budget=not args.no_budget)
         except repro.SRAMBudgetError as e:
             print(f"SRAM budget gate FAILED: {e}", file=sys.stderr)

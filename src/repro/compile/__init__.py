@@ -7,7 +7,7 @@ parts:
   * ``targets``  — the :class:`Target` descriptor registry (SRAM/flash
                    budgets, ring geometry, SIMD width, requant idiom),
   * ``driver``   — the named pass pipeline (build -> schedule -> plan ->
-                   budget -> quantize -> certify) and
+                   budget -> quantize -> lint -> certify) and
                    :class:`CompiledNet`,
   * ``artifact`` — the JSON plan-artifact codec (bit-exact payloads).
 

@@ -18,12 +18,25 @@ JSON codec for those payloads:
 from __future__ import annotations
 
 import base64
+import hashlib
 import json
 
 import numpy as np
 
 SCHEMA = 1
 KIND = "vmcu-compiled-net"
+
+
+def program_sha256(program) -> str:
+    """Canonical content hash of a :class:`PoolProgram`.
+
+    Hashes the sorted-key compact JSON of the program's own dict form,
+    so it is stable across processes and identical for a program and its
+    save/load roundtrip.  Certificates embed it (``vmcu-lint`` flags a
+    mismatch as VMCU403: the plan changed after it was certified)."""
+    blob = json.dumps(program.to_json_dict(), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
 
 
 def _np_dtype(name: str) -> np.dtype:

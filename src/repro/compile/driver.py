@@ -14,7 +14,14 @@ TinyEngine-style:
                 (pure arithmetic — runs BEFORE the expensive passes so
                 an over-budget net fails in milliseconds),
   ``quantize``  int8 calibration + requant tables (int8 targets),
-  ``certify``   replay the plan through the SegmentPool clobber oracle.
+  ``lint``      budget/consistency findings (``repro.analysis.lint``:
+                VMCU3xx/4xx — errors abort, warnings ride in the note),
+  ``certify``   prove the plan clobber-free.  ``certify="static"`` runs
+                the abstract interpreter (``repro.analysis``) instead of
+                replaying the schedule through the SegmentPool sim —
+                same certificate, orders of magnitude faster — and falls
+                back to the sim replay (recording why) on the rare
+                program outside the decidable fragment.
 
 The result is a :class:`CompiledNet`: ``.run(x)`` on any executor
 backend, ``.emit_c(dir)`` for the intrinsic-C units, ``.report()`` for
@@ -40,7 +47,8 @@ from ..graph.schedule import reorder
 from . import artifact
 from .targets import Target, get_target
 
-PASS_NAMES = ("build", "schedule", "plan", "budget", "quantize", "certify")
+PASS_NAMES = ("build", "schedule", "plan", "budget", "quantize", "lint",
+              "certify")
 
 _UNSET = object()
 
@@ -325,6 +333,15 @@ class CompiledNet:
         payload = artifact.load(path)
         target = Target(**payload["target"])
         program = PoolProgram.from_json_dict(payload["program"])
+        cert = payload.get("certificate")
+        if cert is not None and "program_sha256" in cert:
+            have = artifact.program_sha256(program)
+            if cert["program_sha256"] != have:
+                raise CompileError(
+                    f"VMCU403: {path} certificate does not match its "
+                    f"program (certified {cert['program_sha256'][:12]}"
+                    f"..., stored {have[:12]}...) — the plan changed "
+                    "after it was certified")
         params = artifact.decode(payload["params"])
         qnet = None
         if payload["quant"] is not None:
@@ -373,7 +390,8 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
             fused_exec: bool | None = None, seg_width: int | None = None,
             block_rows=_UNSET, order=None, params=None, key=None,
             calib=None, n_calib: int = 2, quantize: bool = True,
-            certify: bool = True, check_budget: bool = True) -> CompiledNet:
+            certify: bool | str = True, lint: bool = True,
+            check_budget: bool = True) -> CompiledNet:
     """Compile ``net`` for ``target`` — the repo's deployment front door.
 
     ``net`` is a :class:`repro.graph.Graph` or a registered net name
@@ -386,10 +404,17 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     omitted — deterministic, and materialized lazily so planner-only
     compiles never pay for init); ``calib``/``n_calib`` feed int8
     calibration.  ``quantize=False`` plans an int8 ring without
-    calibrating (planner-only, ``.run`` unavailable); ``certify=False``
-    skips the sim oracle; ``check_budget=False`` records the SRAM
-    verdict without raising :class:`SRAMBudgetError`.
+    calibrating (planner-only, ``.run`` unavailable); ``certify`` is
+    ``True``/``"sim"`` (replay the SegmentPool clobber oracle),
+    ``"static"`` (prove it with :func:`repro.analysis.verify_program`,
+    sim fallback outside the decidable fragment) or ``False`` (skip);
+    ``lint=False`` skips the VMCU3xx/4xx lint pass;
+    ``check_budget=False`` records the SRAM verdict without raising
+    :class:`SRAMBudgetError`.
     """
+    if certify not in (True, False, "sim", "static"):
+        raise ValueError(f"certify must be True/False/'sim'/'static', "
+                         f"got {certify!r}")
     t = get_target(target)
     dtype = dtype or t.default_dtype
     dtype_itemsize(dtype)  # fail fast on unknown dtypes
@@ -470,15 +495,52 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
 
     program = qnet.program if qnet is not None else plan.program
 
+    # lint -----------------------------------------------------------------
+    # (lazy import: repro.analysis is pure inspection, but keep the
+    # driver importable without it in minimal deployments)
+    if lint:
+        def _lint():
+            from ..analysis.lint import lint_program
+
+            diags = lint_program(
+                program, t, deploy_bytes=plan.mcu_bottleneck_bytes)
+            # check_budget=False means "record, don't gate" — that
+            # covers the lint pass's SRAM finding too
+            errors = [d for d in diags if d.severity == "error"
+                      and (check_budget or d.code != "VMCU301")]
+            if errors:
+                raise CompileError(f"lint: {errors[0]}")
+            if diags:
+                return None, (f"{len(diags)} warning(s): "
+                              + "; ".join(str(d) for d in diags))
+            return None, "clean"
+        run_pass("lint", _lint)
+
     # certify --------------------------------------------------------------
     certificate = None
     if certify:
         def _certify():
+            mode = "static" if certify == "static" else "sim"
+            note = ""
+            if mode == "static":
+                from ..analysis import verify_program
+
+                res = verify_program(program)
+                if res.safe is False:
+                    raise CompileError(f"certify: {res.diagnostics[0]}")
+                if res.safe:
+                    cert = res.certificate(
+                        artifact.program_sha256(program))
+                    return cert, (f"static proof: zero clobbers; peak "
+                                  f"{cert['peak_live']}/"
+                                  f"{program.n_segments} segments live")
+                note = f"sim fallback ({res.diagnostics[0].code}); "
             sim = certify_net(program)
             cert = {"clobbers": 0, "peak_live": sim.peak_live,
                     "reads": sim.reads, "writes": sim.writes,
-                    "n_segments": program.n_segments}
-            return cert, (f"zero clobbers; peak {sim.peak_live}/"
+                    "n_segments": program.n_segments,
+                    "program_sha256": artifact.program_sha256(program)}
+            return cert, (f"{note}zero clobbers; peak {sim.peak_live}/"
                           f"{program.n_segments} segments live")
         certificate = run_pass("certify", _certify)
 

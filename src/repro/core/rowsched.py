@@ -21,6 +21,7 @@ A "row" here is one contiguous chunk of pool segments: one image row
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -61,15 +62,21 @@ class RowSchedule:
     def last_read(self) -> np.ndarray:
         """Per input row: the last step that reads it (-1 if never read)."""
         lr = np.full(self.in_rows, -1, dtype=np.int64)
-        for t, rows in enumerate(self.reads):
-            for r in rows:
-                lr[r] = max(lr[r], t)
+        counts = np.fromiter((len(rows) for rows in self.reads),
+                             dtype=np.int64, count=self.steps)
+        flat = [r for rows in self.reads for r in rows]
+        if flat:
+            steps = np.repeat(np.arange(self.steps, dtype=np.int64),
+                              counts)
+            np.maximum.at(lr, np.asarray(flat, dtype=np.int64), steps)
         return lr
 
-    def needed_min(self) -> np.ndarray:
+    def needed_min(self, lr: np.ndarray | None = None) -> np.ndarray:
         """``needed_min[t]`` — lowest input row still read at step >= t
-        (length steps + 1; trailing entry is +inf)."""
-        lr = self.last_read()
+        (length steps + 1; trailing entry is +inf).  Pass a precomputed
+        ``last_read()`` array to avoid recomputing it."""
+        if lr is None:
+            lr = self.last_read()
         per_t = np.full(self.steps, _INF, dtype=np.int64)
         rows = np.nonzero(lr >= 0)[0]
         np.minimum.at(per_t, lr[rows], rows)
@@ -102,13 +109,10 @@ class RowSchedule:
         return np.minimum(nm * self.in_chunk, total)
 
     def write_end_segments(self) -> np.ndarray:
-        we = np.zeros(self.steps, dtype=np.int64)
-        hi = 0
-        for t, rows in enumerate(self.writes):
-            if rows:
-                hi = max(hi, (max(rows) + 1) * self.out_chunk)
-            we[t] = hi
-        return we
+        hi = np.fromiter(((max(rows) + 1) if rows else 0
+                          for rows in self.writes),
+                         dtype=np.int64, count=self.steps)
+        return np.maximum.accumulate(hi) * self.out_chunk
 
     def solve_delta(self) -> int:
         """Minimal segment offset ``b_In - b_Out`` for this schedule."""
@@ -118,8 +122,17 @@ class RowSchedule:
 
 # ---------------------------------------------------------------------------
 # Schedule builders, one per op kind.
+#
+# All builders are pure functions of scalar geometry returning a frozen
+# RowSchedule, and nets repeat module shapes heavily — so they memoize.
+# Planning, sim replay and static verification of the same op thereby
+# share one schedule INSTANCE, not just one derivation.
 # ---------------------------------------------------------------------------
 
+_memo = functools.lru_cache(maxsize=1024)
+
+
+@_memo
 def conv_pw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                      *, stride: int = 1, resample: bool = False
                      ) -> RowSchedule:
@@ -135,6 +148,7 @@ def conv_pw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                        reads=tuple(reads), writes=tuple(writes))
 
 
+@_memo
 def conv_dw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                      *, rs: int, stride: int = 1) -> RowSchedule:
     """Depthwise RSxRS conv: output row ``p`` reads the clamped halo rows
@@ -171,6 +185,7 @@ def conv_k2d_out(h_in: int, k: int, stride: int, padding: str) -> int:
     return (h_in - k) // stride + 1
 
 
+@_memo
 def conv_k2d_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                       *, k: int, stride: int = 1,
                       padding: str = "same") -> RowSchedule:
@@ -190,6 +205,7 @@ def conv_k2d_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
                        reads=tuple(reads), writes=tuple(writes))
 
 
+@_memo
 def ib_fused_schedule(h: int, in_chunk: int, out_chunk: int, *, rs: int,
                       residual: bool) -> RowSchedule:
     """The Fig.-6 fused kernel's row schedule (``ring_inverted_bottleneck``):
@@ -212,6 +228,7 @@ def ib_fused_schedule(h: int, in_chunk: int, out_chunk: int, *, rs: int,
                        reads=tuple(reads), writes=tuple(writes))
 
 
+@_memo
 def add_schedule(rows: int, chunk: int, *, aux_chunk: int | None = None
                  ) -> RowSchedule:
     """Residual add: step ``t`` reads row ``t`` of the chained operand AND
@@ -224,6 +241,7 @@ def add_schedule(rows: int, chunk: int, *, aux_chunk: int | None = None
                        aux_chunk=chunk if aux_chunk is None else aux_chunk)
 
 
+@_memo
 def avgpool_schedule(h: int, in_chunk: int, out_chunk: int) -> RowSchedule:
     """Global average pool: reads one image row per step, emits the single
     output row at the last step (after its read)."""
@@ -234,12 +252,52 @@ def avgpool_schedule(h: int, in_chunk: int, out_chunk: int) -> RowSchedule:
                        reads=reads, writes=writes)
 
 
-def schedule_for_op(op, seg_width: int) -> RowSchedule:
-    """Rebuild the row schedule of a planned :class:`PoolOp` (sim replay)."""
+@_memo
+def gemm_fine_schedule(m: int, k_segs: int, n_segs: int) -> RowSchedule:
+    """The paper's Fig.-4 fine-grained FC schedule at row granularity:
+    step ``t = r * n_segs + n`` re-reads input row ``r`` (all ``k_segs``
+    segments) and writes output segment ``t``; row ``r`` dies at its last
+    read ``n == n_segs - 1`` — exactly the order ``run_program_sim``
+    replays, so the static verifier shares one source of truth with it."""
+    steps = m * n_segs
+    reads = tuple((t // n_segs,) for t in range(steps))
+    writes = tuple((t,) for t in range(steps))
+    return RowSchedule(steps=steps, in_rows=m, out_rows=steps,
+                       in_chunk=k_segs, out_chunk=1,
+                       reads=reads, writes=writes)
+
+
+@_memo
+def rowwise_schedule(rows: int, d_segs: int) -> RowSchedule:
+    """In-place per-row ops (``fused_mlp`` / ``elementwise``): step ``t``
+    reads row ``t``, frees it, then writes row ``t`` at delta == 0."""
+    idx = tuple((t,) for t in range(rows))
+    return RowSchedule(steps=rows, in_rows=rows, out_rows=rows,
+                       in_chunk=d_segs, out_chunk=d_segs,
+                       reads=idx, writes=idx)
+
+
+def schedule_for_op(op, seg_width: int, m_rows: int | None = None
+                    ) -> RowSchedule:
+    """Rebuild the row schedule of a planned :class:`PoolOp` (sim replay).
+
+    ``m_rows`` supplies the program row count for the kinds whose row
+    extent defaults to it (``gemm`` / ``fused_mlp`` / ``elementwise``
+    with ``rows_in == 0``)."""
     from .vpool import segments_for
 
     ci = segments_for(op.d_in, seg_width)
     co = segments_for(op.d_out, seg_width)
+    if op.kind == "gemm":
+        m = op.rows_in or m_rows
+        if m is None:
+            raise ValueError("gemm schedule needs m_rows")
+        return gemm_fine_schedule(m, ci, co)
+    if op.kind in ("fused_mlp", "elementwise"):
+        m = op.rows_in or m_rows
+        if m is None:
+            raise ValueError(f"{op.kind} schedule needs m_rows")
+        return rowwise_schedule(m, ci)
     if op.kind == "conv_pw":
         return conv_pw_schedule(op.h_in, op.h_out, op.w_in * ci,
                                 op.w_out * co, stride=op.stride,

@@ -74,14 +74,15 @@ def test_float_compile_equals_manual_plan():
     assert cn.program == manual.program
     assert cn.mcu_bottleneck_bytes == manual.mcu_bottleneck_bytes
     assert [p.name for p in cn.passes] == ["build", "schedule", "plan",
-                                           "budget", "certify"]
+                                           "budget", "lint", "certify"]
 
 
 def test_int8_compile_runs_all_passes():
     cn = repro.compile(_s7_graph(), target="cortex-m4")
     assert cn.quantized and cn.dtype == "int8"
     assert [p.name for p in cn.passes] == ["build", "schedule", "plan",
-                                           "budget", "quantize", "certify"]
+                                           "budget", "quantize", "lint",
+                                           "certify"]
     assert cn.certificate["clobbers"] == 0
     assert cn.program.quantized  # executed program is the int8-typed one
 

@@ -1,0 +1,142 @@
+"""Zoo-wide lint conformance: every model-zoo artifact (fp32 + int8)
+is accepted by ``vmcu-lint``, the ``certify="static"`` certificate
+roundtrips bit-identically through save/load, and a static-certified
+artifact is byte-identical to a sim-certified one (modulo pass
+timings).  Plus the VMCU4xx/5xx rejection paths on a real artifact.
+"""
+import json
+
+import pytest
+
+import repro
+from repro.analysis import lint_artifact, lint_c_dir
+from repro.analysis.cli import main as lint_main
+
+#: (net, target, dtype) — the conformance matrix the zoo ships.
+COMBOS = [(net, tgt, dt)
+          for net, tgt in (("mcunet-5fps-vww", "cortex-m4"),
+                           ("mcunet-320kb-imagenet", "cortex-m7"),
+                           ("ds-cnn", "cortex-m4"),
+                           ("resnet-8", "cortex-m4"),
+                           ("mobilenetv1-0.25", "cortex-m4"))
+          for dt in ("float32", "int8")]
+_IDS = [f"{n}-{d}" for n, _, d in COMBOS]
+
+
+def _compile(net, target, dtype, certify):
+    # fp32 artifacts compile against host-sim (the zoo's fp32 lane);
+    # int8 against the real MCU target.  quantize=False keeps the
+    # matrix affordable — the ring, certificate and artifact layout are
+    # what's under test, and the full-quantization path is covered by
+    # the dedicated VWW test below.
+    if dtype == "float32":
+        return repro.compile(net, "host-sim", dtype=dtype,
+                             certify=certify)
+    return repro.compile(net, target, dtype=dtype, quantize=False,
+                         certify=certify)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("net,target,dtype", COMBOS, ids=_IDS)
+def test_zoo_artifact_lints_clean_and_cert_roundtrips(net, target, dtype,
+                                                      tmp_path):
+    cn = _compile(net, target, dtype, certify="static")
+    cert = cn.certificate
+    assert cert["clobbers"] == 0 and len(cert["program_sha256"]) == 64
+    note = next(p.note for p in cn.passes if p.name == "certify")
+    assert note.startswith("static proof"), note
+    assert "lint" in [p.name for p in cn.passes]
+
+    path = str(tmp_path / "plan.json")
+    cn.save(path)
+    rep = lint_artifact(path)
+    assert rep.clean and rep.result.safe is True, \
+        [str(d) for d in rep.result.diagnostics]
+    assert lint_main([path]) == 0
+
+    rt = repro.load(path)
+    assert rt.certificate == cert  # bit-identical through save/load
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("net,target,dtype", COMBOS, ids=_IDS)
+def test_static_and_sim_artifacts_byte_identical(net, target, dtype,
+                                                 tmp_path):
+    p_sim = str(tmp_path / "sim.json")
+    p_static = str(tmp_path / "static.json")
+    _compile(net, target, dtype, certify="sim").save(p_sim)
+    _compile(net, target, dtype, certify="static").save(p_static)
+    a, b = (json.load(open(p)) for p in (p_sim, p_static))
+    a.pop("passes"), b.pop("passes")  # only the timings may differ
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Full-quantization VWW artifact: the rejection paths, end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def vww_int8(tmp_path_factory):
+    cn = repro.compile("mcunet-5fps-vww", "cortex-m4", certify="static")
+    path = str(tmp_path_factory.mktemp("vww") / "vww.plan.json")
+    cn.save(path)
+    return cn, path
+
+
+def test_quantized_vww_artifact_lints_clean(vww_int8):
+    cn, path = vww_int8
+    rep = lint_artifact(path)
+    assert rep.clean and rep.result.safe is True
+    assert rep.dtype == "int8" and rep.net == "mcunet-5fps-vww"
+
+
+def test_tampered_artifact_rejected_with_code(vww_int8, tmp_path):
+    _, path = vww_int8
+    payload = json.load(open(path))
+    payload["program"]["ops"][2]["out_ptr"] += 1
+    bad = str(tmp_path / "tampered.json")
+    json.dump(payload, open(bad, "w"))
+    rep = lint_artifact(bad)
+    codes = {d.code for d in rep.result.errors}
+    assert not rep.clean and "VMCU403" in codes  # hash catches the edit
+    assert lint_main([bad]) == 1
+    with pytest.raises(repro.CompileError, match="VMCU403"):
+        repro.load(bad)
+
+
+def test_quant_payload_dtype_mismatch_vmcu404(vww_int8, tmp_path):
+    _, path = vww_int8
+    payload = json.load(open(path))
+    payload["dtype"] = "float32"
+    payload["program"]["dtype"] = "float32"
+    payload["program"]["elem_bytes"] = 4
+    for op in payload["program"]["ops"]:
+        op["segment_bytes"] = 4 * payload["program"]["seg_width"]
+    payload.pop("certificate")  # sidestep the hash check on purpose
+    payload["certificate"] = None
+    bad = str(tmp_path / "retyped.json")
+    json.dump(payload, open(bad, "w"))
+    rep = lint_artifact(bad)
+    assert "VMCU404" in {d.code for d in rep.result.errors}
+
+
+def test_emitted_c_staleness_vmcu5xx(vww_int8, tmp_path):
+    cn, path = vww_int8
+    cdir = tmp_path / "c"
+    cn.emit_c(str(cdir), geometry_only=True)
+    assert lint_c_dir(cn.program, cdir, name=cn.net_name) == []
+    # full requant emission of the SAME plan also lints clean
+    cn.emit_c(str(cdir))
+    assert lint_c_dir(cn.program, cdir, name=cn.net_name) == []
+    assert lint_main([path, "--c-dir", str(cdir)]) == 0
+
+    units = sorted(cdir.glob("*.c"))
+    drifted = units[0].read_text().replace("POOL_SEGS 900",
+                                           "POOL_SEGS 896")
+    units[0].write_text(drifted)            # VMCU501: re-solved ring
+    units[1].unlink()                       # VMCU502: missing unit
+    (cdir / "stale_extra_op.c").write_text("// leftover\n")  # VMCU503
+    diags = lint_c_dir(cn.program, cdir, name=cn.net_name)
+    codes = [d.code for d in diags]
+    assert sorted(set(codes)) == ["VMCU501", "VMCU502", "VMCU503"]
+    assert lint_main([path, "--c-dir", str(cdir)]) == 1
