@@ -21,6 +21,86 @@ def traffic(h: int, c: int, k: int, *, im2col: bool) -> int:
     return read_in + im2col_rt + write_out + reread_out
 
 
+# ---------------------------------------------------------------------------
+# Closed-form per-net traffic — asserted against the measured trace.
+# ---------------------------------------------------------------------------
+
+def _halo_rows(h_in: int, h_out: int, k: int, stride: int, pad: int) -> int:
+    """Total in-image halo rows read by a k-row spatial conv: per output
+    row ``p`` the window ``[p*stride - pad, p*stride - pad + k)`` clipped
+    to the image."""
+    total = 0
+    for p in range(h_out):
+        lo = max(0, p * stride - pad)
+        hi = min(h_in, p * stride - pad + k)
+        total += max(0, hi - lo)
+    return total
+
+
+def net_traffic(program) -> dict:
+    """Independent closed-form segment traffic of one planned program.
+
+    Pure clamp-span arithmetic per op kind — it never enumerates the
+    ``core.rowsched`` schedules — yet it must equal BOTH the
+    schedule-derived static counters (``repro.obs.program_totals``) and
+    the tracer-measured SegmentPool counts bit-exactly (asserted per zoo
+    net by ``benchmarks/traffic.py``); Fig. 8's energy proxy is thereby
+    demoted from a trusted model to a cross-checked one.  The counting
+    convention is the safety certificate's: staging writes and output
+    survival reads included.
+    """
+    from repro.core.rowsched import conv_k2d_pad
+    from repro.core.vpool import segments_for
+
+    sw = program.seg_width
+    segs_read, segs_written = 0, 0
+    for op in program.ops:
+        ci = segments_for(op.d_in, sw)
+        co = segments_for(op.d_out, sw)
+        m = op.rows_in or program.m_rows
+        if op.kind == "gemm":
+            segs_read += m * co * ci       # row m re-read per out segment
+            segs_written += m * co
+        elif op.kind == "conv_pw":
+            segs_read += op.h_out * op.w_in * ci
+            segs_written += op.h_out * op.w_out * co
+        elif op.kind == "conv_dw":
+            segs_read += _halo_rows(op.h_in, op.h_out, op.rs, op.stride,
+                                    (op.rs - 1) // 2) * op.w_in * ci
+            segs_written += op.h_out * op.w_out * co
+        elif op.kind == "conv_k2d":
+            segs_read += _halo_rows(op.h_in, op.h_out, op.rs, op.stride,
+                                    conv_k2d_pad(op.rs, op.padding)) \
+                * op.w_in * ci
+            segs_written += op.h_out * op.w_out * co
+        elif op.kind == "ib_fused":
+            h, pad = op.h_in, (op.rs - 1) // 2
+            rows = min(pad + 1, h) + (h - 1)   # primed halo + 1/step
+            if op.residual and pad > 0:        # re-read of row p, except
+                rows += max(h - 2, 0)          # where it IS the halo row
+            segs_read += rows * op.w_in * ci
+            segs_written += h * op.w_out * co
+        elif op.kind == "add":
+            segs_read += 2 * op.rows_in * ci   # chained + held residual
+            segs_written += op.rows_in * ci
+        elif op.kind == "pool_avg":
+            segs_read += op.h_in * op.w_in * ci
+            segs_written += co
+        elif op.kind in ("fused_mlp", "elementwise"):
+            segs_read += m * ci
+            segs_written += m * ci
+        else:
+            raise NotImplementedError(
+                f"no closed-form traffic for op kind {op.kind!r}")
+    segs_read += program.ops[-1].out_segments     # output survival reads
+    segs_written += program.ops[0].in_segments    # input staging writes
+    seg_bytes = program.seg_width * program.elem_bytes
+    return {"segs_read": segs_read, "segs_written": segs_written,
+            "bytes_loaded": segs_read * seg_bytes,
+            "bytes_stored": segs_written * seg_bytes,
+            "bytes_moved": (segs_read + segs_written) * seg_bytes}
+
+
 def run() -> list[dict]:
     rows = []
     for h, c, k in FIG7_CASES:

@@ -34,7 +34,7 @@ import jax
 
 from . import (capacity, energy_proxy, full_network, int8_network, latency,
                model_zoo, multi_layer, pool_footprint, roofline_table,
-               single_layer)
+               single_layer, traffic)
 from .timing import bench_us
 
 BENCH_JSON = "BENCH_vmcu.json"
@@ -102,6 +102,13 @@ def _compile_pipeline_rows():
                 cn.save(f.name)
                 row["artifact_kb"] = os.path.getsize(f.name) / 1000
             row["n_c_units"] = len(cn.emit_c())
+            # the 15s hotspot, decomposed (obs.spans sub-spans)
+            q = next((s for s in cn.spans or []
+                      if s["name"] == "quantize"), None)
+            if q is not None:
+                row["quantize_spans"] = {
+                    c["name"]: round(c["seconds"], 4)
+                    for c in q["children"]}
         rows.append(row)
     return rows
 
@@ -116,6 +123,9 @@ def _compile_pipeline_show(rows):
               f"mcu_bottleneck={r['mcu_bottleneck_kb']:.1f}KB" + extra)
         print("  passes: " + ", ".join(f"{k}={v:.2f}s"
                                        for k, v in r["passes"].items()))
+        if "quantize_spans" in r:
+            print("  quantize: " + ", ".join(
+                f"{k}={v:.2f}s" for k, v in r["quantize_spans"].items()))
         print(f"  certify: sim={r['certify_sim_s'] * 1e3:.2f}ms "
               f"static={r['certify_static_s'] * 1e3:.2f}ms "
               f"({r['certify_speedup']:.0f}x)")
@@ -147,6 +157,7 @@ SECTIONS = [
     ("Net_full_network", full_network.run, full_network.main, True),
     ("Int8_full_network", int8_network.run, int8_network.main, True),
     ("Zoo_k2d", model_zoo.run, model_zoo.main, True),
+    ("Traffic", traffic.run, traffic.main, True),
     ("Compile_pipeline", _compile_pipeline_rows, _compile_pipeline_show,
      True),
     ("Fig11_12_capacity", capacity.run, capacity.main, True),
@@ -155,11 +166,17 @@ SECTIONS = [
 ]
 
 
-def bench_ops() -> list[dict]:
-    """Per-PoolOp trajectory records via the unified program API."""
+def bench_ops(smoke: bool = False) -> list[dict]:
+    """Per-PoolOp trajectory records via the unified program API.
+
+    Besides the whole-program ``wall_us_jnp`` best, each record carries
+    tracer-measured per-op wall times for the jnp executor (and for
+    pallas outside ``--smoke`` — interpret mode on CPU is too slow for
+    the fast lane)."""
     import jax.numpy as jnp
     from repro.core import (FusedMLPSpec, GemmSpec, VirtualPool, execute,
                             plan_program)
+    from repro.obs import RingTracer
 
     key = jax.random.PRNGKey(0)
     cases = [
@@ -190,7 +207,18 @@ def bench_ops() -> list[dict]:
         wall_us = bench_us(
             lambda: execute(program, VirtualPool(pool0.array.copy()),
                             params, backend="jnp").array, iters=10)
-        records.append({
+
+        def _op_walls(backend: str) -> list[float]:
+            tracer = RingTracer()
+            execute(program, VirtualPool(pool0.array.copy()), params,
+                    backend=backend, tracer=tracer)   # warm the jits
+            tracer = RingTracer()
+            execute(program, VirtualPool(pool0.array.copy()), params,
+                    backend=backend, tracer=tracer)
+            return [round(tracer.wall_s[i] * 1e6, 1)
+                    for i in range(len(program.ops))]
+
+        rec = {
             "name": name,
             "ops": [op.kind for op in program.ops],
             "m_rows": m,
@@ -200,7 +228,11 @@ def bench_ops() -> list[dict]:
             "saving_fraction": program.saving_fraction,
             "wall_us_jnp": wall_us,
             "wall_us_per_op": wall_us / len(program.ops),
-        })
+            "op_wall_us_jnp": _op_walls("jnp"),
+        }
+        if not smoke:  # pallas interprets on CPU — full lane only
+            rec["op_wall_us_pallas"] = _op_walls("pallas")
+        records.append(rec)
     return records
 
 
@@ -231,6 +263,9 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"compile/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"compile/{r['net']}/mcu_bottleneck_kb"] = \
             r["mcu_bottleneck_kb"]
+    for r in sections.get("Traffic", []):
+        out[f"traffic/{r['net']}/bytes_moved_kb"] = r["bytes_moved_kb"]
+        out[f"traffic/{r['net']}/watermark_kb"] = r["watermark_kb"]
     ml = sections.get("Fig9_10_multi_layer_ram", {})
     for net_key, rows in (ml.items() if isinstance(ml, dict) else []):
         for r in rows:
@@ -263,21 +298,27 @@ def main(argv=None) -> None:
         with open(BENCH_JSON) as f:
             old_payload = json.load(f)
 
+    # one span per section (perf_counter under the hood) — the old
+    # time.time() + round(.., 2) pipeline reported 0.0 for every
+    # sub-10ms section
+    from repro.obs.spans import SpanCollector, collect, span
+
+    collector = SpanCollector()
     section_times = {}
     section_rows = {}
-    for name, collect, show, in_smoke in SECTIONS:
+    for name, collect_rows, show, in_smoke in SECTIONS:
         if args.smoke and not in_smoke:
             continue
         print(f"\n=== {name} ===")
-        t0 = time.time()
-        rows = collect() if collect is not None else None
-        show(rows)
-        section_times[name] = round(time.time() - t0, 2)
+        with collect(collector), span(name):
+            rows = collect_rows() if collect_rows is not None else None
+            show(rows)
+        section_times[name] = round(collector.spans[-1].seconds, 6)
         if rows is not None:
             section_rows[name] = rows
-        print(f"# section time: {section_times[name]:.1f}s")
+        print(f"# section time: {section_times[name]:.3f}s")
 
-    ops = bench_ops()
+    ops = bench_ops(smoke=args.smoke)
     payload = {
         "schema": 2,
         "backend": jax.default_backend(),

@@ -44,6 +44,7 @@ from ..graph.netplan import NetPlan, _plan_net
 from ..graph.run import (QuantizedNet, _quantize_net, certify_net,
                          init_net_params, run_net, run_net_quantized)
 from ..graph.schedule import reorder
+from ..obs.spans import SpanCollector, collect, span
 from . import artifact
 from .targets import Target, get_target
 
@@ -173,6 +174,7 @@ class CompiledNet:
     plan: NetPlan | None = None
     graph: Graph | None = None
     init_key: object = None    # PRNG key for lazy parameter init
+    spans: list | None = None  # nested timed pipeline spans (obs.spans)
 
     # -- classification ----------------------------------------------------
     @property
@@ -214,20 +216,67 @@ class CompiledNet:
         return self.target.fits_sram(self.mcu_bottleneck_bytes)
 
     # -- execution ---------------------------------------------------------
-    def run(self, x, *, backend: str | None = None, **kwargs):
+    def run(self, x, *, backend: str | None = None, trace: bool = False,
+            **kwargs):
         """Run the compiled net on ``x`` (float in / float out; int8
-        targets quantize on entry and dequantize on exit)."""
+        targets quantize on entry and dequantize on exit).
+
+        ``trace=True`` threads a :class:`repro.obs.RingTracer` through
+        the executor (per-op synchronized wall times) and returns
+        ``(y, TraceArtifact)`` instead of ``y``.  ``trace=False`` is the
+        zero-cost path: no tracer reaches the executor and the ``jnp``
+        backend keeps its whole-program jit (bit-identical output).
+        """
         backend = backend or self.target.default_backend
+        tracer = None
+        if trace:
+            from ..obs import RingTracer
+
+            tracer = kwargs["tracer"] = RingTracer()
         if self.quantized:
-            return run_net_quantized(self.qnet, x, backend=backend,
-                                     **kwargs)
-        if self.program.quantized:
+            y = run_net_quantized(self.qnet, x, backend=backend,
+                                  **kwargs)
+        elif self.program.quantized:
             raise CompileError(
                 "this is a planner-only int8 compile (quantize=False): "
                 "the ring geometry exists but no calibrated qparams — "
                 "recompile with quantize=True to execute")
-        return run_net(self.program, x, self.ensure_params(),
-                       backend=backend, **kwargs)
+        else:
+            y = run_net(self.program, x, self.ensure_params(),
+                        backend=backend, **kwargs)
+        if tracer is None:
+            return y
+        from ..obs import build_trace
+
+        art = build_trace(self.program, tracer=tracer, backend=backend,
+                          net=self.net_name, target=self.target.name,
+                          spans=self.spans)
+        return y, art
+
+    def profile(self, x=None, *, backend: str | None = None):
+        """One traced run on a deterministic input; returns the
+        :class:`repro.obs.TraceArtifact` (geometry, per-op byte/MAC
+        counters + wall times, occupancy timeline, compile spans).
+
+        Planner-only int8 compiles (no qparams) profile through the sim
+        oracle instead — measured segment traffic, no numerics."""
+        if self.program.quantized and not self.quantized:
+            from ..core.executors import execute
+            from ..obs import RingTracer, build_trace
+
+            tracer = RingTracer()
+            execute(self.program, backend="sim", tracer=tracer)
+            return build_trace(self.program, tracer=tracer,
+                               net=self.net_name, target=self.target.name,
+                               spans=self.spans)
+        if x is None:
+            import jax
+
+            x = jax.random.normal(
+                jax.random.PRNGKey(0),
+                (self.program.in_rows, self.program.in_dim))
+        _y, art = self.run(x, backend=backend, trace=True)
+        return art
 
     # -- C emission --------------------------------------------------------
     def emit_c(self, outdir=None, *, name: str | None = None,
@@ -324,6 +373,7 @@ class CompiledNet:
             "mcu": self.mcu,
             "certificate": self.certificate,
             "passes": [[p.name, p.seconds, p.note] for p in self.passes],
+            "spans": self.spans,
         }
         artifact.dump(payload, path)
         return path
@@ -354,7 +404,8 @@ class CompiledNet:
                    qnet=qnet, mcu=payload["mcu"],
                    certificate=payload["certificate"],
                    passes=[PassRecord(n, s, note)
-                           for n, s, note in payload["passes"]])
+                           for n, s, note in payload["passes"]],
+                   spans=payload.get("spans"))
 
 
 def load(path: str) -> CompiledNet:
@@ -429,10 +480,12 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     block_rows = t.block_rows if block_rows is _UNSET else block_rows
 
     passes: list[PassRecord] = []
+    collector = SpanCollector()
 
     def run_pass(name, fn):
         t0 = time.perf_counter()
-        out, note = fn()
+        with collect(collector), span(name):
+            out, note = fn()
         passes.append(PassRecord(name, time.perf_counter() - t0, note))
         return out
 
@@ -486,7 +539,8 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
         def _quant():
             nonlocal params
             if params is None:
-                params = init_net_params(plan, key)
+                with span("init_params", ops=len(plan.program.ops)):
+                    params = init_net_params(plan, key)
             q = _quantize_net(plan, params, calib=calib, n_calib=n_calib)
             return q, (f"{len(q.qparams)} q-ops, requant tables for "
                        f"{sum(1 for op in q.program.ops if op.kind != 'add')}"
@@ -548,4 +602,4 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
                        program=program, params=params, qnet=qnet,
                        mcu=_mcu_summary(plan), certificate=certificate,
                        passes=passes, plan=plan, graph=graph,
-                       init_key=key)
+                       init_key=key, spans=collector.to_dicts())

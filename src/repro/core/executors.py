@@ -16,6 +16,7 @@
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable
 
 import jax
@@ -491,40 +492,86 @@ def pool_avg_ring_q(pool, mult, shift, *, op, n_segments):
     return stage_rows(pool, q, op.out_ptr, n_segments)
 
 
+def _apply_op_q(pool: jax.Array, op, p, *, n: int, br: int,
+                rows: int) -> jax.Array:
+    """Apply ONE int8 op — the loop body shared by the whole-program jit
+    and the per-op traced path (same jaxpr either way)."""
+    if op.kind == "gemm":
+        w, b, mult, shift = p
+        return gemm_ring_scan_q(pool, w, b, mult, shift,
+                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                m_rows=rows, n_segments=n,
+                                block_rows=br, d_in=op.d_in,
+                                d_out=op.d_out,
+                                activation=op.activation)
+    if op.kind == "conv_pw":
+        w, b, mult, shift = p
+        return conv_pw_ring_q(pool, w, b, mult, shift, op=op,
+                              n_segments=n)
+    if op.kind == "conv_dw":
+        w, b, mult, shift = p
+        return conv_dw_ring_q(pool, w, b, mult, shift, op=op,
+                              n_segments=n)
+    if op.kind == "conv_k2d":
+        w, b, mult, shift = p
+        return conv_k2d_ring_q(pool, w, b, mult, shift, op=op,
+                               n_segments=n)
+    if op.kind == "add":
+        mi, si, ma, sa = p
+        return add_ring_q(pool, mi, si, ma, sa, op=op, n_segments=n)
+    if op.kind == "pool_avg":
+        mult, shift = p
+        return pool_avg_ring_q(pool, mult, shift, op=op, n_segments=n)
+    raise NotImplementedError(f"no int8 jnp path for {op.kind}")
+
+
 def _run_jnp_q(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
     br = program.block_rows or 1
     n = program.n_segments
     for op, p in zip(program.ops, params):
         rows = op.rows_in or program.m_rows
-        if op.kind == "gemm":
-            w, b, mult, shift = p
-            pool = gemm_ring_scan_q(pool, w, b, mult, shift,
-                                    in_ptr=op.in_ptr, out_ptr=op.out_ptr,
-                                    m_rows=rows, n_segments=n,
-                                    block_rows=br, d_in=op.d_in,
-                                    d_out=op.d_out,
-                                    activation=op.activation)
-        elif op.kind == "conv_pw":
-            w, b, mult, shift = p
-            pool = conv_pw_ring_q(pool, w, b, mult, shift, op=op,
-                                  n_segments=n)
-        elif op.kind == "conv_dw":
-            w, b, mult, shift = p
-            pool = conv_dw_ring_q(pool, w, b, mult, shift, op=op,
-                                  n_segments=n)
-        elif op.kind == "conv_k2d":
-            w, b, mult, shift = p
-            pool = conv_k2d_ring_q(pool, w, b, mult, shift, op=op,
-                                   n_segments=n)
-        elif op.kind == "add":
-            mi, si, ma, sa = p
-            pool = add_ring_q(pool, mi, si, ma, sa, op=op, n_segments=n)
-        elif op.kind == "pool_avg":
-            mult, shift = p
-            pool = pool_avg_ring_q(pool, mult, shift, op=op, n_segments=n)
-        else:
-            raise NotImplementedError(f"no int8 jnp path for {op.kind}")
+        pool = _apply_op_q(pool, op, p, n=n, br=br, rows=rows)
     return pool
+
+
+def _apply_op(pool: jax.Array, op, p, *, n: int, br: int,
+              rows: int) -> jax.Array:
+    """Apply ONE fp32 op — see :func:`_apply_op_q`."""
+    if op.kind == "gemm":
+        w, b = p
+        return gemm_ring_scan(pool, w, b, in_ptr=op.in_ptr,
+                              out_ptr=op.out_ptr, m_rows=rows,
+                              n_segments=n, block_rows=br,
+                              activation=op.activation)
+    if op.kind == "fused_mlp":
+        wg, wu, wd = p
+        return mlp_ring_scan(pool, wg, wu, wd, ptr=op.in_ptr,
+                             m_rows=rows, n_segments=n,
+                             block_rows=br, d_model=op.d_in,
+                             ff_tile=op.ff_tile, gated=op.gated,
+                             residual=op.residual,
+                             activation=op.activation)
+    if op.kind == "elementwise":
+        return elementwise_ring_scan(pool, ptr=op.in_ptr, m_rows=rows,
+                                     n_segments=n, block_rows=br,
+                                     d=op.d_in, fn=op.activation)
+    if op.kind == "conv_pw":
+        w, b = p
+        return conv_pw_ring(pool, w, b, op=op, n_segments=n)
+    if op.kind == "conv_dw":
+        w, b = p
+        return conv_dw_ring(pool, w, b, op=op, n_segments=n)
+    if op.kind == "conv_k2d":
+        w, b = p
+        return conv_k2d_ring(pool, w, b, op=op, n_segments=n)
+    if op.kind == "ib_fused":
+        w1, wd, w2 = p
+        return ib_fused_ring(pool, w1, wd, w2, op=op, n_segments=n)
+    if op.kind == "add":
+        return add_ring(pool, op=op, n_segments=n)
+    if op.kind == "pool_avg":
+        return pool_avg_ring(pool, op=op, n_segments=n)
+    raise NotImplementedError(op.kind)
 
 
 @functools.partial(jax.jit, static_argnames=("program",),
@@ -536,50 +583,42 @@ def _run_jnp(pool: jax.Array, params, program: PoolProgram) -> jax.Array:
         return _run_jnp_q(pool, params, program)
     for op, p in zip(program.ops, params):
         rows = op.rows_in or program.m_rows
-        if op.kind == "gemm":
-            w, b = p
-            pool = gemm_ring_scan(pool, w, b, in_ptr=op.in_ptr,
-                                  out_ptr=op.out_ptr, m_rows=rows,
-                                  n_segments=n, block_rows=br,
-                                  activation=op.activation)
-        elif op.kind == "fused_mlp":
-            wg, wu, wd = p
-            pool = mlp_ring_scan(pool, wg, wu, wd, ptr=op.in_ptr,
-                                 m_rows=rows, n_segments=n,
-                                 block_rows=br, d_model=op.d_in,
-                                 ff_tile=op.ff_tile, gated=op.gated,
-                                 residual=op.residual,
-                                 activation=op.activation)
-        elif op.kind == "elementwise":
-            pool = elementwise_ring_scan(pool, ptr=op.in_ptr,
-                                         m_rows=rows,
-                                         n_segments=n, block_rows=br,
-                                         d=op.d_in, fn=op.activation)
-        elif op.kind == "conv_pw":
-            w, b = p
-            pool = conv_pw_ring(pool, w, b, op=op, n_segments=n)
-        elif op.kind == "conv_dw":
-            w, b = p
-            pool = conv_dw_ring(pool, w, b, op=op, n_segments=n)
-        elif op.kind == "conv_k2d":
-            w, b = p
-            pool = conv_k2d_ring(pool, w, b, op=op, n_segments=n)
-        elif op.kind == "ib_fused":
-            w1, wd, w2 = p
-            pool = ib_fused_ring(pool, w1, wd, w2, op=op, n_segments=n)
-        elif op.kind == "add":
-            pool = add_ring(pool, op=op, n_segments=n)
-        elif op.kind == "pool_avg":
-            pool = pool_avg_ring(pool, op=op, n_segments=n)
-        else:
-            raise NotImplementedError(op.kind)
+        pool = _apply_op(pool, op, p, n=n, br=br, rows=rows)
     return pool
 
 
+@functools.partial(jax.jit, static_argnames=("program", "i"),
+                   donate_argnums=(0,))
+def _run_jnp_op(pool: jax.Array, p, program: PoolProgram,
+                i: int) -> jax.Array:
+    """One op of ``program`` as its own jit unit (the traced path)."""
+    op = program.ops[i]
+    rows = op.rows_in or program.m_rows
+    br = program.block_rows or 1
+    n = program.n_segments
+    if program.quantized:
+        return _apply_op_q(pool, op, p, n=n, br=br, rows=rows)
+    return _apply_op(pool, op, p, n=n, br=br, rows=rows)
+
+
 @register_executor("jnp")
-def run_program_jnp(program: PoolProgram, pool, params, **_kw):
-    arr = _run_jnp(_as_array(pool), _normalize_params(program, params),
-                   program)
+def run_program_jnp(program: PoolProgram, pool, params, *, tracer=None,
+                    **_kw):
+    """``tracer=None`` runs the pre-existing whole-program jit
+    (bit-identical, zero tracing cost).  With a RingTracer, ops run as
+    separate jit units, each synchronized (``block_until_ready``) so the
+    recorded per-op wall times are device time, not dispatch time."""
+    params = _normalize_params(program, params)
+    arr = _as_array(pool)
+    if tracer is None:
+        arr = _run_jnp(arr, params, program)
+    else:
+        tracer.backend = "jnp"
+        for i, p in enumerate(params):
+            t0 = time.perf_counter()
+            arr = _run_jnp_op(arr, p, program, i)
+            jax.block_until_ready(arr)
+            tracer.record(i, time.perf_counter() - t0)
     return _like_input(pool, arr)
 
 
@@ -589,7 +628,8 @@ def run_program_jnp(program: PoolProgram, pool, params, **_kw):
 
 @register_executor("pallas")
 def run_program_pallas(program: PoolProgram, pool, params, *,
-                       interpret: bool | None = None, **_kw):
+                       interpret: bool | None = None, tracer=None,
+                       **_kw):
     # Lazy import: core must stay importable without the kernels package.
     from ..kernels.conv2d import (ring_add, ring_avgpool, ring_conv_dw,
                                   ring_conv_k2d, ring_conv_pw)
@@ -608,12 +648,16 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
         interpret = jax.default_backend() != "tpu"
     arr = _as_array(pool)
     br = program.block_rows
+    if tracer is not None:
+        tracer.backend = "pallas"
     if program.quantized:
         return _like_input(pool, _run_pallas_q(
             arr, _normalize_params(program, params), program, br,
-            interpret))
-    for op, p in zip(program.ops, _normalize_params(program, params)):
+            interpret, tracer=tracer))
+    for i, (op, p) in enumerate(zip(program.ops,
+                                    _normalize_params(program, params))):
         rows = op.rows_in or program.m_rows
+        t0 = time.perf_counter() if tracer is not None else 0.0
         if op.kind == "gemm":
             w, b = p
             arr = ring_gemm(arr, w, b, m_rows=rows, d_in=op.d_in,
@@ -675,17 +719,22 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                                interpret=interpret)
         else:
             raise NotImplementedError(op.kind)
+        if tracer is not None:
+            jax.block_until_ready(arr)
+            tracer.record(i, time.perf_counter() - t0)
     return _like_input(pool, arr)
 
 
-def _run_pallas_q(arr, params, program: PoolProgram, br, interpret):
+def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
+                  tracer=None):
     """Int8 program on the Pallas ring kernels (``kernels.quantized``)."""
     from ..kernels.quantized import (ring_add_q, ring_avgpool_q,
                                      ring_conv_dw_q, ring_conv_k2d_q,
                                      ring_conv_pw_q, ring_gemm_q)
 
-    for op, p in zip(program.ops, params):
+    for i, (op, p) in enumerate(zip(program.ops, params)):
         rows = op.rows_in or program.m_rows
+        t0 = time.perf_counter() if tracer is not None else 0.0
         if op.kind == "gemm":
             w, b, mult, shift = p
             arr = ring_gemm_q(arr, w, b, mult, shift, m_rows=rows,
@@ -738,6 +787,9 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret):
         else:
             raise NotImplementedError(
                 f"no int8 pallas kernel for {op.kind}")
+        if tracer is not None:
+            jax.block_until_ready(arr)
+            tracer.record(i, time.perf_counter() - t0)
     return arr
 
 
@@ -780,8 +832,8 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
 
 
 @register_executor("sim")
-def run_program_sim(program: PoolProgram, pool=None, params=None,
-                    **_kw) -> SegmentPool:
+def run_program_sim(program: PoolProgram, pool=None, params=None, *,
+                    tracer=None, **_kw) -> SegmentPool:
     """Execute the program's schedule in the SegmentPool simulator.
 
     GEMM ops run the paper's fine-grained Fig.-4 schedule (input segment
@@ -790,15 +842,25 @@ def run_program_sim(program: PoolProgram, pool=None, params=None,
     Conv-family ops replay the row schedule their delta was solved with
     (``core.rowsched``); residual sources are freed by the consuming add.
     Returns the SegmentPool for access statistics (peak_live etc.).
+
+    A ``tracer`` (:class:`repro.obs.RingTracer`) snapshots the pool's
+    read/write/free counters around every op — measured per-op traffic
+    from the oracle itself, asserted bit-equal to the schedule-derived
+    static counters.
     """
     sw = program.seg_width
     sim = SegmentPool(program.n_segments,
                       segment_bytes=sw * program.elem_bytes)
+    if tracer is not None:
+        tracer.backend = "sim"
     first = program.ops[0]
     for j in range(first.in_segments):
         sim.write(first.in_ptr + j, owner=(0, j))
     for i, op in enumerate(program.ops):
         m = op.rows_in or program.m_rows
+        if tracer is not None:
+            pre = (sim.reads, sim.writes, sim.frees)
+            t0 = time.perf_counter()
         if op.kind == "gemm":
             k_segs = segments_for(op.d_in, sw)
             n_segs = segments_for(op.d_out, sw)
@@ -825,7 +887,14 @@ def run_program_sim(program: PoolProgram, pool=None, params=None,
                     sim.write(op.out_ptr + seg, owner=(i + 1, seg))
         else:
             _sim_rowsched_op(sim, program, i)
+        if tracer is not None:
+            tracer.record(i, time.perf_counter() - t0)
+            tracer.record_sim(i, reads=sim.reads - pre[0],
+                              writes=sim.writes - pre[1],
+                              frees=sim.frees - pre[2], live=sim.live)
     last = program.ops[-1]
     for j in range(last.out_segments):  # outputs must survive the ring
         sim.read(last.out_ptr + j, owner=(len(program.ops), j))
+    if tracer is not None:
+        tracer.finish_sim(sim)
     return sim

@@ -267,6 +267,7 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
     ``(multiplier, shift)`` requant constants relating
     ``s_in * s_w[c] / s_out``.
     """
+    from ..obs.spans import span
     from ..quant import (calibrate, quantize, quantize_bias, requant_pair,
                          requant_scalar)
 
@@ -281,39 +282,42 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
     # 1. activation scales from the captured reference intermediates
     n_ops = len(program.ops)
     amax = [0.0] * (n_ops + 1)
-    for x in calib:
-        taps: list = []
-        reference_forward(program, x, params, intermediates=taps)
-        for i, t in enumerate(taps):
-            amax[i] = max(amax[i], float(jnp.abs(t).max()))
-    act_qps = [calibrate(jnp.array([a])) for a in amax]
-    act_scales = tuple(float(qp.scale) for qp in act_qps)
+    with span("calibrate", batches=len(calib), taps=n_ops + 1):
+        for x in calib:
+            taps: list = []
+            reference_forward(program, x, params, intermediates=taps)
+            for i, t in enumerate(taps):
+                amax[i] = max(amax[i], float(jnp.abs(t).max()))
+    with span("act_scales"):
+        act_qps = [calibrate(jnp.array([a])) for a in amax]
+        act_scales = tuple(float(qp.scale) for qp in act_qps)
 
     # 2. per-op weight quantization + requant constants
     qparams: list = []
-    for i, (op, p) in enumerate(zip(program.ops, params)):
-        # branch convs read the held input of op ``in_op`` — their input
-        # scale is that tensor's, not the chained tensor's
-        s_in = act_scales[op.in_op if op.in_op >= 0 else i]
-        s_out = act_scales[i + 1]
-        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
-            w, b = p if p[1] is not None else (p[0], None)
-            axis = {"conv_dw": 2, "conv_k2d": 3}.get(op.kind, 1)
-            w_qp = calibrate(w, axis=axis)
-            w_q = quantize(w, w_qp)
-            b_q = (quantize_bias(b, s_in, w_qp) if b is not None
-                   else jnp.zeros((op.d_out,), jnp.int32))
-            mult, shift = requant_pair(s_in, w_qp, s_out)
-            qparams.append((w_q, b_q, mult, shift))
-        elif op.kind == "add":
-            s_aux = act_scales[op.aux_op]   # the held source is op
-            #                                 aux_op's INPUT tensor
-            m_i, s_i = requant_scalar(s_in / s_out)
-            m_a, s_a = requant_scalar(s_aux / s_out)
-            qparams.append((m_i, s_i, m_a, s_a))
-        elif op.kind == "pool_avg":
-            m, s = requant_scalar(s_in / (op.h_in * op.w_in * s_out))
-            qparams.append((m, s))
+    with span("quantize_ops", ops=n_ops):
+        for i, (op, p) in enumerate(zip(program.ops, params)):
+            # branch convs read the held input of op ``in_op`` — their
+            # input scale is that tensor's, not the chained tensor's
+            s_in = act_scales[op.in_op if op.in_op >= 0 else i]
+            s_out = act_scales[i + 1]
+            if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
+                w, b = p if p[1] is not None else (p[0], None)
+                axis = {"conv_dw": 2, "conv_k2d": 3}.get(op.kind, 1)
+                w_qp = calibrate(w, axis=axis)
+                w_q = quantize(w, w_qp)
+                b_q = (quantize_bias(b, s_in, w_qp) if b is not None
+                       else jnp.zeros((op.d_out,), jnp.int32))
+                mult, shift = requant_pair(s_in, w_qp, s_out)
+                qparams.append((w_q, b_q, mult, shift))
+            elif op.kind == "add":
+                s_aux = act_scales[op.aux_op]   # the held source is op
+                #                                 aux_op's INPUT tensor
+                m_i, s_i = requant_scalar(s_in / s_out)
+                m_a, s_a = requant_scalar(s_aux / s_out)
+                qparams.append((m_i, s_i, m_a, s_a))
+            elif op.kind == "pool_avg":
+                m, s = requant_scalar(s_in / (op.h_in * op.w_in * s_out))
+                qparams.append((m, s))
     return QuantizedNet(plan=plan, program=program.with_dtype("int8"),
                         params=list(params), qparams=qparams,
                         act_scales=act_scales)

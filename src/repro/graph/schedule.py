@@ -138,6 +138,9 @@ def reorder(graph: Graph, *, max_states: int = 100_000
             dfs(scheduled | {i}, order + [i], step_peak)
 
     dfs(frozenset(), [], 0)
+    from ..obs.spans import set_attr
+    set_attr(states_expanded=states, n_nodes=n,
+             exhausted=states > max_states)
     return best_order, peak_live_bytes(graph, best_order)
 
 

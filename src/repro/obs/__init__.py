@@ -1,0 +1,33 @@
+"""Observability: ring telemetry, occupancy timelines, pipeline spans.
+
+Three layers (DESIGN.md §12):
+
+  * :mod:`~repro.obs.counters` / :mod:`~repro.obs.timeline` — static
+    per-op byte/MAC counters and the pool-occupancy timeline, derived
+    from the same row schedules the planner and verifier share (trace
+    totals equal the safety certificate's reads/writes bit-exactly),
+  * :mod:`~repro.obs.tracer` — :class:`RingTracer` measurement hooks in
+    all three executors (``execute(..., tracer=...)``), zero-cost when
+    absent,
+  * :mod:`~repro.obs.spans` — nested timed spans for the compile
+    pipeline (and any other instrumented extent), no-ops without an
+    installed collector.
+
+``vmcu-trace`` (:mod:`~repro.obs.cli`) renders/exports the resulting
+schema-versioned :class:`TraceArtifact`.
+"""
+from .artifact import TRACE_SCHEMA, TraceArtifact, diff_traces
+from .counters import (OpCounters, op_counters, op_macs, op_requants,
+                       program_totals)
+from .spans import Span, SpanCollector, collect, set_attr, span
+from .timeline import PoolTimeline, pool_timeline
+from .tracer import RingTracer, build_trace
+
+__all__ = [
+    "TRACE_SCHEMA", "TraceArtifact", "diff_traces",
+    "OpCounters", "op_counters", "op_macs", "op_requants",
+    "program_totals",
+    "Span", "SpanCollector", "collect", "set_attr", "span",
+    "PoolTimeline", "pool_timeline",
+    "RingTracer", "build_trace",
+]

@@ -1,0 +1,105 @@
+"""Nested timed spans — the compile-pipeline side of the telemetry layer.
+
+A :class:`SpanCollector` is installed for a dynamic extent (a ``compile``
+call, a benchmark section); inside it, ``with span(name, **attrs):``
+records a nested timed span and ``set_attr(**attrs)`` annotates the
+innermost open one (B&B states expanded, calibration batches, cache
+hits).  With NO collector installed, :func:`span` is a no-op context
+manager and :func:`set_attr` returns immediately — instrumented code
+pays one contextvar lookup, nothing else, so spans are safe to leave in
+hot paths like the scheduler's search loop.
+
+The collector is a :mod:`contextvars` variable, so concurrent compiles
+(threads, async) each see their own span tree.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import time
+from typing import Any, Iterator
+
+_ACTIVE: contextvars.ContextVar["SpanCollector | None"] = \
+    contextvars.ContextVar("vmcu_span_collector", default=None)
+
+
+@dataclasses.dataclass
+class Span:
+    """One timed region: wall seconds, free-form attributes, children."""
+
+    name: str
+    seconds: float = 0.0
+    start_s: float = 0.0       # offset from the collector's epoch
+    attrs: dict = dataclasses.field(default_factory=dict)
+    children: list = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "seconds": self.seconds,
+                "start_s": self.start_s, "attrs": dict(self.attrs),
+                "children": [c.to_dict() for c in self.children]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Span":
+        return cls(name=d["name"], seconds=d["seconds"],
+                   start_s=d.get("start_s", 0.0),
+                   attrs=dict(d.get("attrs", {})),
+                   children=[cls.from_dict(c)
+                             for c in d.get("children", [])])
+
+
+class SpanCollector:
+    """Accumulates a forest of spans for one instrumented extent."""
+
+    def __init__(self) -> None:
+        self.spans: list[Span] = []
+        self._stack: list[Span] = []
+        self._epoch = time.perf_counter()
+
+    def to_dicts(self) -> list[dict]:
+        return [s.to_dict() for s in self.spans]
+
+
+@contextlib.contextmanager
+def collect(collector: SpanCollector | None = None
+            ) -> Iterator[SpanCollector]:
+    """Install a collector for the enclosed extent (a fresh one when not
+    given; pass your own to accumulate several extents into one tree)."""
+    col = collector if collector is not None else SpanCollector()
+    token = _ACTIVE.set(col)
+    try:
+        yield col
+    finally:
+        _ACTIVE.reset(token)
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs: Any) -> Iterator[Span | None]:
+    """Record a timed span when a collector is active; no-op otherwise."""
+    col = _ACTIVE.get()
+    if col is None:
+        yield None
+        return
+    s = Span(name=name, attrs=dict(attrs))
+    s.start_s = time.perf_counter() - col._epoch
+    parent = col._stack[-1] if col._stack else None
+    (parent.children if parent is not None else col.spans).append(s)
+    col._stack.append(s)
+    t0 = time.perf_counter()
+    try:
+        yield s
+    finally:
+        s.seconds = time.perf_counter() - t0
+        col._stack.pop()
+
+
+def set_attr(**attrs: Any) -> None:
+    """Annotate the innermost open span (no-op without a collector)."""
+    col = _ACTIVE.get()
+    if col is not None and col._stack:
+        col._stack[-1].attrs.update(attrs)
+
+
+def active() -> bool:
+    """True iff a collector is installed (for cheap guard checks)."""
+    return _ACTIVE.get() is not None

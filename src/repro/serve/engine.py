@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models.transformer import Model
+from ..obs.spans import active, span
 from ..parallel.sharding import AxisRules, no_sharding
 
 
@@ -62,12 +63,17 @@ class ServingEngine:
         L = max(len(p) for p in prompts)
         toks = jnp.asarray([[0] * (L - len(p)) + p for p in prompts],
                            jnp.int32)  # left-pad
-        logits, caches, cur = self.prefill(self.params, toks, memory)
+        with span("serve.prefill", batch=B, prompt_len=L):
+            logits, caches, cur = self.prefill(self.params, toks, memory)
+            if active():  # sync only when actually timing
+                jax.block_until_ready(logits)
         out = [[] for _ in range(B)]
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        for _ in range(max_new):
-            for i in range(B):
-                out[i].append(int(tok[i]))
-            logits, caches, cur = self.decode(self.params, caches, tok, cur)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        with span("serve.decode", batch=B, steps=max_new):
+            for _ in range(max_new):
+                for i in range(B):
+                    out[i].append(int(tok[i]))
+                logits, caches, cur = self.decode(self.params, caches,
+                                                  tok, cur)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return out

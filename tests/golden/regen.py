@@ -5,7 +5,7 @@ the planner's solved offsets:
 
     PYTHONPATH=src python tests/golden/regen.py
 
-Two golden sets:
+Three golden sets:
 
   * ``*.c``       — the mini/fused/qmini unit-test programs
                     (tests/test_codegen.py),
@@ -14,7 +14,12 @@ Two golden sets:
                     idiom banner, no requant tables — fully determined
                     by the planner's solved integer offsets).  This is
                     what ``vmcu-compile --smoke`` diffs in CI.
+  * ``mini.trace.json`` — the canonical (wall-time-stripped) telemetry
+                    trace of the 3-op mini net (tests/test_trace.py):
+                    per-op byte/MAC counters, measured sim access
+                    counts and the occupancy timeline.
 """
+import json
 import pathlib
 import sys
 
@@ -22,6 +27,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
 
 from test_codegen import (_fused_program, _mini_net_program,  # noqa: E402
                           _quantized_program_and_qparams)
+from test_trace import golden_trace_payload  # noqa: E402
 
 from repro.core.codegen import emit_program  # noqa: E402
 
@@ -70,6 +76,10 @@ def main() -> None:
     # ResNet-8 (conv_k2d ops incl. the shortcut-projection branch):
     # pinned by tests/test_codegen.py and the CI freshness gate
     _write(out / "resnet8", _net_geometry_units("resnet-8", "resnet8"))
+    trace = out / "mini.trace.json"
+    trace.write_text(json.dumps(golden_trace_payload(), indent=1,
+                                sort_keys=True) + "\n")
+    print("wrote", trace)
 
 
 if __name__ == "__main__":

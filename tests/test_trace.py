@@ -1,0 +1,320 @@
+"""Ring telemetry tests (repro.obs): tracer, counters, timeline, spans.
+
+The load-bearing invariants:
+
+  * traced byte counts equal the static verifier certificate's
+    reads/writes BIT-EXACTLY on every zoo net, fp32 and int8 — three
+    independent derivations (closed form, schedule counters, measured
+    SegmentPool counts) of one number,
+  * the occupancy-timeline watermark equals the plan's ``pool_bytes``
+    (the ring is tight), checked differentially per net,
+  * ``trace=True`` changes nothing about the computed outputs, and
+    ``trace=False`` never constructs a tracer (zero-cost path),
+  * the trace artifact round-trips, diffs, exports to Chrome JSON, and
+    its canonical form is pinned by a golden file.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.compile.driver import compile as vcompile
+from repro.core import (ConvDWSpec, ConvPWSpec, GemmSpec, execute,
+                        plan_program)
+from repro.graph.run import init_net_params, run_net
+from repro.obs import (TRACE_SCHEMA, RingTracer, TraceArtifact, build_trace,
+                       collect, diff_traces, op_counters, pool_timeline,
+                       program_totals, set_attr, span)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "mini.trace.json"
+
+_ZOO = [("ds-cnn", "cortex-m4"), ("resnet-8", "cortex-m4"),
+        ("mcunet-5fps-vww", "cortex-m4"),
+        ("mobilenetv1-0.25", "cortex-m4"),
+        ("mcunet-320kb-imagenet", "cortex-m7")]
+
+
+def _trace_program():
+    """The golden 3-op net: pw conv -> dw conv -> gemm head, one ring."""
+    H, C = 4, 8
+    return plan_program(H * H, C,
+                        [ConvPWSpec(H, H, C, 16, activation="relu"),
+                         ConvDWSpec(H, H, 16, rs=3, activation="relu"),
+                         GemmSpec(4)],
+                        block_rows=1)
+
+
+def _sim_trace(program, **kw):
+    tracer = RingTracer()
+    execute(program, backend="sim", tracer=tracer)
+    return build_trace(program, tracer=tracer, **kw)
+
+
+def golden_trace_payload() -> dict:
+    """What tests/golden/mini.trace.json pins (regen.py writes this)."""
+    return _sim_trace(_trace_program(), net="mini").canonical()
+
+
+# ---------------------------------------------------------------------------
+# Golden + determinism.
+# ---------------------------------------------------------------------------
+
+def test_golden_trace_fresh():
+    assert GOLDEN.exists(), "run: PYTHONPATH=src python tests/golden/regen.py"
+    assert json.loads(GOLDEN.read_text()) == golden_trace_payload(), \
+        "mini trace drifted — regen tests/golden if intentional"
+
+
+def test_trace_deterministic_across_runs():
+    prog = _trace_program()
+    a = _sim_trace(prog, net="mini")
+    b = _sim_trace(prog, net="mini")
+    assert a.canonical() == b.canonical()
+    # measured sim counts are part of the canonical form
+    assert any("sim" in e for e in a.canonical()["events"])
+
+    params = init_net_params(prog)
+    x = jax.random.normal(jax.random.PRNGKey(3), (prog.m_rows, prog.in_dim))
+    tr1, tr2 = RingTracer(), RingTracer()
+    y1 = run_net(prog, x, params, backend="jnp", tracer=tr1)
+    y2 = run_net(prog, x, params, backend="jnp", tracer=tr2)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    assert build_trace(prog, tracer=tr1).canonical() == \
+        build_trace(prog, tracer=tr2).canonical()
+
+
+def test_traced_run_matches_untraced():
+    prog = _trace_program()
+    params = init_net_params(prog)
+    x = jax.random.normal(jax.random.PRNGKey(5), (prog.m_rows, prog.in_dim))
+    y_plain = np.asarray(run_net(prog, x, params, backend="jnp"))
+    tracer = RingTracer()
+    y_traced = np.asarray(run_net(prog, x, params, backend="jnp",
+                                  tracer=tracer))
+    # float path: per-op jit vs whole-program jit may fuse differently
+    np.testing.assert_allclose(y_traced, y_plain, rtol=1e-5, atol=1e-5)
+    assert len(tracer.wall_s) == len(prog.ops)
+    assert all(v >= 0.0 for v in tracer.wall_s.values())
+
+
+def test_traced_run_bit_identical_int8():
+    cn = vcompile("ds-cnn", "cortex-m4", dtype="int8", quantize=True,
+                  certify=False, n_calib=1)
+    x = jax.random.normal(jax.random.PRNGKey(7),
+                          (cn.program.in_rows, cn.program.in_dim))
+    y_plain = np.asarray(cn.run(x))
+    y_traced, art = cn.run(x, trace=True)
+    # integer ring math: tracing must not move a single bit
+    assert np.array_equal(np.asarray(y_traced), y_plain)
+    assert isinstance(art, TraceArtifact)
+    assert art.backend == "jnp" and art.net == "ds-cnn"
+    assert art.totals["requants"] > 0
+
+
+# ---------------------------------------------------------------------------
+# The bit-exact traffic invariant, per zoo net, fp32 + int8.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+@pytest.mark.parametrize("net,target", _ZOO)
+def test_traffic_equals_certificate(net, target, dtype):
+    from repro.analysis import verify_program
+
+    cn = vcompile(net, target, dtype=dtype, quantize=False, certify=False)
+    prog = cn.program
+    cert = verify_program(prog).certificate()
+    tot = program_totals(prog)
+    assert tot["segs_read"] == cert["reads"]
+    assert tot["segs_written"] == cert["writes"]
+
+    tracer = RingTracer()
+    sim = execute(prog, backend="sim", tracer=tracer)
+    assert sim.reads == cert["reads"] and sim.writes == cert["writes"]
+    for c in op_counters(prog):   # per-op: measured == schedule-derived
+        got = tracer.sim_counts[c.index]
+        assert got["reads"] == c.segs_read, (net, dtype, c.index)
+        assert got["writes"] == c.segs_written, (net, dtype, c.index)
+
+    art = build_trace(prog, tracer=tracer, net=net)
+    seg_bytes = prog.seg_width * prog.elem_bytes
+    assert art.totals["bytes_loaded"] == cert["reads"] * seg_bytes
+    assert art.totals["bytes_stored"] == cert["writes"] * seg_bytes
+
+
+@pytest.mark.parametrize("net,target", _ZOO)
+def test_watermark_equals_pool_bytes(net, target):
+    """Differential: the timeline watermark must equal pool_bytes — a
+    looser timeline (or looser plan) breaks one side of the equality."""
+    cn = vcompile(net, target, quantize=False, certify=False)
+    tl = pool_timeline(cn.program)
+    assert tl.watermark_bytes == cn.program.pool_bytes
+    assert tl.watermark_segments == cn.program.pool_segments
+    assert max(tl.live_curve()) <= tl.watermark_segments
+    # every tensor gets exactly one residency interval
+    assert len(tl.residencies) == len(cn.program.ops) + 1
+    assert all(r.died > r.born for r in tl.residencies)
+
+
+def test_closed_form_traffic_cross_check():
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
+    from benchmarks.energy_proxy import net_traffic
+
+    for net, target in _ZOO[:2]:
+        cn = vcompile(net, target, quantize=False, certify=False)
+        tot = program_totals(cn.program)
+        cf = net_traffic(cn.program)
+        assert cf["segs_read"] == tot["segs_read"], net
+        assert cf["segs_written"] == tot["segs_written"], net
+
+
+# ---------------------------------------------------------------------------
+# Artifact surfaces: round-trip, schema, Chrome export, ASCII, diff.
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_and_schema(tmp_path):
+    art = _sim_trace(_trace_program(), net="mini")
+    p = tmp_path / "mini.trace.json"
+    art.save(str(p))
+    back = TraceArtifact.load(str(p))
+    assert back.to_dict() == art.to_dict()
+
+    payload = json.loads(p.read_text())
+    payload["schema"] = "vmcu-trace/999"
+    p.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="schema"):
+        TraceArtifact.load(str(p))
+
+
+def test_chrome_trace_structure():
+    art = _sim_trace(_trace_program(), net="mini")
+    chrome = json.loads(json.dumps(art.to_chrome_trace()))
+    evs = chrome["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    # stage + 3 ops + fetch as complete events, monotone timebase
+    assert len(xs) == len(art.events)
+    assert all(e["dur"] > 0 and e["ts"] >= 0 for e in xs)
+    assert [e["ts"] for e in xs] == sorted(e["ts"] for e in xs)
+    assert any(e["ph"] == "C" and e["name"] == "pool_live_segments"
+               for e in evs)
+    assert any(e["ph"] == "M" for e in evs)
+
+
+def test_ascii_timeline_watermark_line():
+    art = _sim_trace(_trace_program(), net="mini")
+    text = art.ascii_timeline(width=40)
+    assert text.splitlines()[-1].startswith("watermark:")
+    assert str(art.geometry["pool_bytes"]) in text.splitlines()[-1]
+    # one row per op between the header and the watermark line
+    assert len(text.splitlines()) == len(art.timeline["ops"]) + 2
+
+
+def test_diff_traces():
+    prog = _trace_program()
+    a = _sim_trace(prog, net="mini")
+    b = _sim_trace(prog, net="mini")
+    d = diff_traces(a, b)
+    assert d["structural"] == []
+    b.events[1]["bytes_loaded"] += 1   # a mutated counter must surface
+    d = diff_traces(a, b)
+    assert any("bytes_loaded" in line for line in d["structural"])
+
+
+# ---------------------------------------------------------------------------
+# Compile-pipeline spans.
+# ---------------------------------------------------------------------------
+
+def test_compile_records_pass_spans():
+    cn = vcompile("ds-cnn", "cortex-m4", quantize=False, certify="static")
+    names = [s["name"] for s in cn.spans]
+    assert names == ["build", "schedule", "plan", "budget", "lint",
+                     "certify"]
+    sched = cn.spans[names.index("schedule")]
+    assert sched["attrs"]["states_expanded"] >= 1
+    assert all(s["seconds"] >= 0.0 for s in cn.spans)
+
+
+def test_quantize_decomposed_into_subspans():
+    cn = vcompile("ds-cnn", "cortex-m4", dtype="int8", quantize=True,
+                  certify=False, n_calib=1)
+    q = next(s for s in cn.spans if s["name"] == "quantize")
+    child_names = [c["name"] for c in q["children"]]
+    assert {"calibrate", "act_scales", "quantize_ops"} <= set(child_names)
+    cal = next(c for c in q["children"] if c["name"] == "calibrate")
+    assert cal["attrs"]["batches"] == 1
+    # sub-spans nest inside (and so sum to less than) the quantize pass
+    assert sum(c["seconds"] for c in q["children"]) <= q["seconds"]
+
+
+def test_spans_survive_save_load(tmp_path):
+    cn = vcompile("ds-cnn", "cortex-m4", dtype="int8", quantize=True,
+                  certify="static", n_calib=1)
+    p = tmp_path / "ds.plan.json"
+    cn.save(str(p))
+    back = repro.load(str(p))
+    assert back.spans == cn.spans
+    # a loaded artifact still profiles (sim path: no plan/graph needed)
+    art = _sim_trace(back.program, net=back.net_name, spans=back.spans)
+    assert [s["name"] for s in art.spans][:2] == ["build", "schedule"]
+
+
+def test_span_noop_without_collector():
+    with span("nothing", k=1) as s:
+        assert s is None
+    set_attr(ignored=True)   # must not raise
+
+    with collect() as col:
+        with span("outer", a=1):
+            with span("inner"):
+                set_attr(b=2)
+    assert len(col.spans) == 1
+    out = col.spans[0]
+    assert out.name == "outer" and out.attrs == {"a": 1}
+    assert out.children[0].name == "inner"
+    assert out.children[0].attrs == {"b": 2}
+    assert out.seconds >= out.children[0].seconds >= 0.0
+
+
+def test_profile_returns_trace():
+    cn = vcompile("ds-cnn", "cortex-m4", dtype="float32",
+                  quantize=False, certify=False)
+    art = cn.profile(backend="jnp")
+    assert isinstance(art, TraceArtifact)
+    assert art.backend == "jnp"
+    assert "wall_us" in art.totals and art.totals["wall_us"] > 0
+    assert art.watermark_bytes == cn.program.pool_bytes
+    # planner-only int8 compiles profile through the sim oracle
+    cn8 = vcompile("ds-cnn", "cortex-m4", dtype="int8", quantize=False,
+                   certify=False)
+    art8 = cn8.profile()
+    assert art8.backend == "sim" and art8.totals["sim"]["reads"] > 0
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+def test_cli_render_save_diff(tmp_path, capsys, monkeypatch):
+    from repro.obs.cli import main
+
+    monkeypatch.chdir(tmp_path)
+    t1, t2 = str(tmp_path / "a.trace.json"), str(tmp_path / "b.trace.json")
+    assert main(["ds-cnn", "--save", t1]) == 0
+    out = capsys.readouterr().out
+    assert "watermark:" in out and "compile pipeline:" in out
+    assert main([t1, "--chrome", str(tmp_path / "c.json")]) == 0
+    chrome = json.loads((tmp_path / "c.json").read_text())
+    assert any(e.get("ph") == "X" for e in chrome["traceEvents"])
+
+    assert main(["ds-cnn", "--save", t2]) == 0
+    capsys.readouterr()
+    assert main(["--diff", t1, t2]) == 0   # same plan, same trace
+
+    payload = json.loads(pathlib.Path(t2).read_text())
+    payload["events"][1]["segs_read"] += 1
+    pathlib.Path(t2).write_text(json.dumps(payload))
+    assert main(["--diff", t1, t2]) == 1   # structural drift gates
+    assert main([]) == 2                   # usage error
