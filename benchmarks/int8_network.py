@@ -30,19 +30,25 @@ from __future__ import annotations
 
 import repro
 
-NETS = ("mcunet-5fps-vww", "mcunet-320kb-imagenet")
+NETS = ("mcunet-5fps-vww", "mcunet-320kb-imagenet", "ds-cnn",
+        "resnet-8", "mobilenetv1-0.25")
 TARGET = repro.get_target("cortex-m4")
 
 
 def run() -> list[dict]:
     rows = []
     for name in NETS:
+        # check_budget=False: this section REPORTS footprints (ImageNet's
+        # unsliced byte ring legitimately overflows cortex-m4 — the
+        # Partial_execution section shows the slicing that resolves it)
         cn = repro.compile(name, target=TARGET, dtype="int8",
-                           quantize=False, certify=False)
+                           quantize=False, certify=False,
+                           check_budget=False)
         int8 = cn.program
         fp32 = int8.with_dtype("float32")
         byte_ring = repro.compile(name, target=TARGET, dtype="int8",
                                   quantize=False, certify=False,
+                                  check_budget=False,
                                   **TARGET.byte_ring_kwargs)
         mcu = cn.mcu_bottleneck_bytes
         rows.append({
@@ -56,7 +62,10 @@ def run() -> list[dict]:
                 1.0 - int8.pool_bytes / fp32.pool_bytes,
             "byte_ring_over_mcu":
                 byte_ring.pool_bytes / mcu,
-            "fits_256kb_int8": int8.pool_bytes <= 256_000,
+            # the executed host-side ring is NOT what lands on the MCU;
+            # the deployable verdict judges the byte-granular ring
+            "fits_256kb_executed": int8.pool_bytes <= 256_000,
+            "fits_256kb_deployable": byte_ring.pool_bytes <= 256_000,
         })
     return rows
 

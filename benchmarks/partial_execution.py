@@ -1,0 +1,75 @@
+"""Partial-execution benchmark — the SRAMBudgetError -> latency trade.
+
+MCUNet-320KB-ImageNet's unsliced deployable byte ring (196.4 KB) does
+not fit a 128 KB cortex-m4: before this subsystem that was a hard
+:class:`repro.SRAMBudgetError`.  ``partial="auto"`` slices the
+over-budget fusion groups spatially (recomputing halo rows) until the
+ring fits, and this section records what that trade costs:
+
+  * ``byte_ring_kb`` / ``byte_ring_sliced_kb`` — deployable ring before
+    and after slicing (the budget being missed / met),
+  * ``n_sliced_groups`` / ``total_slices``     — the chosen schedule,
+  * ``mac_overhead``                           — recomputed MACs as a
+    fraction of the whole net (the latency price),
+  * ``byte_ring_over_mcu``                     — post-slice ring over
+    the per-group Eq.-(2) bottleneck (1.0 = the merged multi-group ring
+    costs nothing over the paper's per-group bound).
+
+Planner-only (``quantize=False``) and fully deterministic, so the
+section runs in ``--smoke`` and regressions fail CI.
+"""
+from __future__ import annotations
+
+import repro
+
+#: (net, target) — ImageNet on cortex-m4 is the genuine overflow; VWW
+#: rides along as the fits-without-slicing control.
+CASES = (("mcunet-320kb-imagenet", "cortex-m4"),
+         ("mcunet-5fps-vww", "cortex-m4"))
+
+
+def run() -> list[dict]:
+    rows = []
+    for net, target in CASES:
+        cn = repro.compile(net, target=target, dtype="int8",
+                           quantize=False, certify=False,
+                           partial="auto")
+        t = cn.target
+        mcu = cn.mcu_bottleneck_bytes
+        ring_before = cn.mcu["byte_ring_bytes"]
+        p = cn.mcu.get("partial")
+        ring_after = p["ring_bytes_after"] if p else ring_before
+        rows.append({
+            "net": net,
+            "target": t.name,
+            "sram_kb": t.sram_bytes / 1000,
+            "mcu_bottleneck_kb": mcu / 1000,
+            "byte_ring_kb": ring_before / 1000,
+            "byte_ring_sliced_kb": ring_after / 1000,
+            "n_sliced_groups": p["n_sliced_groups"] if p else 0,
+            "total_slices": p["total_slices"] if p else 0,
+            "mac_overhead": round(p["mac_overhead"], 6) if p else 0.0,
+            "extra_macs": p["extra_macs"] if p else 0,
+            "byte_ring_over_mcu": ring_after / mcu,
+            "fits_sram_deployable": ring_after <= t.sram_bytes,
+        })
+    return rows
+
+
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
+    print("net,sram_kb,ring_kb,ring_sliced_kb,slices,mac_overhead,"
+          "ring_over_mcu,fits")
+    for r in rows:
+        print(f"{r['net']},{r['sram_kb']:.0f},{r['byte_ring_kb']:.1f},"
+              f"{r['byte_ring_sliced_kb']:.1f},{r['total_slices']},"
+              f"{100 * r['mac_overhead']:.2f}%,"
+              f"{r['byte_ring_over_mcu']:.3f},"
+              f"{r['fits_sram_deployable']}")
+    print("# partial execution turns the 128KB overflow into a "
+          "recompute trade: the deployable ring fits and the latency "
+          "price is the mac_overhead column")
+
+
+if __name__ == "__main__":
+    main()

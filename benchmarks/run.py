@@ -6,6 +6,8 @@
   multi_layer    — Fig. 9/10 (inverted bottlenecks, S1–S8 / B1–B17)
   full_network   — whole-DNN bottleneck via the compile facade (§7/§9):
                    the paper's 61.5% headline metric
+  partial_execution — spatial slicing of over-budget fusion groups
+                   (DESIGN.md §13): ring-fits-SRAM vs recompute-MAC trade
   compile_pipeline — repro.compile() pass timings + plan-artifact size
                    for the MCUNet-VWW int8 deployment (§9)
   capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
@@ -33,8 +35,8 @@ import time
 import jax
 
 from . import (capacity, energy_proxy, full_network, int8_network, latency,
-               model_zoo, multi_layer, pool_footprint, roofline_table,
-               single_layer, traffic)
+               model_zoo, multi_layer, partial_execution, pool_footprint,
+               roofline_table, single_layer, traffic)
 from .timing import bench_us
 
 BENCH_JSON = "BENCH_vmcu.json"
@@ -156,6 +158,8 @@ SECTIONS = [
     ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
     ("Net_full_network", full_network.run, full_network.main, True),
     ("Int8_full_network", int8_network.run, int8_network.main, True),
+    ("Partial_execution", partial_execution.run, partial_execution.main,
+     True),
     ("Zoo_k2d", model_zoo.run, model_zoo.main, True),
     ("Traffic", traffic.run, traffic.main, True),
     ("Compile_pipeline", _compile_pipeline_rows, _compile_pipeline_show,
@@ -256,6 +260,10 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"int8/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"int8/{r['net']}/int8_byte_ring_kb"] = r["int8_byte_ring_kb"]
         out[f"int8/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]
+    for r in sections.get("Partial_execution", []):
+        out[f"partial/{r['net']}/byte_ring_sliced_kb"] = \
+            r["byte_ring_sliced_kb"]
+        out[f"partial/{r['net']}/mac_overhead"] = r["mac_overhead"]
     for r in sections.get("Zoo_k2d", []):
         out[f"zoo/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"zoo/{r['net']}/mcu_bottleneck_kb"] = r["mcu_bottleneck_kb"]

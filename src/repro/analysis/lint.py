@@ -43,7 +43,9 @@ def _diag(code: str, detail: str, *, severity: str = "error",
 # ---------------------------------------------------------------------------
 
 def lint_program(program: PoolProgram, target: Any = None, *,
-                 deploy_bytes: int | None = None) -> list[Diagnostic]:
+                 deploy_bytes: int | None = None,
+                 bottleneck_group: str | None = None,
+                 partial_slices: int | None = None) -> list[Diagnostic]:
     """Budget + byte-accounting findings for one program.
 
     ``target`` (a :class:`repro.compile.targets.Target`, a registry
@@ -54,6 +56,11 @@ def lint_program(program: PoolProgram, target: Any = None, *,
     what lands on the MCU); without it the SRAM check is skipped.  SRAM
     overrun is an error; flash overrun is a *warning* — without the
     artifact payload the parameter size is an analytic estimate.
+
+    ``bottleneck_group`` names the fusion group pinning the overflow in
+    the VMCU301 finding; ``partial_slices`` (the driver's
+    :func:`repro.partial.estimate_slices` result) adds a VMCU303
+    advisory: the overflow is resolvable by partial execution.
     """
     diags: list[Diagnostic] = []
     plan_only = program.ops and program.ops[0].kind in PLAN_ONLY_KINDS
@@ -84,9 +91,17 @@ def lint_program(program: PoolProgram, target: Any = None, *,
 
         t = get_target(target)
         if deploy_bytes is not None and deploy_bytes > t.sram_bytes:
+            who = (f" (pinned by fusion group {bottleneck_group!r})"
+                   if bottleneck_group else "")
             diags.append(_diag(
                 "VMCU301", f"deployable bottleneck {deploy_bytes} B > "
-                f"{t.sram_bytes} B SRAM on {t.name!r}"))
+                f"{t.sram_bytes} B SRAM on {t.name!r}{who}"))
+            if partial_slices is not None:
+                diags.append(_diag(
+                    "VMCU303", f"overflow is resolvable by partial "
+                    f"execution: est. {partial_slices} slice(s) — "
+                    "recompile with partial='auto'",
+                    severity="warning"))
         flash = _flash_estimate(program)
         if flash > t.flash_bytes:
             diags.append(_diag(
@@ -193,11 +208,14 @@ def lint_artifact(path: str) -> ArtifactReport:
     diags.extend(res.diagnostics)
 
     diags.extend(lint_program(program))  # byte accounting, no budgets
-    deploy = (payload.get("mcu") or {}).get("mcu_bottleneck_bytes")
+    mcu = payload.get("mcu") or {}
+    deploy = mcu.get("deploy_bytes", mcu.get("mcu_bottleneck_bytes"))
     if deploy is not None and deploy > target.sram_bytes:
+        who = mcu.get("bottleneck_group")
+        who = f" (pinned by fusion group {who!r})" if who else ""
         diags.append(_diag(
             "VMCU301", f"deployable bottleneck {deploy} B > "
-            f"{target.sram_bytes} B SRAM on {target.name!r}"))
+            f"{target.sram_bytes} B SRAM on {target.name!r}{who}"))
     flash = (_encoded_nbytes(quant["qparams"]) if quant is not None
              else _encoded_nbytes(payload.get("params")))
     if flash > target.flash_bytes:

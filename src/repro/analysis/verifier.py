@@ -67,6 +67,8 @@ CODES = {
     "VMCU204": "residual source tensor is not live",
     "VMCU301": "pool exceeds the target's SRAM budget",
     "VMCU302": "parameter payload exceeds the target's flash budget",
+    "VMCU303": "SRAM overflow resolvable by partial execution "
+               "(re-compile with partial='auto')",
     "VMCU401": "program elem_bytes inconsistent with its dtype",
     "VMCU402": "op segment_bytes inconsistent with the program geometry",
     "VMCU403": "artifact certificate does not match the program "
@@ -476,6 +478,21 @@ def verify_program(program: PoolProgram) -> VerifyResult:
         iown = op.in_op if (op.in_op >= 0 and op.kind in _ROWSCHED_KINDS) \
             else i
 
+        # sliced ops (repro.partial) read a row WINDOW of a longer held
+        # source record; the proof treats the whole record as static,
+        # which requires the op to hold it and the window to fit.
+        src_tot = op.h_src * sched.in_chunk if op.h_src else in_tot
+        if op.h_src:
+            if not op.hold_input:
+                return _inconclusive(
+                    f"op {i} windows its source (h_src={op.h_src}) "
+                    "without holding it", op_index=i)
+            if (op.in_row0 + sched.in_rows) * sched.in_chunk > src_tot:
+                return _inconclusive(
+                    f"op {i} reads rows [{op.in_row0}, "
+                    f"{op.in_row0 + sched.in_rows}) beyond its "
+                    f"{op.h_src}-row source", op_index=i)
+
         # candidate first errors within this op: key (step, phase, seg)
         # with phases read=0, aux=1, write=3 — the sim's in-step order.
         candidates: list[tuple[tuple[int, int, int], Diagnostic]] = []
@@ -495,9 +512,9 @@ def verify_program(program: PoolProgram) -> VerifyResult:
                 f"{rec.base} (offset {(rec.base - op.in_ptr) % n} mod "
                 f"{n})", op_index=i, step=info.t_read,
                 segment=op.in_ptr % n, byte=(op.in_ptr % n) * seg_bytes)))
-        elif rec.length != in_tot:
+        elif rec.length != src_tot:
             return _inconclusive(
-                f"{op.kind} op {i} expects {in_tot} input segments but "
+                f"{op.kind} op {i} expects {src_tot} input segments but "
                 f"tensor {iown} is live with {rec.length}", op_index=i)
 
         aux_rec = None
@@ -601,15 +618,41 @@ def verify_program(program: PoolProgram) -> VerifyResult:
         peak = max(peak, live_before + stream)
 
         # -- records after the op -----------------------------------------
-        if not op.hold_input:
+        if not op.hold_input or op.free_src:
             records.pop(iown, None)
         if aux_rec is not None:
             records.pop(op.aux_op, None)
-        records[i + 1] = _Record(i + 1, op.out_ptr, out_tot)
+        if op.out_op >= 0:
+            # deferred-owner write (repro.partial): this op contributes a
+            # row band of the SHARED tensor consumed by op out_op — the
+            # record grows contiguously slice by slice.
+            dst = records.get(op.out_op)
+            if dst is None:
+                if op.out_row0:
+                    return _inconclusive(
+                        f"op {i} writes rows at offset {op.out_row0} of "
+                        f"tensor {op.out_op} before its first rows exist",
+                        op_index=i)
+                records[op.out_op] = _Record(op.out_op, op.out_ptr,
+                                             out_tot)
+            elif (op.out_row0 * oc != dst.length
+                  or (op.out_ptr - dst.base) % n != dst.length):
+                return _inconclusive(
+                    f"op {i} extends tensor {op.out_op} non-contiguously "
+                    f"(record length {dst.length}, write row offset "
+                    f"{op.out_row0})", op_index=i)
+            else:
+                dst.length += out_tot
+        else:
+            records[i + 1] = _Record(i + 1, op.out_ptr, out_tot)
 
     # -- the final outputs must survive the ring --------------------------
     last = program.ops[-1]
-    final = records[len(program.ops)]
+    final = records.get(len(program.ops))
+    if final is None:
+        return _inconclusive("last op defers its output to a consumer "
+                             "beyond the program",
+                             op_index=len(program.ops) - 1)
     if last.out_segments > final.length:
         d = Diagnostic(
             "VMCU104",

@@ -81,6 +81,15 @@ def main(argv=None) -> int:
                     help="skip the certification pass entirely")
     ap.add_argument("--no-budget", action="store_true",
                     help="record the SRAM verdict without gating")
+    ap.add_argument("--partial", default="off", metavar="MODE",
+                    help="partial execution: 'auto' slices over-budget "
+                         "fusion groups until the deployable ring fits "
+                         "SRAM, an integer forces that many slices on "
+                         "the pinning group, 'off' (default) keeps the "
+                         "hard budget gate")
+    ap.add_argument("--no-quantize", action="store_true",
+                    help="int8 planner-only compile: solve the ring "
+                         "and budgets without calibrating qparams")
     ap.add_argument("--list-targets", action="store_true")
     ap.add_argument("--list-nets", action="store_true")
     ap.add_argument("--smoke", action="store_true",
@@ -119,11 +128,21 @@ def main(argv=None) -> int:
         print(f"loaded {args.net} ({cn.net_name} for {cn.target.name})")
     else:
         net = args.net or "mcunet-5fps-vww"
+        partial = args.partial
+        if partial not in ("off", "auto"):
+            try:
+                partial = int(partial)
+            except ValueError:
+                print(f"--partial must be 'off', 'auto' or an integer "
+                      f"slice count, got {partial!r}", file=sys.stderr)
+                return 2
         try:
             cn = repro.compile(net, target=target, dtype=args.dtype,
                                certify=(False if args.no_certify
                                         else args.certify),
-                               check_budget=not args.no_budget)
+                               check_budget=not args.no_budget,
+                               quantize=not args.no_quantize,
+                               partial=partial)
         except repro.SRAMBudgetError as e:
             print(f"SRAM budget gate FAILED: {e}", file=sys.stderr)
             return 2

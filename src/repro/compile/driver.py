@@ -48,8 +48,8 @@ from ..obs.spans import SpanCollector, collect, span
 from . import artifact
 from .targets import Target, get_target
 
-PASS_NAMES = ("build", "schedule", "plan", "budget", "quantize", "lint",
-              "certify")
+PASS_NAMES = ("build", "schedule", "plan", "budget", "partial",
+              "quantize", "lint", "certify")
 
 _UNSET = object()
 
@@ -130,12 +130,19 @@ def _nbytes(obj) -> int:
     return np.asarray(obj).nbytes
 
 
-def _flash_param_bytes(program: PoolProgram) -> int:
+def _flash_param_bytes(program: PoolProgram,
+                       parents: list[int] | None = None) -> int:
     """Analytic float-parameter storage (4 B/element, the init_net_params
     shapes) — lets ``report()`` account flash without materializing
-    parameters on planner-only compiles."""
+    parameters on planner-only compiles.  ``parents`` (sliced programs)
+    counts each unsliced op's parameters once across its slices."""
     total = 0
-    for op in program.ops:
+    seen: set[int] = set()
+    for i, op in enumerate(program.ops):
+        if parents is not None:
+            if parents[i] in seen:
+                continue
+            seen.add(parents[i])
         if op.kind in ("gemm", "conv_pw"):
             total += op.d_in * op.d_out
         elif op.kind == "conv_k2d":
@@ -175,11 +182,19 @@ class CompiledNet:
     graph: Graph | None = None
     init_key: object = None    # PRNG key for lazy parameter init
     spans: list | None = None  # nested timed pipeline spans (obs.spans)
+    partial: dict | None = None  # partial-execution accounting + parents
 
     # -- classification ----------------------------------------------------
     @property
     def quantized(self) -> bool:
         return self.qnet is not None
+
+    @property
+    def partial_parents(self) -> list[int] | None:
+        """Sliced-op -> unsliced-op index map (``None`` when unsliced)."""
+        if self.partial is None:
+            return None
+        return self.partial.get("parents")
 
     def ensure_params(self) -> list:
         """Materialize the float parameters on first need (run/save of a
@@ -188,7 +203,10 @@ class CompiledNet:
             if self.plan is None:
                 raise CompileError("no parameters in this CompiledNet "
                                    "and no plan to initialize them from")
-            self.params = init_net_params(self.plan, self.init_key)
+            base = init_net_params(self.plan, self.init_key)
+            parents = self.partial_parents
+            self.params = (base if parents is None
+                           else [base[p] for p in parents])
         return self.params
 
     # -- footprints --------------------------------------------------------
@@ -202,15 +220,28 @@ class CompiledNet:
         """The byte-granular deployable bottleneck (paper Fig. 9/10)."""
         return self.mcu["mcu_bottleneck_bytes"]
 
+    def _dedup_by_parent(self, entries: list) -> list:
+        """Slices of one op share its parameters — count flash once."""
+        parents = self.partial_parents
+        if parents is None:
+            return entries
+        seen: set[int] = set()
+        kept = []
+        for p, e in zip(parents, entries):
+            if p not in seen:
+                seen.add(p)
+                kept.append(e)
+        return kept
+
     @property
     def flash_bytes_used(self) -> int:
         """Parameter storage the target's flash must hold (exact for
         materialized params/qparams, analytic otherwise)."""
         if self.quantized:
-            return _nbytes(self.qnet.qparams)
+            return _nbytes(self._dedup_by_parent(self.qnet.qparams))
         if self.params is not None:
-            return _nbytes(self.params)
-        return _flash_param_bytes(self.program)
+            return _nbytes(self._dedup_by_parent(self.params))
+        return _flash_param_bytes(self.program, self.partial_parents)
 
     def fits(self) -> bool:
         return self.target.fits_sram(self.mcu_bottleneck_bytes)
@@ -321,6 +352,7 @@ class CompiledNet:
         """Footprint / bottleneck accounting against the target budget."""
         t = self.target
         bot = self.mcu_bottleneck_bytes
+        deploy = self.mcu.get("deploy_bytes") or bot
         flash = self.flash_bytes_used
         rep = {
             "net": self.net_name,
@@ -339,9 +371,12 @@ class CompiledNet:
                 self.mcu.get("reduction_vs_tinyengine"),
             "reduction_vs_hmcos": self.mcu.get("reduction_vs_hmcos"),
             "bottleneck_group": self.mcu.get("bottleneck_group"),
+            "byte_ring_bytes": self.mcu.get("byte_ring_bytes"),
+            "deploy_bytes": self.mcu.get("deploy_bytes"),
+            "partial": self.mcu.get("partial"),
             "sram_bytes": t.sram_bytes,
-            "sram_margin_bytes": t.sram_margin(bot),
-            "fits_sram": t.fits_sram(bot),
+            "sram_margin_bytes": t.sram_margin(deploy),
+            "fits_sram": t.fits_sram(deploy),
             "flash_bytes": t.flash_bytes,
             "flash_bytes_used": flash,
             "fits_flash": flash <= t.flash_bytes,
@@ -374,6 +409,7 @@ class CompiledNet:
             "certificate": self.certificate,
             "passes": [[p.name, p.seconds, p.note] for p in self.passes],
             "spans": self.spans,
+            "partial": self.partial,
         }
         artifact.dump(payload, path)
         return path
@@ -405,7 +441,8 @@ class CompiledNet:
                    certificate=payload["certificate"],
                    passes=[PassRecord(n, s, note)
                            for n, s, note in payload["passes"]],
-                   spans=payload.get("spans"))
+                   spans=payload.get("spans"),
+                   partial=payload.get("partial"))
 
 
 def load(path: str) -> CompiledNet:
@@ -442,7 +479,8 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
             block_rows=_UNSET, order=None, params=None, key=None,
             calib=None, n_calib: int = 2, quantize: bool = True,
             certify: bool | str = True, lint: bool = True,
-            check_budget: bool = True) -> CompiledNet:
+            check_budget: bool = True,
+            partial: str | int = "off") -> CompiledNet:
     """Compile ``net`` for ``target`` — the repo's deployment front door.
 
     ``net`` is a :class:`repro.graph.Graph` or a registered net name
@@ -462,20 +500,37 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     ``lint=False`` skips the VMCU3xx/4xx lint pass;
     ``check_budget=False`` records the SRAM verdict without raising
     :class:`SRAMBudgetError`.
+
+    ``partial`` enables partial execution (DESIGN.md §13): ``"auto"``
+    slices over-budget fusion groups spatially until the deployable
+    ring fits the target SRAM (demoting :class:`SRAMBudgetError` into
+    a scheduled latency/memory trade), an ``int`` forces that many
+    slices on the ring-pinning group, ``"off"`` (default) keeps the
+    hard budget gate.
     """
     if certify not in (True, False, "sim", "static"):
         raise ValueError(f"certify must be True/False/'sim'/'static', "
                          f"got {certify!r}")
+    if not (partial in ("off", "auto") or isinstance(partial, int)):
+        raise ValueError(f"partial must be 'off', 'auto' or an int "
+                         f"slice count, got {partial!r}")
     t = get_target(target)
     dtype = dtype or t.default_dtype
     dtype_itemsize(dtype)  # fail fast on unknown dtypes
     if fused_exec is None:
-        fused_exec = dtype != "int8"
+        # partial execution slices the unfused pw/dw/pw chain — the
+        # same deployment form int8 quantization requires
+        fused_exec = dtype != "int8" and partial == "off"
     elif fused_exec and dtype == "int8":
         raise CompileError(
             "int8 compilation requires unfused module lowering "
             "(fused_exec=False): quantized execution requantizes "
             "between the pw/dw/pw ops")
+    elif fused_exec and partial != "off":
+        raise CompileError(
+            "partial execution requires unfused module lowering "
+            "(fused_exec=False): the slice surgery rewrites the "
+            "pw/dw/pw chain ops individually")
     seg_width = t.seg_width if seg_width is None else seg_width
     block_rows = t.block_rows if block_rows is _UNSET else block_rows
 
@@ -514,26 +569,95 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     plan = run_pass("plan", _plan)
 
     # budget ---------------------------------------------------------------
-    # Pure arithmetic on the solved plan: gate BEFORE the expensive
-    # quantize/certify passes so an over-budget net fails in ms.
+    # Pure arithmetic on the solved plans: gate BEFORE the expensive
+    # quantize/certify passes so an over-budget net fails in ms.  For
+    # int8 (the deployment dtype) the gate covers BOTH the analytic
+    # per-group bottleneck and the deployable byte ring (seg_width=1 /
+    # tight rows — the footprint an MCU build actually allocates), which
+    # a merged multi-group ring can exceed the per-group bound on.
+    # Float compiles keep the analytic gate: their byte ring is a 4x
+    # host-development artifact, not what ships.
+    byte_geometry = seg_width == 1 and block_rows is None
+    real_mcu = t.sram_bytes < (1 << 38)     # host-sim never gates
+    ring_gate = dtype == "int8" or partial != "off"
+    byte_plan = None
+    if real_mcu and ring_gate and (check_budget or partial != "off") \
+            and not byte_geometry:
+        def _byte_plan():
+            return _plan_net(graph, order=sched_order, dtype=dtype,
+                             fused_exec=fused_exec,
+                             **t.byte_ring_kwargs)
+        try:
+            with collect(collector), span("byte_plan"):
+                byte_plan = _byte_plan()
+        except Exception:
+            byte_plan = None        # fall back to the analytic gate only
+
     def _budget():
         bot = plan.mcu_bottleneck_bytes
-        margin = t.sram_margin(bot)
+        ring = (byte_plan.program.pool_bytes if byte_plan is not None
+                else plan.program.pool_bytes
+                if byte_geometry and ring_gate else bot)
+        deploy = max(bot, ring)
+        margin = t.sram_margin(deploy)
         verdict = "fits" if margin >= 0 else "OVER"
-        note = (f"bottleneck {bot} B vs {t.sram_bytes} B SRAM "
-                f"({verdict}, margin {margin} B)")
+        note = (f"bottleneck {bot} B, deployable ring {ring} B vs "
+                f"{t.sram_bytes} B SRAM ({verdict}, margin {margin} B)")
+        if margin < 0 and partial != "off":
+            return (deploy, margin), note + " — deferred to partial pass"
         if check_budget and margin < 0:
             raise SRAMBudgetError(
-                f"{graph.name} needs {bot} B (byte-granular bottleneck) "
-                f"but target {t.name!r} has {t.sram_bytes} B SRAM "
-                f"(over by {-margin} B); pass check_budget=False to "
-                "record the verdict without gating")
-        return (bot, margin), note
+                f"{graph.name} needs {deploy} B (deployable "
+                f"bottleneck) but target {t.name!r} has {t.sram_bytes} "
+                f"B SRAM (over by {-margin} B); pass partial='auto' to "
+                "slice the over-budget groups, or check_budget=False "
+                "to record the verdict without gating")
+        return (deploy, margin), note
     run_pass("budget", _budget)
+
+    # partial --------------------------------------------------------------
+    # Slice over-budget fusion groups spatially (DESIGN.md §13).  The
+    # slicing is CHOSEN on the deployable byte ring (that is the budget
+    # being missed) and APPLIED to the executed geometry too.
+    partial_plan = None
+    exec_parents = None
+    exec_program = plan.program
+    if partial != "off":
+        def _partial():
+            nonlocal exec_parents, exec_program
+            from ..partial import (PartialPlanError, apply_partial,
+                                   plan_partial)
+
+            policy_prog = (byte_plan.program if byte_plan is not None
+                           else plan.program)
+            policy_groups = (byte_plan.groups if byte_plan is not None
+                             else plan.groups)
+            ranges = [(gp.op_lo, gp.op_hi) for gp in policy_groups]
+            force = partial if isinstance(partial, int) else None
+            try:
+                pp = plan_partial(policy_prog, ranges, t.sram_bytes,
+                                  force=force)
+            except PartialPlanError as e:
+                raise SRAMBudgetError(
+                    f"partial execution cannot fit {graph.name} in "
+                    f"{t.sram_bytes} B SRAM on {t.name!r}: {e}") from e
+            if pp is None:
+                return None, "not needed (deployable ring fits SRAM)"
+            exec_program, exec_parents = apply_partial(plan.program,
+                                                       pp.choices)
+            return pp, (f"{len(pp.groups)} group(s) -> "
+                        f"{sum(g['n_slices'] for g in pp.groups)} "
+                        f"slices; ring {pp.ring_bytes_before} -> "
+                        f"{pp.ring_bytes_after} B, "
+                        f"+{pp.mac_overhead:.1%} MACs")
+        partial_plan = run_pass("partial", _partial)
 
     # quantize -------------------------------------------------------------
     # (parameters materialize lazily: planner-only compiles — the
-    # benchmark sections — never pay for init_net_params)
+    # benchmark sections — never pay for init_net_params.  Sliced
+    # compiles calibrate the UNSLICED plan — the reference forward runs
+    # whole tensors — then share each op's qparams across its slices,
+    # so requant constants are identical and execution stays bit-exact.)
     qnet = None
     if dtype == "int8" and quantize:
         def _quant():
@@ -542,12 +666,33 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
                 with span("init_params", ops=len(plan.program.ops)):
                     params = init_net_params(plan, key)
             q = _quantize_net(plan, params, calib=calib, n_calib=n_calib)
-            return q, (f"{len(q.qparams)} q-ops, requant tables for "
-                       f"{sum(1 for op in q.program.ops if op.kind != 'add')}"
-                       " stores")
+            note = (f"{len(q.qparams)} q-ops, requant tables for "
+                    f"{sum(1 for op in q.program.ops if op.kind != 'add')}"
+                    " stores")
+            if partial_plan is not None:
+                from ..partial import apply_partial
+
+                qprog, qpar = apply_partial(q.program,
+                                            partial_plan.choices)
+                q = QuantizedNet(
+                    plan=q.plan, program=qprog,
+                    params=[q.params[p] for p in qpar],
+                    qparams=[q.qparams[p] for p in qpar],
+                    act_scales=q.act_scales)
+                note += f"; shared across {len(qpar)} sliced ops"
+            return q, note
         qnet = run_pass("quantize", _quant)
 
-    program = qnet.program if qnet is not None else plan.program
+    program = qnet.program if qnet is not None else exec_program
+
+    # deployable accounting shared by lint / mcu snapshot / report ---------
+    ring_unsliced = (byte_plan.program.pool_bytes
+                     if byte_plan is not None
+                     else plan.program.pool_bytes
+                     if byte_geometry and ring_gate else None)
+    deploy_ring = (partial_plan.ring_bytes_after
+                   if partial_plan is not None else ring_unsliced)
+    deploy_bytes = max(plan.mcu_bottleneck_bytes, deploy_ring or 0)
 
     # lint -----------------------------------------------------------------
     # (lazy import: repro.analysis is pure inspection, but keep the
@@ -556,8 +701,20 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
         def _lint():
             from ..analysis.lint import lint_program
 
+            est = None
+            if t.sram_margin(deploy_bytes) < 0 and partial_plan is None:
+                # the overflow stood — can partial execution resolve it?
+                from ..partial import estimate_slices
+
+                policy = (byte_plan if byte_plan is not None else plan)
+                pprog = policy.program
+                est = estimate_slices(
+                    pprog, [(gp.op_lo, gp.op_hi) for gp in policy.groups],
+                    t.sram_bytes // (pprog.seg_width * pprog.elem_bytes))
             diags = lint_program(
-                program, t, deploy_bytes=plan.mcu_bottleneck_bytes)
+                program, t, deploy_bytes=deploy_bytes,
+                bottleneck_group=plan.bottleneck_group().name,
+                partial_slices=est)
             # check_budget=False means "record, don't gate" — that
             # covers the lint pass's SRAM finding too
             errors = [d for d in diags if d.severity == "error"
@@ -598,8 +755,21 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
                           f"{program.n_segments} segments live")
         certificate = run_pass("certify", _certify)
 
+    mcu = _mcu_summary(plan)
+    mcu["byte_ring_bytes"] = ring_unsliced
+    mcu["deploy_bytes"] = deploy_bytes
+    partial_info = None
+    if partial_plan is not None:
+        partial_info = dict(partial_plan.summary())
+        partial_info["parents"] = list(exec_parents)
+        mcu["partial"] = {k: v for k, v in partial_info.items()
+                          if k != "parents"}
+        if params is not None:     # re-align materialized float params
+            params = [params[p] for p in exec_parents]
+
     return CompiledNet(net_name=graph.name, target=t, dtype=dtype,
                        program=program, params=params, qnet=qnet,
-                       mcu=_mcu_summary(plan), certificate=certificate,
+                       mcu=mcu, certificate=certificate,
                        passes=passes, plan=plan, graph=graph,
-                       init_key=key, spans=collector.to_dicts())
+                       init_key=key, spans=collector.to_dicts(),
+                       partial=partial_info)

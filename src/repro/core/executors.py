@@ -274,9 +274,34 @@ def _pw_maps(op) -> tuple[list[int], list[int]]:
     return ridx, cidx
 
 
+def _image_ptr(pool, op) -> int:
+    """Effective base pointer of the op's input image — the source base
+    advanced past the rows below the slice window (``in_row0``; 0 for
+    every unsliced op)."""
+    if not op.in_row0:
+        return op.in_ptr
+    return op.in_ptr + op.in_row0 * op.w_in * segments_for(op.d_in,
+                                                           pool.shape[1])
+
+
+def _conv_pads(op) -> tuple[int, int, int, int]:
+    """Exact ``(pad_t, pad_b, pad_l, pad_r)`` of a dw / k2d conv — the
+    minimal zero border such that every tap's strided slice is in
+    bounds.  Identical maths for every padding mode (same / valid /
+    same_top / same_mid); for the legacy modes it selects the same
+    elements as the previous generous symmetric padding."""
+    from .rowsched import conv_k2d_pad, conv_k2d_pad_w
+
+    pad_t = conv_k2d_pad(op.rs, op.padding)
+    pad_l = conv_k2d_pad_w(op.rs, op.padding)
+    pad_b = max(0, op.stride * (op.h_out - 1) + op.rs - pad_t - op.h_in)
+    pad_r = max(0, op.stride * (op.w_out - 1) + op.rs - pad_l - op.w_in)
+    return pad_t, pad_b, pad_l, pad_r
+
+
 def _fetch_image(pool, op, n):
     rows = op.rows_in
-    x = fetch_rows(pool, op.in_ptr, rows, op.d_in, n)
+    x = fetch_rows(pool, _image_ptr(pool, op), rows, op.d_in, n)
     return x.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.float32)
 
 
@@ -296,9 +321,9 @@ def conv_pw_ring(pool, w, b, *, op, n_segments):
 
 def conv_dw_ring(pool, w, b, *, op, n_segments):
     img = _fetch_image(pool, op, n_segments)
-    pad = (op.rs - 1) // 2
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
     s = op.stride
-    padded = jnp.pad(img, ((pad, pad + s), (pad, pad + s), (0, 0)))
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
     acc = jnp.zeros((op.h_out, op.w_out, op.d_in), jnp.float32)
     for r in range(op.rs):
         for c in range(op.rs):
@@ -309,21 +334,12 @@ def conv_dw_ring(pool, w, b, *, op, n_segments):
     return _store_image(pool, op, y, n_segments)
 
 
-def _k2d_geometry(op) -> tuple[int, int, int]:
-    """(pad_lo, pad_hi, stride) of a conv_k2d op — generous high padding
-    (extra rows are zeros and never selected by the strided slice)."""
-    from .rowsched import conv_k2d_pad
-
-    pad_lo = conv_k2d_pad(op.rs, op.padding)
-    pad_hi = pad_lo + op.stride if op.padding == "same" else 0
-    return pad_lo, pad_hi, op.stride
-
-
 def conv_k2d_ring(pool, w, b, *, op, n_segments):
     """General k x k conv: ``w`` is ``[k, k, c_in, c_out]``."""
     img = _fetch_image(pool, op, n_segments)
-    pad_lo, pad_hi, s = _k2d_geometry(op)
-    padded = jnp.pad(img, ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
+    s = op.stride
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
     acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.float32)
     for r in range(op.rs):
         for c in range(op.rs):
@@ -384,7 +400,7 @@ def _q_act(acc, activation):
 
 
 def _fetch_image_q(pool, op, n):
-    x = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n)
+    x = fetch_rows(pool, _image_ptr(pool, op), op.rows_in, op.d_in, n)
     return x.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.int32)
 
 
@@ -407,8 +423,9 @@ def conv_k2d_ring_q(pool, w, b, mult, shift, *, op, n_segments):
     from ..quant.requant import requantize
 
     img = _fetch_image_q(pool, op, n_segments)
-    pad_lo, pad_hi, s = _k2d_geometry(op)
-    padded = jnp.pad(img, ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
+    s = op.stride
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
     acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.int32)
     for r in range(op.rs):
         for c in range(op.rs):
@@ -425,9 +442,9 @@ def conv_dw_ring_q(pool, w, b, mult, shift, *, op, n_segments):
     from ..quant.requant import requantize
 
     img = _fetch_image_q(pool, op, n_segments)
-    pad = (op.rs - 1) // 2
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
     s = op.stride
-    padded = jnp.pad(img, ((pad, pad + s), (pad, pad + s), (0, 0)))
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
     acc = jnp.zeros((op.h_out, op.w_out, op.d_in), jnp.int32)
     for r in range(op.rs):
         for c in range(op.rs):
@@ -682,7 +699,8 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                                h_out=op.h_out, w_out=op.w_out,
                                c_in=op.d_in, c_out=op.d_out,
                                stride=op.stride, resample=op.resample,
-                               in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                               in_ptr=_image_ptr(arr, op),
+                               out_ptr=op.out_ptr,
                                activation=op.activation,
                                interpret=interpret)
         elif op.kind == "conv_dw":
@@ -690,7 +708,9 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
             arr = ring_conv_dw(arr, w, b, h_in=op.h_in, w_in=op.w_in,
                                h_out=op.h_out, w_out=op.w_out, c=op.d_in,
                                rs=op.rs, stride=op.stride,
-                               in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                               padding=op.padding,
+                               in_ptr=_image_ptr(arr, op),
+                               out_ptr=op.out_ptr,
                                activation=op.activation,
                                interpret=interpret)
         elif op.kind == "conv_k2d":
@@ -699,7 +719,8 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                                 h_out=op.h_out, w_out=op.w_out,
                                 c_in=op.d_in, c_out=op.d_out, k=op.rs,
                                 stride=op.stride, padding=op.padding,
-                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                in_ptr=_image_ptr(arr, op),
+                                out_ptr=op.out_ptr,
                                 activation=op.activation,
                                 interpret=interpret)
         elif op.kind == "ib_fused":
@@ -748,7 +769,8 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
                                  w_in=op.w_in, h_out=op.h_out,
                                  w_out=op.w_out, c_in=op.d_in,
                                  c_out=op.d_out, stride=op.stride,
-                                 resample=op.resample, in_ptr=op.in_ptr,
+                                 resample=op.resample,
+                                 in_ptr=_image_ptr(arr, op),
                                  out_ptr=op.out_ptr,
                                  activation=op.activation,
                                  interpret=interpret)
@@ -757,7 +779,8 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
             arr = ring_conv_dw_q(arr, w, b, mult, shift, h_in=op.h_in,
                                  w_in=op.w_in, h_out=op.h_out,
                                  w_out=op.w_out, c=op.d_in, rs=op.rs,
-                                 stride=op.stride, in_ptr=op.in_ptr,
+                                 stride=op.stride, padding=op.padding,
+                                 in_ptr=_image_ptr(arr, op),
                                  out_ptr=op.out_ptr,
                                  activation=op.activation,
                                  interpret=interpret)
@@ -768,7 +791,8 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
                                   w_out=op.w_out, c_in=op.d_in,
                                   c_out=op.d_out, k=op.rs,
                                   stride=op.stride, padding=op.padding,
-                                  in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                  in_ptr=_image_ptr(arr, op),
+                                  out_ptr=op.out_ptr,
                                   activation=op.activation,
                                   interpret=interpret)
         elif op.kind == "add":
@@ -809,10 +833,17 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
     # branch ops (in_op >= 0) read the held INPUT of op in_op — segment
     # ownership tags carry that op's index, exactly like aux reads
     iown = op.in_op if op.in_op >= 0 else i
+    # sliced ops (repro.partial): reads window the source record at row
+    # offset in_row0; writes land inside the SHARED output tensor owned
+    # by op out_op at row offset out_row0
+    r0 = op.in_row0
+    oown = op.out_op if op.out_op >= 0 else i + 1
+    w0 = op.out_row0
     for t in range(sched.steps):
         for r in sched.reads[t]:
             for s in range(ic):
-                sim.read(op.in_ptr + r * ic + s, owner=(iown, r * ic + s))
+                seg = (r0 + r) * ic + s
+                sim.read(op.in_ptr + seg, owner=(iown, seg))
         if sched.aux_reads is not None:
             ac = sched.aux_chunk
             for r in sched.aux_reads[t]:
@@ -823,12 +854,18 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
         if not op.hold_input:
             for r in frees[t]:
                 for s in range(ic):
-                    sim.free(op.in_ptr + r * ic + s,
-                             owner=(iown, r * ic + s))
+                    seg = (r0 + r) * ic + s
+                    sim.free(op.in_ptr + seg, owner=(iown, seg))
         for r in sched.writes[t]:
             for s in range(oc):
-                seg = r * oc + s
-                sim.write(op.out_ptr + seg, owner=(i + 1, seg))
+                sim.write(op.out_ptr + r * oc + s,
+                          owner=(oown, (w0 + r) * oc + s))
+    if op.free_src:
+        # last slice of a held source: release the WHOLE record (earlier
+        # slices held it; re-freeing an already-free segment is benign)
+        src_rows = op.h_src or sched.in_rows
+        for seg in range(src_rows * ic):
+            sim.free(op.in_ptr + seg, owner=(iown, seg))
 
 
 @register_executor("sim")

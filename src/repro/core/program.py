@@ -301,6 +301,24 @@ class PoolOp:
                               # this op reads instead of the chained tensor
     hold_input: bool = False  # input is a residual source: op must not
                               # free it; the consuming op frees it
+    # -- partial execution (spatial slicing; repro.partial) ---------------
+    in_row0: int = 0          # window start row within the source tensor
+    h_src: int = 0            # full source image height (0 = not windowed)
+    out_op: int = -1          # deferred write owner: op index that will
+                              # consume the SHARED output tensor this op
+                              # writes a slice of (-1 = ordinary chain)
+    out_row0: int = 0         # row offset of this op's output inside that
+                              # shared output tensor
+    free_src: bool = False    # free the whole source record after this op
+                              # (last slice's read of a held source)
+
+    @property
+    def rows_src(self) -> int:
+        """Row extent of the op's SOURCE tensor record — the full image
+        for a windowed (sliced) read, ``rows_in`` otherwise."""
+        if self.h_src:
+            return self.h_src * self.w_in if self.w_in else self.h_src
+        return self.rows_in
 
     @property
     def span_segments(self) -> int:
@@ -391,7 +409,7 @@ class PoolProgram:
     @property
     def in_rows(self) -> int:
         """Rows of the program input tensor (net programs vary per op)."""
-        return self.ops[0].rows_in or self.m_rows
+        return self.ops[0].rows_src or self.m_rows
 
     @property
     def out_rows(self) -> int:

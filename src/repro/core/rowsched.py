@@ -150,10 +150,11 @@ def conv_pw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
 
 @_memo
 def conv_dw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
-                     *, rs: int, stride: int = 1) -> RowSchedule:
+                     *, rs: int, stride: int = 1,
+                     padding: str = "same") -> RowSchedule:
     """Depthwise RSxRS conv: output row ``p`` reads the clamped halo rows
-    ``p*stride - pad .. p*stride - pad + rs - 1`` ('same' padding)."""
-    pad = (rs - 1) // 2
+    ``p*stride - pad .. p*stride - pad + rs - 1``."""
+    pad = conv_k2d_pad(rs, padding)
     reads, writes = [], []
     for p in range(h_out):
         win = sorted({min(max(p * stride - pad + r, 0), h_in - 1)
@@ -167,19 +168,35 @@ def conv_dw_schedule(h_in: int, h_out: int, in_chunk: int, out_chunk: int,
 
 
 def conv_k2d_pad(k: int, padding: str) -> int:
-    """Low-side row/column padding of a k x k conv (the one definition
-    the planner, executors and codegen share)."""
-    if padding == "same":
+    """Low-side ROW padding of a k x k conv (the one definition the
+    planner, executors and codegen share).
+
+    Besides ``same`` / ``valid``, the partial-execution slicer uses two
+    vertical-split modes: ``same_top`` (a top slice of a 'same' conv —
+    keeps the top pad) and ``same_mid`` (an interior/bottom slice — the
+    halo rows above are real data, so no top pad)."""
+    if padding in ("same", "same_top"):
         return (k - 1) // 2
-    if padding == "valid":
+    if padding in ("valid", "same_mid"):
         return 0
-    raise ValueError(f"unknown padding {padding!r} (same/valid)")
+    raise ValueError(f"unknown padding {padding!r} "
+                     "(same/valid/same_top/same_mid)")
+
+
+def conv_k2d_pad_w(k: int, padding: str) -> int:
+    """Low-side COLUMN padding of a k x k conv.  The slicer splits rows
+    only, so every 'same'-family mode keeps the full horizontal pad."""
+    return 0 if padding == "valid" else (k - 1) // 2
 
 
 def conv_k2d_out(h_in: int, k: int, stride: int, padding: str) -> int:
     """Output extent of a k x k conv along one spatial axis."""
     if padding == "same":
         return -(-h_in // stride)
+    if padding == "same_top":
+        return (h_in + (k - 1) // 2 - k) // stride + 1
+    if padding == "same_mid":
+        return (h_in - k) // stride + 1
     if h_in < k:
         raise ValueError(f"valid conv needs h_in >= k ({h_in} < {k})")
     return (h_in - k) // stride + 1
@@ -304,7 +321,8 @@ def schedule_for_op(op, seg_width: int, m_rows: int | None = None
                                 resample=op.resample)
     if op.kind == "conv_dw":
         return conv_dw_schedule(op.h_in, op.h_out, op.w_in * ci,
-                                op.w_out * co, rs=op.rs, stride=op.stride)
+                                op.w_out * co, rs=op.rs, stride=op.stride,
+                                padding=op.padding)
     if op.kind == "conv_k2d":
         return conv_k2d_schedule(op.h_in, op.h_out, op.w_in * ci,
                                  op.w_out * co, k=op.rs, stride=op.stride,

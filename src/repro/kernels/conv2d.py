@@ -130,14 +130,14 @@ def ring_conv_pw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
 def _dw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
                sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
                h_in: int, w_in: int, h_out: int, w_out: int, c: int,
-               rs: int, stride: int, activation: str | None):
+               rs: int, stride: int, pad_v: int, pad_h: int,
+               activation: str | None):
     p = pl.program_id(0)
     segs = _segs(c)
-    pad = (rs - 1) // 2
     acc = jnp.zeros((w_out, c), jnp.float32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(rs):
-        src = p * stride - pad + r
+        src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
         srcc = jnp.clip(src, 0, h_in - 1)
         off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
@@ -148,7 +148,7 @@ def _dw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
         row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
             .astype(jnp.float32)
         for s in range(rs):
-            cols = qs * stride - pad + s
+            cols = qs * stride - pad_h + s
             valid_c = (cols >= 0) & (cols < w_in)
             tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
             ok = valid_r & valid_c[:, None]
@@ -171,17 +171,22 @@ def _dw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
 @functools.partial(
     jax.jit,
     static_argnames=("h_in", "w_in", "h_out", "w_out", "c", "rs", "stride",
-                     "in_ptr", "out_ptr", "activation", "interpret"),
+                     "padding", "in_ptr", "out_ptr", "activation",
+                     "interpret"),
     donate_argnums=(0,))
 def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
                  w_in: int, h_out: int, w_out: int, c: int, rs: int = 3,
-                 stride: int = 1, in_ptr: int = 0, out_ptr: int = 0,
-                 activation: str | None = None,
+                 stride: int = 1, padding: str = "same", in_ptr: int = 0,
+                 out_ptr: int = 0, activation: str | None = None,
                  interpret: bool = False) -> jax.Array:
-    """Depthwise RSxRS conv with 'same' padding inside the ring.
+    """Depthwise RSxRS conv inside the ring.
 
     ``w``: [rs, rs, c]; output row ``p`` reads the clamped input halo
-    rows ``p*stride - pad .. + rs - 1`` (masked at the edges)."""
+    rows ``p*stride - pad .. + rs - 1`` (masked at the edges).  The
+    slice-padding modes (``same_top``/``same_mid``) drop the vertical
+    top pad while keeping the horizontal one."""
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
+
     n_seg = pool.shape[0]
     segs = _segs(c)
     if n_seg % (w_in * segs) or n_seg % (w_out * segs) \
@@ -190,6 +195,7 @@ def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
     kernel = functools.partial(
         _dw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg, h_in=h_in,
         w_in=w_in, h_out=h_out, w_out=w_out, c=c, rs=rs, stride=stride,
+        pad_v=conv_k2d_pad(rs, padding), pad_h=conv_k2d_pad_w(rs, padding),
         activation=activation)
     return pl.pallas_call(
         kernel,
@@ -219,14 +225,14 @@ def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
 def _k2d_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
                 sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
                 h_in: int, w_in: int, h_out: int, w_out: int, c_in: int,
-                c_out: int, k: int, stride: int, pad: int,
+                c_out: int, k: int, stride: int, pad_v: int, pad_h: int,
                 activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
     acc = jnp.zeros((w_out, c_out), jnp.float32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(k):
-        src = p * stride - pad + r
+        src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
         srcc = jnp.clip(src, 0, h_in - 1)
         off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
@@ -237,7 +243,7 @@ def _k2d_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
         row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
             .astype(jnp.float32)
         for s in range(k):
-            cols = qs * stride - pad + s
+            cols = qs * stride - pad_h + s
             valid_c = (cols >= 0) & (cols < w_in)
             tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
             ok = valid_r & valid_c[:, None]
@@ -277,7 +283,7 @@ def ring_conv_k2d(pool: jax.Array, w: jax.Array, b: jax.Array, *,
     halo rows ``p*stride - pad .. + k - 1`` (rows/cols outside the image
     masked to the zero padding), dots each tap against the Flash weight
     slice and RAMStores one output image row at the solved offset."""
-    from ..core.rowsched import conv_k2d_pad
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
 
     n_seg = pool.shape[0]
     ksegs, nsegs = _segs(c_in), _segs(c_out)
@@ -287,8 +293,8 @@ def ring_conv_k2d(pool: jax.Array, w: jax.Array, b: jax.Array, *,
     kernel = functools.partial(
         _k2d_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
-        c_out=c_out, k=k, stride=stride, pad=conv_k2d_pad(k, padding),
-        activation=activation)
+        c_out=c_out, k=k, stride=stride, pad_v=conv_k2d_pad(k, padding),
+        pad_h=conv_k2d_pad_w(k, padding), activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(h_out,),

@@ -207,14 +207,14 @@ def ring_conv_pw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
 def _dw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
                n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
-               c: int, rs: int, stride: int, activation: str | None):
+               c: int, rs: int, stride: int, pad_v: int, pad_h: int,
+               activation: str | None):
     p = pl.program_id(0)
     segs = _segs(c)
-    pad = (rs - 1) // 2
     acc = jnp.zeros((w_out, c), jnp.int32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(rs):
-        src = p * stride - pad + r
+        src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
         srcc = jnp.clip(src, 0, h_in - 1)
         off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
@@ -225,7 +225,7 @@ def _dw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
         row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
             .astype(jnp.int32)
         for s in range(rs):
-            cols = qs * stride - pad + s
+            cols = qs * stride - pad_h + s
             valid_c = (cols >= 0) & (cols < w_in)
             tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
             ok = valid_r & valid_c[:, None]
@@ -248,15 +248,18 @@ def _dw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
 @functools.partial(
     jax.jit,
     static_argnames=("h_in", "w_in", "h_out", "w_out", "c", "rs", "stride",
-                     "in_ptr", "out_ptr", "activation", "interpret"),
+                     "padding", "in_ptr", "out_ptr", "activation",
+                     "interpret"),
     donate_argnums=(0,))
 def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
                    mult: jax.Array, shift: jax.Array, *, h_in: int,
                    w_in: int, h_out: int, w_out: int, c: int, rs: int = 3,
-                   stride: int = 1, in_ptr: int = 0, out_ptr: int = 0,
-                   activation: str | None = None,
+                   stride: int = 1, padding: str = "same", in_ptr: int = 0,
+                   out_ptr: int = 0, activation: str | None = None,
                    interpret: bool = False) -> jax.Array:
-    """Int8 depthwise RSxRS conv ('same' padding) inside the ring."""
+    """Int8 depthwise RSxRS conv inside the ring."""
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
+
     n_seg = pool.shape[0]
     segs = _segs(c)
     if n_seg % (w_in * segs) or n_seg % (w_out * segs) \
@@ -265,6 +268,7 @@ def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
     kernel = functools.partial(
         _dw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg, h_in=h_in,
         w_in=w_in, h_out=h_out, w_out=w_out, c=c, rs=rs, stride=stride,
+        pad_v=conv_k2d_pad(rs, padding), pad_h=conv_k2d_pad_w(rs, padding),
         activation=activation)
     return pl.pallas_call(
         kernel,
@@ -296,14 +300,14 @@ def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
 def _k2d_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                 y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
                 n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
-                c_in: int, c_out: int, k: int, stride: int, pad: int,
-                activation: str | None):
+                c_in: int, c_out: int, k: int, stride: int, pad_v: int,
+                pad_h: int, activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
     acc = jnp.zeros((w_out, c_out), jnp.int32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(k):
-        src = p * stride - pad + r
+        src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
         srcc = jnp.clip(src, 0, h_in - 1)
         off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
@@ -314,7 +318,7 @@ def _k2d_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
         row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
             .astype(jnp.int32)
         for s in range(k):
-            cols = qs * stride - pad + s
+            cols = qs * stride - pad_h + s
             valid_c = (cols >= 0) & (cols < w_in)
             tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
             ok = valid_r & valid_c[:, None]
@@ -351,7 +355,7 @@ def ring_conv_k2d_q(pool: jax.Array, w: jax.Array, b: jax.Array,
     """Int8 k x k conv inside the ring: int8 halo rows -> int32 dot per
     tap -> per-output-channel requantize on store (symmetric zero point
     keeps the padding exact)."""
-    from ..core.rowsched import conv_k2d_pad
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
 
     n_seg = pool.shape[0]
     ksegs, nsegs = _segs(c_in), _segs(c_out)
@@ -361,8 +365,8 @@ def ring_conv_k2d_q(pool: jax.Array, w: jax.Array, b: jax.Array,
     kernel = functools.partial(
         _k2d_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
-        c_out=c_out, k=k, stride=stride, pad=conv_k2d_pad(k, padding),
-        activation=activation)
+        c_out=c_out, k=k, stride=stride, pad_v=conv_k2d_pad(k, padding),
+        pad_h=conv_k2d_pad_w(k, padding), activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(h_out,),

@@ -1,0 +1,376 @@
+"""Partial execution (DESIGN.md §13): the spatial-slicing subsystem.
+
+Covers the three proof obligations of the subsystem:
+
+  * geometry — slice windows tile the output, halos chain backward
+    through the conv chain exactly as :class:`ChainStep.in_window`
+    demands, and the Pareto frontier is monotone (more slices, less
+    ring),
+  * safety — the sliced program carries the SAME static certificate the
+    sim clobber oracle computes (differential static-vs-sim),
+  * numerics — sliced execution is bit-identical to unsliced execution
+    (fp32 and int8, jnp + pallas; the slow lane).
+
+Plus the driver-facing policy (``plan_partial`` auto/force), the
+compile-pipeline knob (``partial="auto"|N``), the VMCU301/VMCU303 lint
+findings, and the artifact roundtrip.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis import lint_program, verify_program
+from repro.compile.driver import _resolve_net
+from repro.graph import certify_net, init_net_params
+from repro.graph.netplan import _plan_net as plan_net
+from repro.graph.run import (QuantizedNet, _quantize_net, run_net_quantized)
+from repro.partial import (PartialPlanError, apply_partial, candidate,
+                           chain_range, chain_steps, estimate_slices,
+                           pareto, plan_partial, program_macs,
+                           recompute_spans, slice_layout)
+from repro.partial.slicer import even_bounds
+
+M4 = repro.get_target("cortex-m4")
+
+
+def _byte_plan(net):
+    graph = _resolve_net(net)
+    return plan_net(graph, dtype="int8", fused_exec=False,
+                    **M4.byte_ring_kwargs)
+
+
+def _ranges(plan):
+    return [(g.op_lo, g.op_hi) for g in plan.groups]
+
+
+@pytest.fixture(scope="module")
+def vww_byte():
+    return _byte_plan("mcunet-5fps-vww")
+
+
+@pytest.fixture(scope="module")
+def imagenet_byte():
+    return _byte_plan("mcunet-320kb-imagenet")
+
+
+# ---------------------------------------------------------------------------
+# Geometry: windows, halos, frontier.
+# ---------------------------------------------------------------------------
+
+def test_even_bounds_tile_monotonically():
+    for h, n in ((32, 4), (17, 3), (7, 7)):
+        b = even_bounds(h, n)
+        assert b[0] == 0 and b[-1] == h and len(b) == n + 1
+        assert all(b[i] < b[i + 1] for i in range(n))
+
+
+def _sliceable_chains(plan):
+    out = []
+    for lo, hi in _ranges(plan):
+        rng = chain_range(plan.program, lo, hi)
+        if not isinstance(rng, str):
+            out.append(((lo, hi), rng))
+    return out
+
+
+def test_imagenet_has_sliceable_groups(imagenet_byte):
+    chains = _sliceable_chains(imagenet_byte)
+    assert len(chains) >= 3  # the pw/dw/pw interior of the net
+
+
+def test_chain_range_rejects_first_group(vww_byte, imagenet_byte):
+    for plan in (vww_byte, imagenet_byte):
+        lo, hi = _ranges(plan)[0]
+        why = chain_range(plan.program, lo, hi)
+        assert isinstance(why, str) and "first group" in why
+
+
+def test_chain_range_excludes_trailing_residual_add(imagenet_byte):
+    ops = imagenet_byte.program.ops
+    trimmed = 0
+    for (glo, ghi), (lo, hi) in _sliceable_chains(imagenet_byte):
+        assert lo == glo
+        assert all(o.kind in ("conv_pw", "conv_dw", "conv_k2d")
+                   for o in ops[lo:hi])
+        if ops[ghi - 1].kind == "add":
+            assert hi == ghi - 1  # the add consumes, it is not sliced
+            trimmed += 1
+    assert trimmed >= 1
+
+
+def test_chain_range_is_idempotent_on_chain_ranges(imagenet_byte):
+    for _, (lo, hi) in _sliceable_chains(imagenet_byte):
+        assert chain_range(imagenet_byte.program, lo, hi) == (lo, hi)
+
+
+def test_slice_windows_tile_output_and_chain_halos(imagenet_byte):
+    (glo, ghi), (lo, hi) = _sliceable_chains(imagenet_byte)[0]
+    steps = chain_steps(imagenet_byte.program.ops[lo:hi])
+    layout = slice_layout(steps, 4)
+    assert layout is not None and layout.n_slices == 4
+    L = len(steps)
+    for j, st in enumerate(steps):
+        bands = [(w[j].out_lo, w[j].out_hi) for w in layout.windows]
+        assert bands[0][0] == 0 and bands[-1][1] == st.h_out
+        if j == L - 1:
+            # final output bands tile [0, h_out) exactly, no gaps
+            assert all(a[1] == b[0] for a, b in zip(bands, bands[1:]))
+        else:
+            # interior bands overlap by the recomputed halo rows
+            assert all(a[1] >= b[0] for a, b in zip(bands, bands[1:]))
+        for w in layout.windows:
+            win = w[j]
+            # each input window is exactly what in_window demands
+            assert (win.in_lo, win.in_hi) == \
+                st.in_window(win.out_lo, win.out_hi)
+            # first slice keeps the op's padding; interior slices use a
+            # local mode (never a partial top halo)
+            if win.out_lo == 0:
+                assert win.padding == st.padding
+            else:
+                assert win.padding in ("same_mid", "valid")
+        # position j's input windows are position j-1's output bands
+        if j > 0:
+            for w in layout.windows:
+                assert (w[j].in_lo, w[j].in_hi) == \
+                    (w[j - 1].out_lo, w[j - 1].out_hi)
+        # the shared scratch band covers every slice's window there
+        if j >= 1:
+            assert layout.band_rows[j] == \
+                max(w[j].h_in for w in layout.windows)
+    # halo rows are recomputed, so the trade has a strictly positive
+    # latency price on a k x k chain
+    assert layout.extra_macs > 0
+    assert all(r >= 0 for r in layout.extra_in_rows)
+    assert L == hi - lo
+
+
+def test_pareto_frontier_is_monotone(imagenet_byte):
+    prog = imagenet_byte.program
+    (glo, ghi), (lo, hi) = _sliceable_chains(imagenet_byte)[0]
+    # group range and chain range resolve to the same frontier
+    front = pareto(prog, glo, ghi)
+    assert [c.as_dict() for c in front] == \
+        [c.as_dict() for c in pareto(prog, lo, hi)]
+    assert len(front) >= 2
+    for a, b in zip(front, front[1:]):
+        assert b.n_slices > a.n_slices
+        assert b.region_segments < a.region_segments  # strictly improving
+    two = candidate(prog, glo, ghi, front[0].n_slices)
+    assert two is not None and two.as_dict() == front[0].as_dict()
+    assert candidate(prog, glo, ghi, 10 ** 6) is None  # > h_out rows
+
+
+def test_recompute_spans_match_planner(vww_byte, imagenet_byte):
+    # the surgery's span accounting reproduces the planner's ring
+    for plan in (vww_byte, imagenet_byte):
+        assert recompute_spans(plan.program.ops) == \
+            plan.program.pool_segments
+
+
+# ---------------------------------------------------------------------------
+# Policy: plan_partial auto / force, and the sliced-program certificate.
+# ---------------------------------------------------------------------------
+
+def _assert_static_equals_sim(program):
+    res = verify_program(program)
+    assert res.safe is True, [str(d) for d in res.diagnostics]
+    sim = certify_net(program)
+    want = {"peak_live": sim.peak_live, "reads": sim.reads,
+            "writes": sim.writes}
+    assert {k: res.stats[k] for k in want} == want
+
+
+def test_plan_partial_none_when_net_fits(vww_byte):
+    assert plan_partial(vww_byte.program, _ranges(vww_byte),
+                        M4.sram_bytes) is None
+
+
+def test_plan_partial_auto_fits_imagenet_on_m4(imagenet_byte):
+    prog = imagenet_byte.program
+    assert prog.pool_bytes > M4.sram_bytes  # the overflow being resolved
+    pp = plan_partial(prog, _ranges(imagenet_byte), M4.sram_bytes)
+    assert pp is not None
+    assert pp.ring_bytes_before == prog.pool_bytes
+    assert pp.ring_bytes_after == pp.program.pool_bytes <= M4.sram_bytes
+    assert pp.net_macs == program_macs(prog)
+    assert 0 < pp.mac_overhead < 0.15  # the latency price is bounded
+    s = pp.summary()
+    assert s["total_slices"] == sum(pp.choices.values()) >= 2
+    assert s["n_sliced_groups"] == len(pp.choices) >= 1
+    assert len(pp.parents) == len(pp.program.ops)
+    # every slice points back into its unsliced group
+    for i, par in enumerate(pp.parents):
+        assert pp.program.ops[i].kind == prog.ops[par].kind
+
+
+@pytest.mark.slow
+def test_sliced_imagenet_static_certificate_equals_sim(imagenet_byte):
+    pp = plan_partial(imagenet_byte.program, _ranges(imagenet_byte),
+                      M4.sram_bytes)
+    _assert_static_equals_sim(pp.program)
+
+
+def test_plan_partial_force_slices_pinning_group(vww_byte):
+    # VWW fits — force=N still slices the most-pinning sliceable group
+    pp = plan_partial(vww_byte.program, _ranges(vww_byte), M4.sram_bytes,
+                      force=4)
+    assert list(pp.choices.values()) == [4]
+    assert len(pp.program.ops) > len(vww_byte.program.ops)
+    _assert_static_equals_sim(pp.program)  # differential static-vs-sim
+
+
+def test_plan_partial_force_infeasible_raises(vww_byte):
+    with pytest.raises(PartialPlanError, match="cannot slice any group"):
+        plan_partial(vww_byte.program, _ranges(vww_byte), M4.sram_bytes,
+                     force=10 ** 6)
+
+
+def test_estimate_slices_advisory(vww_byte, imagenet_byte):
+    # byte geometry: one segment is one byte
+    est = estimate_slices(imagenet_byte.program, _ranges(imagenet_byte),
+                          M4.sram_bytes)
+    assert isinstance(est, int) and est >= 2
+    assert estimate_slices(vww_byte.program, _ranges(vww_byte),
+                           M4.sram_bytes) is None  # nothing over budget
+
+
+# ---------------------------------------------------------------------------
+# Lint: VMCU301 names the group, VMCU303 advertises the resolution.
+# ---------------------------------------------------------------------------
+
+def test_lint_vmcu301_names_group_and_vmcu303_advises(vww_byte):
+    diags = lint_program(vww_byte.program, "cortex-m4",
+                         deploy_bytes=200_000,
+                         bottleneck_group="mb5",
+                         partial_slices=7)
+    by_code = {d.code: d for d in diags}
+    assert "VMCU301" in by_code
+    assert "fusion group 'mb5'" in by_code["VMCU301"].message
+    assert "VMCU303" in by_code
+    assert by_code["VMCU303"].severity == "warning"
+    assert "est. 7 slice(s)" in by_code["VMCU303"].message
+    assert "partial='auto'" in by_code["VMCU303"].message
+    # no advisory without a slice estimate
+    diags = lint_program(vww_byte.program, "cortex-m4",
+                         deploy_bytes=200_000)
+    assert "VMCU303" not in {d.code for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# Compile pipeline: the partial="auto"|N knob.
+# ---------------------------------------------------------------------------
+
+def test_compile_rejects_bad_partial_values():
+    with pytest.raises(ValueError, match="partial must be"):
+        repro.compile("ds-cnn", "cortex-m4", dtype="int8",
+                      quantize=False, partial="sideways")
+
+
+def test_compile_partial_requires_unfused():
+    with pytest.raises(repro.CompileError, match="unfused"):
+        repro.compile("ds-cnn", "cortex-m4", dtype="float32",
+                      fused_exec=True, partial="auto")
+
+
+def test_compile_partial_not_needed_when_net_fits():
+    cn = repro.compile("mcunet-5fps-vww", "cortex-m4", dtype="int8",
+                       quantize=False, certify=False, partial="auto")
+    note = next(p.note for p in cn.passes if p.name == "partial")
+    assert "not needed" in note
+    assert cn.partial is None
+    rep = cn.report()
+    assert rep["partial"] is None
+    assert rep["byte_ring_bytes"] == rep["deploy_bytes"] > 0
+    assert rep["fits_sram"] is True
+
+
+def test_cli_partial_flag_rejects_garbage(capsys):
+    from repro.cli import main as cli_main
+
+    assert cli_main(["--partial", "sideways"]) == 2
+    assert "--partial" in capsys.readouterr().err
+
+
+@pytest.mark.slow
+def test_compile_imagenet_partial_auto_artifact_roundtrip(tmp_path):
+    # the acceptance case: the net that used to raise SRAMBudgetError
+    with pytest.raises(repro.SRAMBudgetError, match="partial='auto'"):
+        repro.compile("mcunet-320kb-imagenet", "cortex-m4", dtype="int8",
+                      quantize=False, certify=False)
+    cn = repro.compile("mcunet-320kb-imagenet", "cortex-m4", dtype="int8",
+                       quantize=False, certify="static", partial="auto")
+    rep = cn.report()
+    assert rep["fits_sram"] is True
+    assert rep["deploy_bytes"] <= M4.sram_bytes
+    p = cn.mcu["partial"]
+    assert p["total_slices"] >= 2
+    assert p["ring_bytes_after"] <= M4.sram_bytes < p["ring_bytes_before"]
+    # the acceptance bound: post-slice ring within 1.5x of the per-group
+    # Eq.-(2) bottleneck
+    assert p["ring_bytes_after"] / cn.mcu_bottleneck_bytes < 1.5
+    assert cn.certificate["clobbers"] == 0
+    note = next(q.note for q in cn.passes if q.name == "partial")
+    assert "slices; ring" in note
+
+    from repro.analysis import lint_artifact
+
+    path = str(tmp_path / "sliced.json")
+    cn.save(path)
+    lrep = lint_artifact(path)
+    assert lrep.clean and lrep.result.safe is True, \
+        [str(d) for d in lrep.result.diagnostics]
+    rt = repro.load(path)
+    assert rt.partial == cn.partial
+    assert rt.certificate == cn.certificate
+    assert rt.report()["deploy_bytes"] == rep["deploy_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Numerics: sliced == unsliced (the conformance rows).
+# ---------------------------------------------------------------------------
+
+def _input_for(program, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((program.in_rows, program.in_dim),
+                               dtype=np.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sliced_fp32_matches_unsliced_resnet8(backend):
+    # resnet-8 is the k x k chain case: slice halos must reproduce the
+    # conv_k2d boundary rows exactly
+    kw = dict(dtype="float32", fused_exec=False, certify=False,
+              check_budget=False)
+    u = repro.compile("resnet-8", "cortex-m4", **kw)
+    s = repro.compile("resnet-8", "cortex-m4", partial=4, **kw)
+    assert s.partial is not None
+    assert s.partial["total_slices"] == 4
+    x = _input_for(u.program)
+    yu = np.asarray(u.run(x, backend=backend))
+    ys = np.asarray(s.run(x, backend=backend))
+    np.testing.assert_allclose(ys, yu, rtol=0, atol=0)  # bit-exact
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sliced_int8_bitexact_vww(vww_byte, backend):
+    # quantize ONCE, then share every op's qparams across its slices:
+    # requant constants are identical, so execution stays bit-exact
+    graph = _resolve_net("mcunet-5fps-vww")
+    plan = plan_net(graph, dtype="int8", fused_exec=False)
+    params = init_net_params(plan)
+    q = _quantize_net(plan, params, n_calib=2)
+    pp = plan_partial(vww_byte.program, _ranges(vww_byte), M4.sram_bytes,
+                      force=4)
+    sprog, spar = apply_partial(q.program, pp.choices)
+    assert certify_net(sprog).peak_live > 0  # sim oracle: no clobbers
+    sq = QuantizedNet(plan=q.plan, program=sprog,
+                      params=[q.params[p] for p in spar],
+                      qparams=[q.qparams[p] for p in spar],
+                      act_scales=q.act_scales)
+    x = _input_for(plan.program, seed=7)
+    yu = np.asarray(run_net_quantized(q, x, backend=backend))
+    ys = np.asarray(run_net_quantized(sq, x, backend=backend))
+    assert np.array_equal(ys, yu)
