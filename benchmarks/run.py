@@ -10,6 +10,8 @@
                    (DESIGN.md §13): ring-fits-SRAM vs recompute-MAC trade
   compile_pipeline — repro.compile() pass timings + plan-artifact size
                    for the MCUNet-VWW int8 deployment (§9)
+  streaming      — per-frame latency + state-resident ring bytes of the
+                   streaming DS-CNN vs full recompute (DESIGN.md §14)
   capacity       — Fig. 11/12 (image/channel scaling at equal RAM)
   pool_footprint — XLA-measured ring-pool footprint (TPU adaptation)
   roofline_table — §Roofline from dry-run artifacts (if present)
@@ -36,7 +38,7 @@ import jax
 
 from . import (capacity, energy_proxy, full_network, int8_network, latency,
                model_zoo, multi_layer, partial_execution, pool_footprint,
-               roofline_table, single_layer, traffic)
+               roofline_table, single_layer, streaming, traffic)
 from .timing import bench_us
 
 BENCH_JSON = "BENCH_vmcu.json"
@@ -164,6 +166,7 @@ SECTIONS = [
     ("Traffic", traffic.run, traffic.main, True),
     ("Compile_pipeline", _compile_pipeline_rows, _compile_pipeline_show,
      True),
+    ("Streaming", streaming.run, streaming.main, True),
     ("Fig11_12_capacity", capacity.run, capacity.main, True),
     ("TPU_pool_footprint", pool_footprint.run, pool_footprint.main, False),
     ("TPU_roofline_table", None, lambda rows: roofline_table.main(), False),
@@ -271,6 +274,10 @@ def _footprints(payload: dict) -> dict[str, float]:
         out[f"compile/{r['net']}/int8_pool_kb"] = r["int8_pool_kb"]
         out[f"compile/{r['net']}/mcu_bottleneck_kb"] = \
             r["mcu_bottleneck_kb"]
+    for r in sections.get("Streaming", []):
+        out[f"stream/{r['net']}/state_kb"] = r["state_kb"]
+        out[f"stream/{r['net']}/ring_kb"] = r["ring_kb"]
+        out[f"stream/{r['net']}/step_bytes_kb"] = r["step_bytes_kb"]
     for r in sections.get("Traffic", []):
         out[f"traffic/{r['net']}/bytes_moved_kb"] = r["bytes_moved_kb"]
         out[f"traffic/{r['net']}/watermark_kb"] = r["watermark_kb"]

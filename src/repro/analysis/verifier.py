@@ -16,6 +16,14 @@ three ways ``run_program_sim`` can raise :class:`PoolClobberError`:
     clobbered byte and step,
   * the final outputs failing to survive the ring.
 
+Streaming programs (``repro.stream``) add a fourth lifetime class:
+persistent state regions (``conv_stream`` windows, ``gru_cell`` hidden
+vectors) that live across invocations.  They are registered as live
+records up front and NEVER freed, so the same write sweeps prove frame
+traffic can never touch them — ``VMCU211``/``VMCU212``/``VMCU213`` —
+and one verified step certifies an unbounded step horizon (see
+``stream_horizon`` in the stats).
+
 Soundness against the byte oracle (DESIGN.md §11): for the monotone
 schedules the planner emits, the live part of the tensor being streamed
 over is always a contiguous suffix ``[needed_min(t+1), in_rows)`` at
@@ -42,10 +50,15 @@ import numpy as np
 
 from ..core.program import EXECUTABLE_KINDS, PoolOp, PoolProgram
 from ..core.rowsched import RowSchedule, schedule_for_op
+from ..core.vpool import segments_for
 from .intervals import first_static_clash, first_stream_clash
 
 _ROWSCHED_KINDS = ("conv_pw", "conv_dw", "conv_k2d", "ib_fused", "add",
-                   "pool_avg")
+                   "pool_avg", "conv_stream", "gru_cell")
+
+#: Streaming op kinds whose ``state_ptr``/``state_segments`` region holds
+#: persistent cross-invocation state (the fourth lifetime class).
+_STREAM_KINDS = ("conv_stream", "gru_cell")
 
 #: Stable diagnostic codes (DESIGN.md §11 carries the full table).
 CODES = {
@@ -65,6 +78,12 @@ CODES = {
     "VMCU203": "residual pointer does not reach the residual source's "
                "live record",
     "VMCU204": "residual source tensor is not live",
+    "VMCU211": "persistent stream state clobbered by frame traffic "
+               "(staged input or an op's output overwrites live state)",
+    "VMCU212": "stream state extent wrong — the step cannot write the "
+               "full state back",
+    "VMCU213": "stale-state read (state region wraps the ring or "
+               "overlaps another op's state)",
     "VMCU301": "pool exceeds the target's SRAM budget",
     "VMCU302": "parameter payload exceeds the target's flash budget",
     "VMCU303": "SRAM overflow resolvable by partial execution "
@@ -193,7 +212,7 @@ def _sched_key(op: PoolOp, seg_width: int,
     rows = op.rows_in or m_rows
     return (op.kind, rows, op.h_in, op.h_out, op.w_in, op.w_out,
             op.d_in, op.d_out, op.stride, op.rs, op.padding,
-            op.resample, op.residual, seg_width)
+            op.resample, op.residual, op.hop, seg_width)
 
 
 _SCHED_CACHE: dict[tuple, _SchedInfo] = {}
@@ -467,6 +486,79 @@ def verify_program(program: PoolProgram) -> VerifyResult:
     reads_total = 0
     writes_total = first.in_segments
 
+    # -- persistent stream state: pre-registered live records -------------
+    # State regions (repro.stream) outlive every frame tensor: the sim
+    # pre-writes them under ("state", i, j) owners before staging, so the
+    # verifier registers them as live records that are NEVER freed — the
+    # static-clash sweep (f) below then proves every frame write misses
+    # them, which is exactly the VMCU211 obligation.  Records get rid
+    # -(100 + i) so they can never collide with tensor ids (>= 0).
+    state_rids: list[int] = []
+    state_total = 0
+    for i, op in enumerate(program.ops):
+        if not op.state_segments:
+            continue
+        if op.kind not in _STREAM_KINDS:
+            return _inconclusive(
+                f"op kind {op.kind!r} carries state_segments but has no "
+                "streaming semantics", op_index=i)
+        expect = (op.h_in * op.w_in
+                  * segments_for(op.d_in, program.seg_width)
+                  if op.kind == "conv_stream"
+                  else segments_for(op.d_out, program.seg_width))
+        if op.state_segments != expect:
+            d = Diagnostic(
+                "VMCU212",
+                f"{op.kind} op {i} carries {op.state_segments} state "
+                f"segments but its geometry needs {expect} — the step "
+                "cannot write the full state back",
+                op_index=i)
+            return VerifyResult(safe=False, diagnostics=[d])
+        base = op.state_ptr % n
+        if base + op.state_segments > n:
+            d = Diagnostic(
+                "VMCU213",
+                f"{op.kind} op {i} state wraps the ring (base {base} + "
+                f"{op.state_segments} segments > n={n}); the next step "
+                "would read re-staged frame bytes as state",
+                op_index=i, segment=base, byte=base * seg_bytes)
+            return VerifyResult(safe=False, diagnostics=[d])
+        for rid in state_rids:
+            other = records[rid]
+            clash = first_static_clash(
+                op.state_segments, other.length,
+                (other.base - op.state_ptr) % n, n)
+            if clash is not None:
+                slot = (op.state_ptr + clash[0]) % n
+                d = Diagnostic(
+                    "VMCU213",
+                    f"state of op {i} overlaps state of op "
+                    f"{-(rid + 100)} at pool slot {slot} — each step "
+                    "reads the other's bytes as its own stale state",
+                    op_index=i, segment=slot, byte=slot * seg_bytes)
+                return VerifyResult(safe=False, diagnostics=[d])
+        rid = -(100 + i)
+        records[rid] = _Record(rid, op.state_ptr, op.state_segments)
+        state_rids.append(rid)
+        state_total += op.state_segments
+    if state_total:
+        for rid in state_rids:   # staging must not overwrite live state
+            other = records[rid]
+            clash = first_static_clash(
+                first.in_segments, other.length,
+                (other.base - first.in_ptr) % n, n)
+            if clash is not None:
+                slot = (first.in_ptr + clash[0]) % n
+                d = Diagnostic(
+                    "VMCU211",
+                    f"staged frame input clobbers live stream state of "
+                    f"op {-(rid + 100)} at pool slot {slot}",
+                    op_index=0, step=0, segment=slot,
+                    byte=slot * seg_bytes)
+                return VerifyResult(safe=False, diagnostics=[d])
+        peak += state_total
+        writes_total += state_total
+
     for i, op in enumerate(program.ops):
         info = _sched_info(op, program.seg_width, program.m_rows)
         if info.monotone_error is not None:
@@ -552,10 +644,12 @@ def verify_program(program: PoolProgram) -> VerifyResult:
                         for _ in rows]
                 step = ev_t[min(w // oc, len(ev_t) - 1)]
             slot = (op.out_ptr + w) % n
+            victim = (f"stream state of op {-(victim_rid + 100)}"
+                      if victim_rid < 0 else f"tensor {victim_rid}")
             return ((step, 3, w), Diagnostic(
                 code,
                 f"{op.kind} op {i} writes output segment {w} over live "
-                f"segment {victim_seg} of tensor {victim_rid} at pool "
+                f"segment {victim_seg} of {victim} at pool "
                 f"slot {slot}", op_index=i, step=step, segment=slot,
                 byte=slot * seg_bytes))
 
@@ -602,7 +696,8 @@ def verify_program(program: PoolProgram) -> VerifyResult:
                 out_tot, other.length, (other.base - op.out_ptr) % n, n)
             if clash is not None:
                 candidates.append(_write_diag(
-                    "VMCU102", clash[0], rid, clash[1]))
+                    "VMCU211" if rid < 0 else "VMCU102",
+                    clash[0], rid, clash[1]))
 
         if candidates:
             _, diag = min(candidates, key=lambda c: c[0])
@@ -612,6 +707,11 @@ def verify_program(program: PoolProgram) -> VerifyResult:
         reads_total += info.n_read_events * sched.in_chunk \
             + info.n_aux_events * sched.aux_chunk
         writes_total += out_tot
+        if op.state_segments:
+            # whole-state read then same-owner whole-state rewrite (the
+            # window shift / hidden-state update) — mirrors _sim_stream_op
+            reads_total += op.state_segments
+            writes_total += op.state_segments
         live_before = sum(r.length for r in records.values())
         stream = info.stream_peak_hold if op.hold_input \
             else info.stream_peak
@@ -661,7 +761,19 @@ def verify_program(program: PoolProgram) -> VerifyResult:
             op_index=len(program.ops) - 1)
         return VerifyResult(safe=False, diagnostics=[d])
     reads_total += last.out_segments
+    if state_total:
+        reads_total += state_total   # ...and so must persistent state
 
     stats = {"peak_live": peak, "reads": reads_total,
              "writes": writes_total, "n_segments": n}
+    if state_total:
+        # Multi-step horizon: one verified step plus the invariant that
+        # the only records alive at end-of-step are the state regions and
+        # the final output (which the stream session frees after fetching
+        # it) means step k+1 starts from the SAME abstract state as step
+        # k — the per-step proof lifts to an unbounded horizon.
+        stats["n_states"] = len(state_rids)
+        stats["state_segments"] = state_total
+        leftover = set(records) - {len(program.ops)} - set(state_rids)
+        stats["stream_horizon"] = "unbounded" if not leftover else 1
     return VerifyResult(safe=True, diagnostics=[], stats=stats)

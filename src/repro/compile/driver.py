@@ -38,8 +38,8 @@ import time
 
 from ..core.codegen import emit_program
 from ..core.program import PoolProgram, dtype_itemsize
-from ..graph.ir import (Graph, build_ds_cnn, build_mcunet,
-                        build_mobilenet_v1, build_resnet8)
+from ..graph.ir import (Graph, build_ad_autoencoder, build_ds_cnn,
+                        build_mcunet, build_mobilenet_v1, build_resnet8)
 from ..graph.netplan import NetPlan, _plan_net
 from ..graph.run import (QuantizedNet, _quantize_net, certify_net,
                          init_net_params, run_net, run_net_quantized)
@@ -79,15 +79,27 @@ def _imagenet() -> Graph:
                         num_classes=1000)
 
 
+def _ds_cnn_stream() -> Graph:
+    from ..stream import to_streaming
+
+    return to_streaming(build_ds_cnn())
+
+
 # MLPerf-Tiny-class model zoo: real k x k spatial convs (conv_k2d)
-# through the same one-ring planner as the MCUNet tables.
+# through the same one-ring planner as the MCUNet tables, plus the
+# FC-heavy ToyADMOS anomaly-detection autoencoder and the per-frame
+# streaming form of DS-CNN (persistent window state on the ring).
 _NET_BUILDERS = {"mcunet-5fps-vww": _vww, "mcunet-320kb-imagenet": _imagenet,
                  "ds-cnn": build_ds_cnn, "resnet-8": build_resnet8,
-                 "mobilenetv1-0.25": build_mobilenet_v1}
+                 "mobilenetv1-0.25": build_mobilenet_v1,
+                 "ad-toyadmos": build_ad_autoencoder,
+                 "ds-cnn-stream": _ds_cnn_stream}
 _NET_ALIASES = {"mcunet-vww": "mcunet-5fps-vww",
                 "mcunet-imagenet": "mcunet-320kb-imagenet",
                 "dscnn": "ds-cnn", "resnet8": "resnet-8",
-                "mobilenet-v1": "mobilenetv1-0.25"}
+                "mobilenet-v1": "mobilenetv1-0.25",
+                "toyadmos": "ad-toyadmos", "ad-ae": "ad-toyadmos",
+                "dscnn-stream": "ds-cnn-stream"}
 
 
 def available_nets() -> tuple[str, ...]:
@@ -145,8 +157,10 @@ def _flash_param_bytes(program: PoolProgram,
             seen.add(parents[i])
         if op.kind in ("gemm", "conv_pw"):
             total += op.d_in * op.d_out
-        elif op.kind == "conv_k2d":
+        elif op.kind in ("conv_k2d", "conv_stream"):
             total += op.rs * op.rs * op.d_in * op.d_out
+        elif op.kind == "gru_cell":
+            total += (op.d_in + op.d_out) * 3 * op.d_out
         elif op.kind == "conv_dw":
             total += op.rs * op.rs * op.d_in
         elif op.kind == "ib_fused":
@@ -257,8 +271,40 @@ class CompiledNet:
         ``(y, TraceArtifact)`` instead of ``y``.  ``trace=False`` is the
         zero-cost path: no tracer reaches the executor and the ``jnp``
         backend keeps its whole-program jit (bit-identical output).
+
+        A leading batch dimension (``x.ndim == 3``) runs every sample
+        through the ONE solved plan: vmapped on the ``jnp`` backend
+        (one pool per lane, shared program/params), a device loop on
+        ``pallas`` (the kernels alias the pool in place per sample).
         """
         backend = backend or self.target.default_backend
+        import jax
+        import jax.numpy as jnp
+
+        xa = jnp.asarray(x)
+        if xa.ndim == 3:
+            if trace:
+                raise CompileError(
+                    "trace=True is per-invocation; trace a single "
+                    "sample, not a batch")
+            if backend != "jnp":
+                return jnp.stack([self.run(xi, backend=backend, **kwargs)
+                                  for xi in xa])
+            from ..core.executors import run_program
+
+            if self.quantized:
+                # quantize/dequantize are host-side numpy (deliberately
+                # un-traced) — batch them OUTSIDE the vmapped ring run
+                from ..quant import QParams, dequantize, quantize
+
+                qn = self.qnet
+                xq = quantize(xa, QParams(scale=qn.in_scale))
+                yq = jax.vmap(lambda s: run_program(
+                    qn.program, s, qn.qparams, backend="jnp")[0])(xq)
+                return dequantize(yq, QParams(scale=qn.out_scale))
+            params = self.ensure_params()
+            return jax.vmap(lambda s: run_program(
+                self.program, s, params, backend="jnp")[0])(xa)
         tracer = None
         if trace:
             from ..obs import RingTracer
@@ -283,6 +329,17 @@ class CompiledNet:
                           net=self.net_name, target=self.target.name,
                           spans=self.spans)
         return y, art
+
+    def stream(self, *, backend: str | None = None, trace: bool = False):
+        """Open a :class:`repro.stream.StreamSession` on this net — the
+        per-frame reset/step driver over the persistent-state ring.
+        Requires a streaming compile (``streaming=True`` or a graph
+        with ``conv_stream``/``gru_cell`` nodes)."""
+        from ..stream import StreamSession
+
+        return StreamSession(
+            self, backend=backend or self.target.default_backend,
+            trace=trace)
 
     def profile(self, x=None, *, backend: str | None = None):
         """One traced run on a deterministic input; returns the
@@ -479,8 +536,8 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
             block_rows=_UNSET, order=None, params=None, key=None,
             calib=None, n_calib: int = 2, quantize: bool = True,
             certify: bool | str = True, lint: bool = True,
-            check_budget: bool = True,
-            partial: str | int = "off") -> CompiledNet:
+            check_budget: bool = True, partial: str | int = "off",
+            streaming: bool = False) -> CompiledNet:
     """Compile ``net`` for ``target`` — the repo's deployment front door.
 
     ``net`` is a :class:`repro.graph.Graph` or a registered net name
@@ -507,6 +564,11 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     a scheduled latency/memory trade), an ``int`` forces that many
     slices on the ring-pinning group, ``"off"`` (default) keeps the
     hard budget gate.
+
+    ``streaming=True`` converts the resolved feed-forward graph to its
+    per-frame streaming form (:func:`repro.stream.to_streaming`) before
+    planning, then re-certifies the streaming plan — state liveness
+    included.  Run it with :meth:`CompiledNet.stream`.
     """
     if certify not in (True, False, "sim", "static"):
         raise ValueError(f"certify must be True/False/'sim'/'static', "
@@ -547,8 +609,14 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
     # build ----------------------------------------------------------------
     def _build():
         g = _resolve_net(net)
+        note = ""
+        if streaming:
+            from ..stream import to_streaming
+
+            g = to_streaming(g)
+            note = " (streaming form)"
         g.validate()
-        return g, f"{len(g.nodes)} nodes, {len(g.modules)} modules"
+        return g, f"{len(g.nodes)} nodes, {len(g.modules)} modules{note}"
     graph = run_pass("build", _build)
 
     # schedule -------------------------------------------------------------
@@ -751,6 +819,17 @@ def compile(net, target: str | Target = "host-sim", *, dtype=None,
                     "reads": sim.reads, "writes": sim.writes,
                     "n_segments": program.n_segments,
                     "program_sha256": artifact.program_sha256(program)}
+            state_total = sum(op.state_segments for op in program.ops)
+            if state_total:
+                # the sim observes the end-live invariant the static
+                # horizon proof relies on: only the state regions and
+                # the final output survive the step
+                cert["n_states"] = sum(1 for op in program.ops
+                                       if op.state_segments)
+                cert["state_segments"] = state_total
+                cert["stream_horizon"] = (
+                    "unbounded" if sim.live == state_total
+                    + program.ops[-1].out_segments else 1)
             return cert, (f"{note}zero clobbers; peak {sim.peak_live}/"
                           f"{program.n_segments} segments live")
         certificate = run_pass("certify", _certify)

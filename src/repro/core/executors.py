@@ -100,11 +100,20 @@ def _normalize_qparams(program: PoolProgram, params):
                          f"{len(program.ops)} ops")
     out = []
     for op, p in zip(program.ops, params):
-        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
+        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d",
+                       "conv_stream"):
             w, b, mult, shift = p
             if b is None:
                 b = jnp.zeros((op.d_out,), jnp.int32)
             out.append((w, b, mult, shift))
+        elif op.kind == "gru_cell":
+            # (w_q, u_q, b_q12, mult_x, shift_x, mult_u, shift_u):
+            # int8 input/recurrent weights, Q12 bias, per-channel requant
+            # pairs taking both accumulators to the Q12 gate domain
+            w, u, b, mx, sx, mu, su = p
+            if b is None:
+                b = jnp.zeros((3 * op.d_out,), jnp.int32)
+            out.append((w, u, b, mx, sx, mu, su))
         elif op.kind in ("add", "pool_avg"):
             out.append(tuple(p))
         else:
@@ -126,11 +135,17 @@ def _normalize_params(program: PoolProgram, params):
                          f"{len(program.ops)} ops")
     out = []
     for op, p in zip(program.ops, params):
-        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
+        if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d",
+                       "conv_stream"):
             w, b = p
             if b is None:
                 b = jnp.zeros((op.d_out,), w.dtype)
             out.append((w, b))
+        elif op.kind == "gru_cell":
+            w, u, b = p
+            if b is None:
+                b = jnp.zeros((3 * op.d_out,), w.dtype)
+            out.append((w, u, b))
         elif op.kind == "fused_mlp":
             wg, wu, wd = p
             if wg is None:  # ungated MLPs may omit the gate projection
@@ -385,6 +400,60 @@ def pool_avg_ring(pool, *, op, n_segments):
     return stage_rows(pool, y.astype(pool.dtype), op.out_ptr, n_segments)
 
 
+# -- streaming ops: ring-resident state shifted in place (repro.stream) ----
+
+def _shift_window(pool, op, n):
+    """conv_stream state update: fetch the ring-resident ``h_win x w_in``
+    window at ``state_ptr``, drop the oldest ``hop`` image rows, append
+    the staged frame, and write the shifted window back to the state
+    region (same dtype — the writeback is exact for int8 pools).
+    Returns ``(pool, window_rows)``."""
+    wrows = op.h_in * op.w_in
+    state = fetch_rows(pool, op.state_ptr, wrows, op.d_in, n)
+    frame = fetch_rows(pool, op.in_ptr, op.rows_in, op.d_in, n)
+    win = jnp.concatenate([state[op.hop * op.w_in:], frame], axis=0)
+    return stage_rows(pool, win, op.state_ptr, n), win
+
+
+def conv_stream_ring(pool, w, b, *, op, n_segments):
+    """Sliding-window temporal conv: one per-frame step = state shift +
+    append + full ``k x k`` conv over the window (``w`` is
+    ``[k, k, c_in, c_out]``, exactly a conv_k2d over ``h_win x w_in``)."""
+    pool, win = _shift_window(pool, op, n_segments)
+    img = win.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.float32)
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
+    s = op.stride
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.float32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + jnp.einsum("hwc,cd->hwd", tap,
+                                   w[r, c].astype(jnp.float32))
+    y = resolve_activation(op.activation)(acc + b.astype(jnp.float32))
+    return _store_image(pool, op, y, n_segments)
+
+
+def gru_cell_ring(pool, w, u, b, *, op, n_segments):
+    """Gated recurrence: hidden state is the pool-resident row at
+    ``state_ptr``; the updated state is written back AND chained at
+    ``out_ptr`` (gate math: :func:`repro.quant.requant.gru_update`)."""
+    from ..quant.requant import gru_update
+
+    x = fetch_rows(pool, op.in_ptr, 1, op.d_in,
+                   n_segments).astype(jnp.float32)
+    h = fetch_rows(pool, op.state_ptr, 1, op.d_out,
+                   n_segments).astype(jnp.float32)
+    gx = jnp.dot(x, w.astype(jnp.float32),
+                 preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    gh = jnp.dot(h, u.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    hp = gru_update(gx, gh, h, op.d_out).astype(pool.dtype)
+    pool = stage_rows(pool, hp, op.state_ptr, n_segments)
+    return stage_rows(pool, hp, op.out_ptr, n_segments)
+
+
 # ---------------------------------------------------------------------------
 # jnp int8 ops: int8 gather -> int32 accumulate -> fixed-point requantize
 # on store.  Geometry (and therefore the sim certificate) is identical to
@@ -509,6 +578,50 @@ def pool_avg_ring_q(pool, mult, shift, *, op, n_segments):
     return stage_rows(pool, q, op.out_ptr, n_segments)
 
 
+def conv_stream_ring_q(pool, w, b, mult, shift, *, op, n_segments):
+    """Int8 sliding-window conv: the state shift/writeback is a pure int8
+    copy (exact), the conv is the conv_k2d int32-accumulate pipeline."""
+    from ..quant.requant import requantize
+
+    pool, win = _shift_window(pool, op, n_segments)
+    img = win.reshape(op.h_in, op.w_in, op.d_in).astype(jnp.int32)
+    pad_t, pad_b, pad_l, pad_r = _conv_pads(op)
+    s = op.stride
+    padded = jnp.pad(img, ((pad_t, pad_b), (pad_l, pad_r), (0, 0)))
+    acc = jnp.zeros((op.h_out, op.w_out, op.d_out), jnp.int32)
+    for r in range(op.rs):
+        for c in range(op.rs):
+            tap = padded[r:r + s * (op.h_out - 1) + 1:s,
+                         c:c + s * (op.w_out - 1) + 1:s]
+            acc = acc + jnp.einsum("hwc,cd->hwd", tap,
+                                   w[r, c].astype(jnp.int32))
+    acc = _q_act(acc + b.astype(jnp.int32), op.activation)
+    q = requantize(acc, mult[None, None, :], shift[None, None, :])
+    return _store_image(pool, op, q, n_segments)
+
+
+def gru_cell_ring_q(pool, w, u, b, mx, sx, mu, su, *, op, n_segments):
+    """Int8 GRU cell, CMSIS-NN discipline: both matmul accumulators are
+    requantized to the Q12 gate domain, the update runs the shared
+    fixed-point pipeline (:func:`repro.quant.requant.gru_update_q12`),
+    and the hidden state stays at the FIXED Q7 scale 1/128 — fully
+    integer, so jnp and Pallas agree bitwise."""
+    from ..quant.requant import gru_update_q12, requantize_i32
+
+    x = fetch_rows(pool, op.in_ptr, 1, op.d_in, n_segments)
+    h = fetch_rows(pool, op.state_ptr, 1, op.d_out, n_segments)
+    gx = requantize_i32(
+        jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32),
+                preferred_element_type=jnp.int32), mx, sx)
+    gx = gx + b.astype(jnp.int32)
+    gh = requantize_i32(
+        jnp.dot(h.astype(jnp.int32), u.astype(jnp.int32),
+                preferred_element_type=jnp.int32), mu, su)
+    hp = gru_update_q12(gx, gh, h, op.d_out)
+    pool = stage_rows(pool, hp, op.state_ptr, n_segments)
+    return stage_rows(pool, hp, op.out_ptr, n_segments)
+
+
 def _apply_op_q(pool: jax.Array, op, p, *, n: int, br: int,
                 rows: int) -> jax.Array:
     """Apply ONE int8 op — the loop body shared by the whole-program jit
@@ -539,6 +652,14 @@ def _apply_op_q(pool: jax.Array, op, p, *, n: int, br: int,
     if op.kind == "pool_avg":
         mult, shift = p
         return pool_avg_ring_q(pool, mult, shift, op=op, n_segments=n)
+    if op.kind == "conv_stream":
+        w, b, mult, shift = p
+        return conv_stream_ring_q(pool, w, b, mult, shift, op=op,
+                                  n_segments=n)
+    if op.kind == "gru_cell":
+        w, u, b, mx, sx, mu, su = p
+        return gru_cell_ring_q(pool, w, u, b, mx, sx, mu, su, op=op,
+                               n_segments=n)
     raise NotImplementedError(f"no int8 jnp path for {op.kind}")
 
 
@@ -588,6 +709,12 @@ def _apply_op(pool: jax.Array, op, p, *, n: int, br: int,
         return add_ring(pool, op=op, n_segments=n)
     if op.kind == "pool_avg":
         return pool_avg_ring(pool, op=op, n_segments=n)
+    if op.kind == "conv_stream":
+        w, b = p
+        return conv_stream_ring(pool, w, b, op=op, n_segments=n)
+    if op.kind == "gru_cell":
+        w, u, b = p
+        return gru_cell_ring(pool, w, u, b, op=op, n_segments=n)
     raise NotImplementedError(op.kind)
 
 
@@ -654,6 +781,7 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
     from ..kernels.fused_mlp import ring_fused_mlp
     from ..kernels.inverted_bottleneck import ring_inverted_bottleneck
     from ..kernels.segment_matmul import SEG_WIDTH as KSEG, ring_gemm
+    from ..kernels.stream import ring_conv_stream, ring_gru_cell
 
     if program.block_rows is None:
         raise ValueError("pallas backend needs an aligned program — plan "
@@ -738,6 +866,23 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
             arr = ring_avgpool(arr, h=op.h_in, w=op.w_in, c=op.d_in,
                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
                                interpret=interpret)
+        elif op.kind == "conv_stream":
+            w, b = p
+            arr = ring_conv_stream(arr, w, b, h_win=op.h_in, w_in=op.w_in,
+                                   h_out=op.h_out, w_out=op.w_out,
+                                   c_in=op.d_in, c_out=op.d_out, k=op.rs,
+                                   stride=op.stride, padding=op.padding,
+                                   hop=op.hop, in_ptr=op.in_ptr,
+                                   out_ptr=op.out_ptr,
+                                   state_ptr=op.state_ptr,
+                                   activation=op.activation,
+                                   interpret=interpret)
+        elif op.kind == "gru_cell":
+            w, u, b = p
+            arr = ring_gru_cell(arr, w, u, b, d_in=op.d_in, d_h=op.d_out,
+                                in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                state_ptr=op.state_ptr,
+                                interpret=interpret)
         else:
             raise NotImplementedError(op.kind)
         if tracer is not None:
@@ -752,6 +897,7 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
     from ..kernels.quantized import (ring_add_q, ring_avgpool_q,
                                      ring_conv_dw_q, ring_conv_k2d_q,
                                      ring_conv_pw_q, ring_gemm_q)
+    from ..kernels.stream import ring_conv_stream_q, ring_gru_cell_q
 
     for i, (op, p) in enumerate(zip(program.ops, params)):
         rows = op.rows_in or program.m_rows
@@ -808,6 +954,26 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
                                  in_ptr=op.in_ptr, out_ptr=op.out_ptr,
                                  mult=mult, shift=shift,
                                  interpret=interpret)
+        elif op.kind == "conv_stream":
+            w, b, mult, shift = p
+            arr = ring_conv_stream_q(arr, w, b, mult, shift,
+                                     h_win=op.h_in, w_in=op.w_in,
+                                     h_out=op.h_out, w_out=op.w_out,
+                                     c_in=op.d_in, c_out=op.d_out,
+                                     k=op.rs, stride=op.stride,
+                                     padding=op.padding, hop=op.hop,
+                                     in_ptr=op.in_ptr,
+                                     out_ptr=op.out_ptr,
+                                     state_ptr=op.state_ptr,
+                                     activation=op.activation,
+                                     interpret=interpret)
+        elif op.kind == "gru_cell":
+            w, u, b, mx, sx, mu, su = p
+            arr = ring_gru_cell_q(arr, w, u, b, mx, sx, mu, su,
+                                  d_in=op.d_in, d_h=op.d_out,
+                                  in_ptr=op.in_ptr, out_ptr=op.out_ptr,
+                                  state_ptr=op.state_ptr,
+                                  interpret=interpret)
         else:
             raise NotImplementedError(
                 f"no int8 pallas kernel for {op.kind}")
@@ -868,6 +1034,20 @@ def _sim_rowsched_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
             sim.free(op.in_ptr + seg, owner=(iown, seg))
 
 
+def _sim_stream_op(sim: SegmentPool, program: PoolProgram, i: int) -> None:
+    """conv_stream / gru_cell through the oracle: whole-state read then a
+    same-owner whole-state rewrite (the executors fetch the full window /
+    hidden vector, shift, and write it back — a FOREIGN write into the
+    live state region is exactly the clobber this catches), followed by
+    the frame traffic via the op's row schedule."""
+    op = program.ops[i]
+    for j in range(op.state_segments):
+        sim.read(op.state_ptr + j, owner=("state", i, j))
+    for j in range(op.state_segments):
+        sim.write(op.state_ptr + j, owner=("state", i, j))
+    _sim_rowsched_op(sim, program, i)
+
+
 @register_executor("sim")
 def run_program_sim(program: PoolProgram, pool=None, params=None, *,
                     tracer=None, **_kw) -> SegmentPool:
@@ -886,8 +1066,17 @@ def run_program_sim(program: PoolProgram, pool=None, params=None, *,
     static counters.
     """
     sw = program.seg_width
-    sim = SegmentPool(program.n_segments,
-                      segment_bytes=sw * program.elem_bytes)
+    if isinstance(pool, SegmentPool):
+        # persistent streaming session (repro.stream): state records from
+        # the previous step are still live under their ("state", i, j)
+        # owners — the next step must prove it never clobbers them
+        sim = pool
+    else:
+        sim = SegmentPool(program.n_segments,
+                          segment_bytes=sw * program.elem_bytes)
+        for i, op in enumerate(program.ops):
+            for j in range(op.state_segments):
+                sim.write(op.state_ptr + j, owner=("state", i, j))
     if tracer is not None:
         tracer.backend = "sim"
     first = program.ops[0]
@@ -922,6 +1111,8 @@ def run_program_sim(program: PoolProgram, pool=None, params=None, *,
                 for s in range(d_segs):
                     seg = r * d_segs + s
                     sim.write(op.out_ptr + seg, owner=(i + 1, seg))
+        elif op.kind in ("conv_stream", "gru_cell"):
+            _sim_stream_op(sim, program, i)
         else:
             _sim_rowsched_op(sim, program, i)
         if tracer is not None:
@@ -932,6 +1123,9 @@ def run_program_sim(program: PoolProgram, pool=None, params=None, *,
     last = program.ops[-1]
     for j in range(last.out_segments):  # outputs must survive the ring
         sim.read(last.out_ptr + j, owner=(len(program.ops), j))
+    for i, op in enumerate(program.ops):  # ...and so must persistent state
+        for j in range(op.state_segments):
+            sim.read(op.state_ptr + j, owner=("state", i, j))
     if tracer is not None:
         tracer.finish_sim(sim)
     return sim

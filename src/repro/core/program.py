@@ -37,7 +37,8 @@ from .planner import gemm_offset_closed_form
 from .vpool import PoolSpec, SEG_WIDTH, ceil_div, segments_for
 
 EXECUTABLE_KINDS = ("gemm", "fused_mlp", "elementwise", "conv_pw",
-                    "conv_dw", "conv_k2d", "ib_fused", "add", "pool_avg")
+                    "conv_dw", "conv_k2d", "ib_fused", "add", "pool_avg",
+                    "conv_stream", "gru_cell")
 PLAN_ONLY_KINDS = ("fused_chain", "inverted_bottleneck")
 
 # Pool element dtypes a program can be planned for.  The name is the
@@ -248,9 +249,53 @@ class AvgPoolSpec:
     c: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvStreamSpec:
+    """Streaming temporal k x k conv over a ring-resident sliding window.
+
+    The op owns a persistent state tensor ``[h_win, w_in, c_in]`` in the
+    pool — the fourth lifetime class (DESIGN.md §14): it survives program
+    end and is re-read at step 0 of the next invocation.  Each step
+    shifts the window up by ``hop`` rows, appends the ``hop`` new frame
+    rows from the chained input, writes the window back, and runs the
+    full k x k conv over the window: ``[hop, w_in, c_in] ->
+    [h_out, w_out, c_out]``.  A zero-initialized window makes the
+    warm-up steps equal the one-shot conv's zero padding, so a filled
+    window reproduces the feed-forward model exactly (bitwise in int8:
+    symmetric quantization keeps zero-point 0).
+    """
+
+    h_win: int
+    w_in: int
+    c_in: int
+    c_out: int
+    k: int = 3
+    stride: int = 1
+    padding: str = "same"
+    hop: int = 1
+    activation: str | None = None
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        from .rowsched import conv_k2d_out
+        return (conv_k2d_out(self.h_win, self.k, self.stride, self.padding),
+                conv_k2d_out(self.w_in, self.k, self.stride, self.padding))
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUCellSpec:
+    """GRU recurrence step ``[1, d_in] -> [1, d_h]`` with the hidden
+    state pool-resident across invocations (gate order z, r, n; hard
+    sigmoid / hard tanh so the int8 path is a pure fixed-point Q12
+    pipeline in the CMSIS-NN discipline)."""
+
+    d_h: int
+
+
 LayerSpec = Union[GemmSpec, FusedMLPSpec, ElementwiseSpec, FusedChainSpec,
                   InvertedBottleneckSpec, ConvPWSpec, ConvDWSpec,
-                  ConvK2DSpec, IBModuleSpec, ResidualAddSpec, AvgPoolSpec]
+                  ConvK2DSpec, IBModuleSpec, ResidualAddSpec, AvgPoolSpec,
+                  ConvStreamSpec, GRUCellSpec]
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +356,10 @@ class PoolOp:
                               # shared output tensor
     free_src: bool = False    # free the whole source record after this op
                               # (last slice's read of a held source)
+    # -- streaming state (repro.stream; conv_stream / gru_cell) -----------
+    state_ptr: int = 0        # pool offset of the persistent state tensor
+    state_segments: int = 0   # its segment extent (0 = stateless op)
+    hop: int = 0              # conv_stream: frame rows appended per step
 
     @property
     def rows_src(self) -> int:
@@ -387,6 +436,7 @@ class PoolProgram:
         """Tensor-level footprint: worst coexisting in+out(+residual)."""
         worst = max(op.in_segments + op.out_segments
                     + (op.in_segments if op.aux_op >= 0 else 0)
+                    + op.state_segments
                     for op in self.ops)
         op = self.ops[0]
         if op.kind in PLAN_ONLY_KINDS:
@@ -480,11 +530,12 @@ class PoolProgram:
         br = self.block_rows or 1
         ci = segments_for(op.d_in, sw)
         co = segments_for(op.d_out, sw)
-        if op.kind in ("conv_pw", "conv_dw", "conv_k2d", "ib_fused"):
+        if op.kind in ("conv_pw", "conv_dw", "conv_k2d", "ib_fused",
+                       "conv_stream"):
             return op.w_in * ci, op.w_out * co
         if op.kind == "pool_avg":
             return op.w_in * ci, co
-        if op.kind == "add":
+        if op.kind in ("add", "gru_cell"):
             return ci, co
         return br * ci, br * co
 
@@ -642,6 +693,8 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
     # segments) — for branch ops (input_from) this stays the chained
     # tensor that remains resident, NOT the held tensor the op reads
     tens: list[tuple[int, int, int]] = []
+    # persistent-state demands: (op index, state segments, chunk align)
+    state_needs: list[tuple[int, int, int]] = []
     # chain state (rows, dim, image) entering each op
     states: list[tuple[int, int, tuple | None]] = []
 
@@ -671,7 +724,7 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
         elif isinstance(spec, ElementwiseSpec):
             resolve_activation(spec.fn)
         elif isinstance(spec, (ConvPWSpec, ConvDWSpec, ConvK2DSpec,
-                               ResidualAddSpec)):
+                               ConvStreamSpec, ResidualAddSpec)):
             resolve_activation(spec.activation)
         states.append((rows, cur, img))
         rows_in = rows
@@ -792,6 +845,62 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                          rows_in=v_rows, rows_out=h_out * w_out)
             aligns.append(math.lcm(in_chunk, out_chunk))
             new_state = (h_out * w_out, c_out, (h_out, w_out))
+        elif isinstance(spec, ConvStreamSpec):
+            if spec.hop <= 0 or spec.h_win % spec.hop:
+                raise ValueError(f"layer {pos}: hop={spec.hop} must divide "
+                                 f"h_win={spec.h_win}")
+            frame_rows = spec.hop * spec.w_in
+            if img is None:
+                if rows != frame_rows:
+                    raise ValueError(f"layer {pos}: conv_stream expects a "
+                                     f"{spec.hop}x{spec.w_in} frame, "
+                                     f"program has {rows} rows")
+            elif img != (spec.hop, spec.w_in):
+                raise ValueError(f"layer {pos}: conv_stream frame "
+                                 f"{spec.hop}x{spec.w_in} != running image "
+                                 f"{img[0]}x{img[1]}")
+            if cur != spec.c_in:
+                raise ValueError(f"layer {pos}: conv_stream c_in="
+                                 f"{spec.c_in} != running dim={cur}")
+            h_out, w_out = spec.out_hw
+            ci = segments_for(spec.c_in, seg_width)
+            co = segments_for(spec.c_out, seg_width)
+            in_chunk, out_chunk = spec.w_in * ci, w_out * co
+            sched = rowsched.conv_stream_schedule(spec.hop, h_out, in_chunk,
+                                                  out_chunk)
+            delta = sched.solve_delta() - delta_slack
+            in_tot, out_tot = frame_rows * ci, h_out * w_out * co
+            ot = _avoid(it - delta, out_tot, pos, 0, cur=(it, ia, in_tot))
+            oa = (ot if not aligned else
+                  _avoid(_floor_mult(ia - delta, out_chunk), out_tot, pos,
+                         1, round_to=out_chunk, cur=(it, ia, in_tot)))
+            kind, d_out = "conv_stream", spec.c_out
+            extra = dict(activation=spec.activation, stride=spec.stride,
+                         rs=spec.k, padding=spec.padding, hop=spec.hop,
+                         h_in=spec.h_win, w_in=spec.w_in, h_out=h_out,
+                         w_out=w_out, rows_in=frame_rows,
+                         rows_out=h_out * w_out)
+            state_needs.append((pos, spec.h_win * spec.w_in * ci, in_chunk))
+            aligns.append(math.lcm(in_chunk, out_chunk))
+            new_state = (h_out * w_out, spec.c_out, (h_out, w_out))
+        elif isinstance(spec, GRUCellSpec):
+            if rows != 1:
+                raise ValueError(f"layer {pos}: gru_cell expects a single "
+                                 f"row, program has {rows}")
+            ci = segments_for(cur, seg_width)
+            co = segments_for(spec.d_h, seg_width)
+            sched = rowsched.gru_cell_schedule(ci, co)
+            delta = sched.solve_delta() - delta_slack
+            in_tot, out_tot = ci, co
+            ot = _avoid(it - delta, out_tot, pos, 0, cur=(it, ia, in_tot))
+            oa = (ot if not aligned else
+                  _avoid(_floor_mult(ia - delta, co), out_tot, pos, 1,
+                         round_to=co, cur=(it, ia, in_tot)))
+            kind, d_out = "gru_cell", spec.d_h
+            extra = dict(rows_in=1, rows_out=1)
+            state_needs.append((pos, co, co))
+            aligns.append(math.lcm(ci, co))
+            new_state = (1, spec.d_h, None)
         elif isinstance(spec, IBModuleSpec):
             cfg = spec.cfg
             if any(s != 1 for s in cfg.strides):
@@ -908,6 +1017,35 @@ def plan_program(m_rows: int, d_in: int, layers: Sequence[LayerSpec], *,
                    op, in_ptr=op.in_ptr + shift, out_ptr=op.out_ptr + shift,
                    aux_ptr=op.aux_ptr + shift if op.aux_op >= 0 else 0)
                for op in ops]
+
+    if state_needs:
+        # Persistent state pins the ring's origin across invocations, so
+        # the frame program must be WRAP-FREE — the infinite-horizon form
+        # of the Eq.-(2) avoid constraint: a held interval avoided by
+        # every op of every future step degenerates to "past the linear
+        # extent of all frame traffic".  The modulus grows to the linear
+        # extent and states are carved out above it; frame accesses then
+        # never reduce into a state interval, by construction (the
+        # static verifier re-proves this, VMCU211/213).
+        ext = n_segments
+        for op in ops:
+            ext = max(ext, op.in_ptr + op.in_segments,
+                      op.out_ptr + op.out_segments)
+            if op.aux_op >= 0:
+                ext = max(ext, op.aux_ptr + op.in_segments)
+        repl: dict[int, tuple[int, int]] = {}
+        for op_i, segs_n, chunk in state_needs:
+            if aligned and ext % chunk:
+                ext = ceil_div(ext, chunk) * chunk
+            repl[op_i] = (ext, segs_n)
+            ext += segs_n
+        pool_segments = ext
+        n_segments = (ceil_div(ext, math.lcm(*aligns)) * math.lcm(*aligns)
+                      if aligned else ext)
+        ops = [dataclasses.replace(op, state_ptr=repl[i][0],
+                                   state_segments=repl[i][1])
+               if i in repl else op
+               for i, op in enumerate(ops)]
 
     return PoolProgram(m_rows=m_rows, seg_width=seg_width,
                        block_rows=block_rows, n_segments=n_segments,

@@ -104,9 +104,11 @@ class RowSchedule:
         return dead
 
     def read_start_segments(self) -> np.ndarray:
-        nm = self.needed_min()[: self.steps]
-        total = self.in_rows * self.in_chunk
-        return np.minimum(nm * self.in_chunk, total)
+        # clamp the _INF sentinel (steps with no remaining reads) to
+        # in_rows BEFORE scaling by in_chunk — the product overflows
+        # int64 for in_chunk >= 5 otherwise
+        nm = np.minimum(self.needed_min()[: self.steps], self.in_rows)
+        return nm * self.in_chunk
 
     def write_end_segments(self) -> np.ndarray:
         hi = np.fromiter(((max(rows) + 1) if rows else 0
@@ -270,6 +272,32 @@ def avgpool_schedule(h: int, in_chunk: int, out_chunk: int) -> RowSchedule:
 
 
 @_memo
+def conv_stream_schedule(hop: int, h_out: int, in_chunk: int,
+                         out_chunk: int) -> RowSchedule:
+    """Streaming temporal conv: step 0 consumes the whole ``hop``-row
+    frame (shift-append into the ring-resident window state, which is
+    tracked as a separate lifetime class, not as chained input); steps
+    ``1..h_out`` then write one output row each from the window.  The
+    frame is dead before any output write, so delta solves to the
+    non-overlap minimum."""
+    reads = (tuple(range(hop)),) + ((),) * h_out
+    writes = ((),) + tuple((p,) for p in range(h_out))
+    return RowSchedule(steps=1 + h_out, in_rows=hop, out_rows=h_out,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=reads, writes=writes)
+
+
+@_memo
+def gru_cell_schedule(in_chunk: int, out_chunk: int) -> RowSchedule:
+    """GRU cell: step 0 reads the single input row (plus the pool-resident
+    hidden state, tracked separately); step 1 writes the new hidden row
+    to the chained output."""
+    return RowSchedule(steps=2, in_rows=1, out_rows=1,
+                       in_chunk=in_chunk, out_chunk=out_chunk,
+                       reads=((0,), ()), writes=((), (0,)))
+
+
+@_memo
 def gemm_fine_schedule(m: int, k_segs: int, n_segs: int) -> RowSchedule:
     """The paper's Fig.-4 fine-grained FC schedule at row granularity:
     step ``t = r * n_segs + n`` re-reads input row ``r`` (all ``k_segs``
@@ -334,4 +362,9 @@ def schedule_for_op(op, seg_width: int, m_rows: int | None = None
         return add_schedule(op.rows_in, ci)
     if op.kind == "pool_avg":
         return avgpool_schedule(op.h_in, op.w_in * ci, co)
+    if op.kind == "conv_stream":
+        return conv_stream_schedule(op.hop, op.h_out, op.w_in * ci,
+                                    op.w_out * co)
+    if op.kind == "gru_cell":
+        return gru_cell_schedule(ci, co)
     raise ValueError(f"no row schedule for op kind {op.kind!r}")

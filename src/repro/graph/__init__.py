@@ -20,8 +20,9 @@ The deployment front door over this package is ``repro.compile(net,
 target)`` (DESIGN.md §9); ``plan_net``/``quantize_net`` remain
 importable here as deprecated shims over the driver's internals.
 """
-from .ir import (Graph, Node, Tensor, build_ds_cnn, build_mcunet,
-                 build_mlp_tower, build_mobilenet_v1, build_resnet8)
+from .ir import (Graph, Node, Tensor, build_ad_autoencoder, build_ds_cnn,
+                 build_mcunet, build_mlp_tower, build_mobilenet_v1,
+                 build_resnet8)
 from .schedule import (FusionGroup, peak_live_bytes, reorder, select_groups,
                        tensor_lifetimes)
 from .netplan import GroupPlan, NetPlan, plan_net
@@ -30,8 +31,9 @@ from .run import (QuantizedNet, certify_net, init_net_params,
                   run_net, run_net_quantized)
 
 __all__ = [
-    "Graph", "Node", "Tensor", "build_ds_cnn", "build_mcunet",
-    "build_mlp_tower", "build_mobilenet_v1", "build_resnet8",
+    "Graph", "Node", "Tensor", "build_ad_autoencoder", "build_ds_cnn",
+    "build_mcunet", "build_mlp_tower", "build_mobilenet_v1",
+    "build_resnet8",
     "FusionGroup", "peak_live_bytes", "reorder", "select_groups",
     "tensor_lifetimes",
     "GroupPlan", "NetPlan", "plan_net",

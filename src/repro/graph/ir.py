@@ -71,6 +71,8 @@ class Node:
     gated: bool = False
     module: str = ""          # module tag for fusion-group selection
     block: str = ""           # residual-block tag (ResNet-style groups)
+    h_win: int = 0            # conv_stream: sliding-window height
+    hop: int = 0              # conv_stream: frame rows appended per step
 
 
 class Graph:
@@ -146,9 +148,12 @@ class Graph:
                     raise ValueError("input node cannot have inputs")
                 continue
             t = self.in_tensor(n.id)
-            if n.kind in ("conv_pw", "conv_dw", "conv_k2d") \
+            if n.kind in ("conv_pw", "conv_dw", "conv_k2d", "conv_stream") \
                     and t.h * t.w != t.rows:
                 raise ValueError(f"{n.id}: conv over non-image tensor")
+            if n.kind == "conv_stream" and (t.h, t.w) != (n.hop, t.w):
+                raise ValueError(f"{n.id}: conv_stream frame height "
+                                 f"{t.h} != hop {n.hop}")
             if n.kind == "add":
                 if len(n.inputs) != 2:
                     raise ValueError(f"{n.id}: add needs two inputs")
@@ -345,6 +350,25 @@ def build_mobilenet_v1(*, hw: int = 96, num_classes: int = 2,
         src = g.add(f"B{i}.pw", "conv_pw", [src], out, activation="relu")
         cur = out
     _head(g, src, cur, num_classes, elem_bytes)
+    g.validate()
+    return g
+
+
+def build_ad_autoencoder(*, d_in: int = 640, d_hidden: int = 128,
+                         d_latent: int = 8, elem_bytes: int = 1) -> Graph:
+    """MLPerf-Tiny anomaly detection (ToyADMOS): a fully-connected
+    autoencoder over 640-dim (5-frame stacked) log-mel windows — four
+    128-wide encoder layers, an 8-dim bottleneck, four 128-wide decoder
+    layers and the 640-dim reconstruction head (the anomaly score is
+    the reconstruction error, computed outside the net)."""
+    g = Graph("ad-toyadmos", elem_bytes=elem_bytes)
+    cur = Tensor(rows=1, d=d_in, elem_bytes=elem_bytes)
+    src = g.add("in", "input", [], cur)
+    dims = (d_hidden,) * 4 + (d_latent,) + (d_hidden,) * 4 + (d_in,)
+    for i, d in enumerate(dims):
+        out = Tensor(rows=1, d=d, elem_bytes=elem_bytes)
+        act = "relu" if i < len(dims) - 1 else None
+        src = g.add(f"fc{i}", "fc", [src], out, activation=act)
     g.validate()
     return g
 

@@ -26,9 +26,10 @@ from typing import Sequence
 
 from ..core.graph_planner import ModuleConfig
 from ..core.program import (AvgPoolSpec, ConvDWSpec, ConvK2DSpec,
-                            ConvPWSpec, GemmSpec, FusedMLPSpec,
-                            IBModuleSpec, LayerSpec, PoolProgram,
-                            ResidualAddSpec, plan_program)
+                            ConvPWSpec, ConvStreamSpec, GemmSpec,
+                            FusedMLPSpec, GRUCellSpec, IBModuleSpec,
+                            LayerSpec, PoolProgram, ResidualAddSpec,
+                            plan_program)
 from ..core.vpool import SEG_WIDTH, ceil_div
 from .ir import Graph
 from .schedule import FusionGroup, reorder, select_groups
@@ -144,6 +145,12 @@ def _node_spec(graph: Graph, nid: str,
                             stride=n.stride, padding=n.padding,
                             activation=n.activation,
                             input_from=input_from)]
+    if n.kind == "conv_stream":
+        return [ConvStreamSpec(n.h_win, tin.w, tin.d, n.out.d, k=n.rs,
+                               stride=n.stride, padding=n.padding,
+                               hop=n.hop, activation=n.activation)]
+    if n.kind == "gru_cell":
+        return [GRUCellSpec(n.out.d)]
     if n.kind == "avgpool":
         return [AvgPoolSpec(tin.h, tin.w, tin.d)]
     if n.kind == "fc":

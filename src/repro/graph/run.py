@@ -41,12 +41,19 @@ def init_net_params(plan, key=None, dtype=jnp.float32) -> list:
             key, k1 = jax.random.split(key)
             w = jax.random.normal(k1, (op.rs, op.rs, op.d_in), dtype)
             params.append((w / op.rs, None))
-        elif op.kind == "conv_k2d":
+        elif op.kind in ("conv_k2d", "conv_stream"):
             key, k1 = jax.random.split(key)
             w = jax.random.normal(k1, (op.rs, op.rs, op.d_in, op.d_out),
                                   dtype)
             params.append((w * gain / ((op.rs * op.rs * op.d_in) ** 0.5),
                            None))
+        elif op.kind == "gru_cell":
+            key, k1, k2 = jax.random.split(key, 3)
+            w = jax.random.normal(k1, (op.d_in, 3 * op.d_out), dtype) \
+                / (op.d_in ** 0.5)
+            u = jax.random.normal(k2, (op.d_out, 3 * op.d_out), dtype) \
+                / (op.d_out ** 0.5)
+            params.append((w, u, None))
         elif op.kind == "ib_fused":
             key, k1, k2, k3 = jax.random.split(key, 4)
             w1 = jax.random.normal(k1, (op.d_in, op.d_mid), dtype) \
@@ -153,6 +160,28 @@ def reference_forward(plan, x: jax.Array, params, *,
                           pad_lo=conv_k2d_pad(op.rs, op.padding),
                           h_out=op.h_out, w_out=op.w_out)
             cur = act(y + b).reshape(op.rows_out, op.d_out)
+        elif op.kind == "conv_stream":
+            # one streaming step from reset: the window is the zero
+            # state (== zero padding, exactly what VirtualPool.alloc
+            # leaves in the state region) with the frame appended
+            w, b = p if p[1] is not None else (p[0], jnp.zeros(op.d_out))
+            frame = src.reshape(op.hop, op.w_in, op.d_in)
+            state = jnp.zeros((op.h_in - op.hop, op.w_in, op.d_in),
+                              jnp.float32)
+            win = jnp.concatenate([state, frame], axis=0)
+            y = _conv_ref(win, w.astype(jnp.float32),
+                          stride=op.stride,
+                          pad_lo=conv_k2d_pad(op.rs, op.padding),
+                          h_out=op.h_out, w_out=op.w_out)
+            cur = act(y + b).reshape(op.rows_out, op.d_out)
+        elif op.kind == "gru_cell":
+            from ..quant.requant import gru_update
+            w, u, b = p if p[2] is not None else \
+                (p[0], p[1], jnp.zeros(3 * op.d_out))
+            h = jnp.zeros((1, op.d_out), jnp.float32)
+            gx = src @ w.astype(jnp.float32) + b.astype(jnp.float32)
+            gh = h @ u.astype(jnp.float32)
+            cur = gru_update(gx, gh, h, op.d_out)
         elif op.kind == "ib_fused":
             from ..kernels.inverted_bottleneck import \
                 inverted_bottleneck_ref
@@ -206,7 +235,8 @@ def certify_net(plan):
 # Int8 quantized execution (DESIGN.md §8).
 # ---------------------------------------------------------------------------
 
-_Q_KINDS = ("gemm", "conv_pw", "conv_dw", "conv_k2d", "add", "pool_avg")
+_Q_KINDS = ("gemm", "conv_pw", "conv_dw", "conv_k2d", "add", "pool_avg",
+            "conv_stream", "gru_cell")
 _Q_ACTIVATIONS = (None, "identity", "relu")
 
 
@@ -291,6 +321,15 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
     with span("act_scales"):
         act_qps = [calibrate(jnp.array([a])) for a in amax]
         act_scales = tuple(float(qp.scale) for qp in act_qps)
+    if any(op.kind == "gru_cell" for op in program.ops):
+        # the GRU hidden state IS the op output and lives in the pool at
+        # the FIXED Q7 scale 1/128 across invocations — pin it before
+        # any downstream requant constant is derived from it
+        scales = list(act_scales)
+        for i, op in enumerate(program.ops):
+            if op.kind == "gru_cell":
+                scales[i + 1] = 1.0 / 128.0
+        act_scales = tuple(scales)
 
     # 2. per-op weight quantization + requant constants
     qparams: list = []
@@ -300,9 +339,11 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
             # input scale is that tensor's, not the chained tensor's
             s_in = act_scales[op.in_op if op.in_op >= 0 else i]
             s_out = act_scales[i + 1]
-            if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d"):
+            if op.kind in ("gemm", "conv_pw", "conv_dw", "conv_k2d",
+                           "conv_stream"):
                 w, b = p if p[1] is not None else (p[0], None)
-                axis = {"conv_dw": 2, "conv_k2d": 3}.get(op.kind, 1)
+                axis = {"conv_dw": 2, "conv_k2d": 3,
+                        "conv_stream": 3}.get(op.kind, 1)
                 w_qp = calibrate(w, axis=axis)
                 w_q = quantize(w, w_qp)
                 b_q = (quantize_bias(b, s_in, w_qp) if b is not None
@@ -318,6 +359,21 @@ def _quantize_net(plan, params, *, calib: jax.Array | None = None,
             elif op.kind == "pool_avg":
                 m, s = requant_scalar(s_in / (op.h_in * op.w_in * s_out))
                 qparams.append((m, s))
+            elif op.kind == "gru_cell":
+                # Q12 gate domain (scale 1/4096): both accumulators are
+                # requantized into it, the bias is folded there, and the
+                # recurrent input is the fixed Q7 hidden state
+                w, u, b = p
+                w_qp = calibrate(w, axis=1)
+                u_qp = calibrate(u, axis=1)
+                w_q, u_q = quantize(w, w_qp), quantize(u, u_qp)
+                b_q12 = (jnp.asarray(
+                    jnp.round(jnp.asarray(b, jnp.float32) * 4096.0),
+                    jnp.int32) if b is not None
+                    else jnp.zeros((3 * op.d_out,), jnp.int32))
+                mx, sx = requant_pair(s_in, w_qp, 1.0 / 4096.0)
+                mu, su = requant_pair(1.0 / 128.0, u_qp, 1.0 / 4096.0)
+                qparams.append((w_q, u_q, b_q12, mx, sx, mu, su))
     return QuantizedNet(plan=plan, program=program.with_dtype("int8"),
                         params=list(params), qparams=qparams,
                         act_scales=act_scales)

@@ -252,6 +252,17 @@ def _single_group(graph: Graph, nid: str) -> FusionGroup:
         read_start = (sp * tin.w + sq) * tin.d * eb
         write_end = (p + 1) * tout.d * eb
         delta = solve_stream_offset(write_end, read_start)
+    elif n.kind in ("conv_stream", "gru_cell"):
+        # the frame/input row dies before any output write (delta 0);
+        # the persistent state tensor coexists with both — the fourth
+        # lifetime class, counted on top of the frame traffic
+        state = (n.h_win * tin.w * tin.d * eb if n.kind == "conv_stream"
+                 else tout.d * eb)
+        mcu = max(tin.nbytes, tout.nbytes) + state
+        naive = tin.nbytes + tout.nbytes + state
+        return FusionGroup(name=nid, kind="single", node_ids=(nid,),
+                           mcu_bytes=mcu, te_bytes=naive,
+                           hmcos_bytes=naive, delta_bytes=0)
     elif n.kind == "avgpool":
         # output row written once, at the very end, over freed input
         delta = 0

@@ -109,6 +109,32 @@ def conv_k2d_ref(img: jax.Array, w: jax.Array, b: jax.Array, *,
     return _act(y + b.astype(jnp.float32), activation).astype(img.dtype)
 
 
+def conv_stream_ref(state: jax.Array, frame: jax.Array, w: jax.Array,
+                    b: jax.Array, *, stride: int = 1,
+                    padding: str = "same",
+                    activation: str | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for ONE conv_stream step: drop the oldest ``hop`` image
+    rows of the ``[h_win, w_in, c_in]`` window, append the ``[hop, w_in,
+    c_in]`` frame, then run the ``lax``-backed k x k conv oracle over the
+    shifted window.  Returns ``(y, new_state)``."""
+    win = jnp.concatenate([state[frame.shape[0]:], frame], axis=0)
+    return conv_k2d_ref(win, w, b, stride=stride, padding=padding,
+                        activation=activation), win
+
+
+def gru_cell_ref(x: jax.Array, h: jax.Array, w: jax.Array, u: jax.Array,
+                 b: jax.Array) -> jax.Array:
+    """Hard-gate GRU step oracle — ``h' = gru_update(x@w + b, h@u, h)``
+    (the one shared gate definition in ``repro.quant.requant``)."""
+    from ..quant.requant import gru_update
+
+    xf, hf = x.astype(jnp.float32), h.astype(jnp.float32)
+    gx = xf @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    gh = hf @ u.astype(jnp.float32)
+    return gru_update(gx, gh, hf, w.shape[1] // 3).astype(x.dtype)
+
+
 def add_ref(x: jax.Array, res: jax.Array, *,
             activation: str | None = None) -> jax.Array:
     return _act(x.astype(jnp.float32) + res.astype(jnp.float32),
@@ -218,6 +244,32 @@ def add_q_ref(x_q, res_q, mult_in, shift_in, mult_aux, shift_aux, *,
     yb = requantize_i32(res_q.astype(jnp.int32), mult_aux, shift_aux)
     return jnp.clip(_q_act(ya + yb, activation), -128, 127) \
         .astype(jnp.int8)
+
+
+def conv_stream_q_ref(state_q, frame_q, w_q, b_q, mult, shift, *,
+                      stride=1, padding="same", activation=None):
+    """Int8 conv_stream step: the shift/append is an exact int8 copy,
+    the conv is the bitwise conv_k2d pipeline.  Returns
+    ``(y_q, new_state_q)``."""
+    win = jnp.concatenate([state_q[frame_q.shape[0]:], frame_q], axis=0)
+    return conv_k2d_q_ref(win, w_q, b_q, mult, shift, stride=stride,
+                          padding=padding, activation=activation), win
+
+
+def gru_cell_q_ref(x_q, h_q7, w_q, u_q, b_q12, mult_x, shift_x, mult_u,
+                   shift_u):
+    """Int8 GRU step: both accumulators requantized to Q12, then the
+    shared fixed-point update (bitwise contract for the ring kernels)."""
+    from ..quant.requant import gru_update_q12, requantize_i32
+
+    gx = requantize_i32(
+        jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                preferred_element_type=jnp.int32), mult_x, shift_x)
+    gx = gx + b_q12.astype(jnp.int32)
+    gh = requantize_i32(
+        jnp.dot(h_q7.astype(jnp.int32), u_q.astype(jnp.int32),
+                preferred_element_type=jnp.int32), mult_u, shift_u)
+    return gru_update_q12(gx, gh, h_q7, w_q.shape[1] // 3)
 
 
 def avgpool_q_ref(img_q, mult, shift):

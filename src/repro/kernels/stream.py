@@ -1,0 +1,455 @@
+"""Streaming ring kernels — persistent temporal state on the segment ring.
+
+Per-frame ops for ``repro.stream`` (DESIGN.md §14), following the
+``conv2d``/``quantized`` skeleton (pool in HBM/ARBITRARY, async copies,
+input/output aliasing):
+
+  * ``ring_conv_stream``   — sliding-window temporal conv.  Grid step 0
+                             assembles the shifted window in a VMEM
+                             scratch (DMA the kept state rows + the new
+                             frame rows) and DMAs it back to the state
+                             region; every grid step then computes one
+                             output image row from the VMEM-resident
+                             window (the scratch persists across the
+                             sequential grid, like the avgpool
+                             accumulator).
+  * ``ring_gru_cell``      — gated recurrence: the hidden row at
+                             ``state_ptr`` is read, updated with the
+                             shared hard-gate math
+                             (``repro.quant.requant.gru_update``), and
+                             stored to BOTH the state region and the
+                             chained output.
+  * ``*_q`` twins          — the int8 deployment forms (int32
+                             accumulate, CMSIS-NN requantize; the GRU
+                             runs the fully-integer Q12 pipeline, so jnp
+                             and Pallas agree bitwise).
+
+The state region never wraps — the planner places it above the frame
+program's linear extent (``core.program``, wrap-free placement) — so the
+state offsets here are static Python ints; only the per-row output
+offset needs the ``% n_segments`` bounds check.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.program import resolve_activation
+from ..quant.requant import act_i32 as _q_act
+from ..quant.requant import (gru_update, gru_update_q12, requantize,
+                             requantize_i32)
+from .segment_matmul import SEG_WIDTH, _segs
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window temporal conv.
+# ---------------------------------------------------------------------------
+
+def _shift_window_p0(p, pool_ref, out_ref, w_vmem, sem_in, sem_out, *,
+                     in_ptr: int, state_ptr: int, wc: int, h_win: int,
+                     hop: int):
+    """Grid step 0: build the shifted window in VMEM and write it back."""
+    keep = (h_win - hop) * wc
+
+    @pl.when(p == 0)
+    def _():
+        cp1 = pltpu.make_async_copy(
+            pool_ref.at[pl.ds(state_ptr + hop * wc, keep)],
+            w_vmem.at[pl.ds(0, keep)], sem_in)
+        cp1.start()
+        cp1.wait()
+        cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(in_ptr, hop * wc)],
+                                    w_vmem.at[pl.ds(keep, hop * wc)],
+                                    sem_in)
+        cp2.start()
+        cp2.wait()
+        st = pltpu.make_async_copy(w_vmem,
+                                   out_ref.at[pl.ds(state_ptr,
+                                                    h_win * wc)], sem_out)
+        st.start()
+        st.wait()
+
+
+def _stream_kernel(pool_ref, w_ref, b_ref, out_ref, w_vmem, y_vmem, sem_in,
+                   sem_out, *, in_ptr: int, out_ptr: int, state_ptr: int,
+                   n_seg: int, h_win: int, w_in: int, h_out: int,
+                   w_out: int, c_in: int, c_out: int, k: int, stride: int,
+                   hop: int, pad_v: int, pad_h: int,
+                   activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    wc = w_in * ksegs
+    _shift_window_p0(p, pool_ref, out_ref, w_vmem, sem_in, sem_out,
+                     in_ptr=in_ptr, state_ptr=state_ptr, wc=wc,
+                     h_win=h_win, hop=hop)
+    acc = jnp.zeros((w_out, c_out), jnp.float32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(k):
+        src = p * stride - pad_v + r
+        valid_r = (src >= 0) & (src < h_win)
+        srcc = jnp.clip(src, 0, h_win - 1)
+        row = w_vmem[pl.ds(srcc * wc, wc)] \
+            .reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+            .astype(jnp.float32)
+        for s in range(k):
+            cols = qs * stride - pad_h + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.dot(jnp.where(ok, tap, 0.0),
+                                w_ref[r, s].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    y = resolve_activation(activation)(acc + b_ref[...].astype(jnp.float32))
+    y = y.astype(y_vmem.dtype)
+    padw = nsegs * SEG_WIDTH - c_out
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+def _stream_geometry(pool, *, w_in, w_out, c_in, c_out, h_win, hop,
+                     in_ptr, out_ptr, state_ptr):
+    n_seg = pool.shape[0]
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    wc = w_in * ksegs
+    if h_win % hop:
+        raise ValueError("hop must divide h_win")
+    if n_seg % wc or n_seg % (w_out * nsegs) or in_ptr % wc \
+            or out_ptr % (w_out * nsegs) or state_ptr % wc:
+        raise ValueError("pool/pointers not image-row aligned")
+    if state_ptr + h_win * wc > n_seg or in_ptr + hop * wc > n_seg:
+        raise ValueError("state/frame region wraps — streaming programs "
+                         "must be planned wrap-free (core.program)")
+    return n_seg, ksegs, nsegs, wc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_win", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "k", "stride", "padding", "hop", "in_ptr", "out_ptr",
+                     "state_ptr", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_stream(pool: jax.Array, w: jax.Array, b: jax.Array, *,
+                     h_win: int, w_in: int, h_out: int, w_out: int,
+                     c_in: int, c_out: int, k: int = 3, stride: int = 1,
+                     padding: str = "same", hop: int = 1, in_ptr: int = 0,
+                     out_ptr: int = 0, state_ptr: int = 0,
+                     activation: str | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """One streaming step: shift the ring-resident ``[h_win, w_in, c_in]``
+    window by ``hop`` image rows, append the staged frame, write the
+    window back at ``state_ptr``, and emit the full k x k conv output
+    ``[h_out, w_out, c_out]`` at ``out_ptr`` (``w``: [k, k, c_in,
+    c_out])."""
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
+
+    n_seg, ksegs, nsegs, wc = _stream_geometry(
+        pool, w_in=w_in, w_out=w_out, c_in=c_in, c_out=c_out, h_win=h_win,
+        hop=hop, in_ptr=in_ptr, out_ptr=out_ptr, state_ptr=state_ptr)
+    kernel = functools.partial(
+        _stream_kernel, in_ptr=in_ptr, out_ptr=out_ptr,
+        state_ptr=state_ptr, n_seg=n_seg, h_win=h_win, w_in=w_in,
+        h_out=h_out, w_out=w_out, c_in=c_in, c_out=c_out, k=k,
+        stride=stride, hop=hop, pad_v=conv_k2d_pad(k, padding),
+        pad_h=conv_k2d_pad_w(k, padding), activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((k, k, c_in, c_out), lambda p: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h_win * wc, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b)
+
+
+def _stream_q_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, w_vmem,
+                     y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+                     state_ptr: int, n_seg: int, h_win: int, w_in: int,
+                     h_out: int, w_out: int, c_in: int, c_out: int, k: int,
+                     stride: int, hop: int, pad_v: int, pad_h: int,
+                     activation: str | None):
+    p = pl.program_id(0)
+    ksegs, nsegs = _segs(c_in), _segs(c_out)
+    wc = w_in * ksegs
+    _shift_window_p0(p, pool_ref, out_ref, w_vmem, sem_in, sem_out,
+                     in_ptr=in_ptr, state_ptr=state_ptr, wc=wc,
+                     h_win=h_win, hop=hop)
+    acc = jnp.zeros((w_out, c_out), jnp.int32)
+    qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+    for r in range(k):
+        src = p * stride - pad_v + r
+        valid_r = (src >= 0) & (src < h_win)
+        srcc = jnp.clip(src, 0, h_win - 1)
+        row = w_vmem[pl.ds(srcc * wc, wc)] \
+            .reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+            .astype(jnp.int32)
+        for s in range(k):
+            cols = qs * stride - pad_h + s
+            valid_c = (cols >= 0) & (cols < w_in)
+            tap = jnp.take(row, jnp.clip(cols, 0, w_in - 1), axis=0)
+            ok = valid_r & valid_c[:, None]
+            acc = acc + jnp.dot(jnp.where(ok, tap, 0),
+                                w_ref[r, s].astype(jnp.int32),
+                                preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
+    y = requantize(acc, m_ref[...][None, :], s_ref[...][None, :])
+    padw = nsegs * SEG_WIDTH - c_out
+    if padw:
+        y = jnp.pad(y, ((0, 0), (0, padw)))
+    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    store = pltpu.make_async_copy(y_vmem,
+                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  sem_out)
+    store.start()
+    store.wait()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h_win", "w_in", "h_out", "w_out", "c_in", "c_out",
+                     "k", "stride", "padding", "hop", "in_ptr", "out_ptr",
+                     "state_ptr", "activation", "interpret"),
+    donate_argnums=(0,))
+def ring_conv_stream_q(pool: jax.Array, w: jax.Array, b: jax.Array,
+                       mult: jax.Array, shift: jax.Array, *, h_win: int,
+                       w_in: int, h_out: int, w_out: int, c_in: int,
+                       c_out: int, k: int = 3, stride: int = 1,
+                       padding: str = "same", hop: int = 1,
+                       in_ptr: int = 0, out_ptr: int = 0,
+                       state_ptr: int = 0, activation: str | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Int8 streaming conv: the window shift/writeback is an exact int8
+    copy; the conv is the conv_k2d int32-accumulate + per-channel
+    requantize pipeline."""
+    from ..core.rowsched import conv_k2d_pad, conv_k2d_pad_w
+
+    n_seg, ksegs, nsegs, wc = _stream_geometry(
+        pool, w_in=w_in, w_out=w_out, c_in=c_in, c_out=c_out, h_win=h_win,
+        hop=hop, in_ptr=in_ptr, out_ptr=out_ptr, state_ptr=state_ptr)
+    kernel = functools.partial(
+        _stream_q_kernel, in_ptr=in_ptr, out_ptr=out_ptr,
+        state_ptr=state_ptr, n_seg=n_seg, h_win=h_win, w_in=w_in,
+        h_out=h_out, w_out=w_out, c_in=c_in, c_out=c_out, k=k,
+        stride=stride, hop=hop, pad_v=conv_k2d_pad(k, padding),
+        pad_h=conv_k2d_pad_w(k, padding), activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((k, k, c_in, c_out), lambda p: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+            pl.BlockSpec((c_out,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h_win * wc, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, b, mult, shift)
+
+
+# ---------------------------------------------------------------------------
+# GRU cell.
+# ---------------------------------------------------------------------------
+
+def _gru_geometry(pool, *, d_in, d_h, in_ptr, out_ptr, state_ptr):
+    n_seg = pool.shape[0]
+    ci, co = _segs(d_in), _segs(d_h)
+    if n_seg % ci or n_seg % co or in_ptr % ci or out_ptr % co \
+            or state_ptr % co:
+        raise ValueError("pool/pointers not row aligned")
+    if state_ptr + co > n_seg or in_ptr + ci > n_seg:
+        raise ValueError("state/frame region wraps — streaming programs "
+                         "must be planned wrap-free (core.program)")
+    return n_seg, ci, co
+
+
+def _gru_loads(pool_ref, x_vmem, h_vmem, sem_in, *, in_ptr, state_ptr,
+               ci, co):
+    cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(in_ptr, ci)], x_vmem,
+                                sem_in)
+    cp1.start()
+    cp1.wait()
+    cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(state_ptr, co)], h_vmem,
+                                sem_in)
+    cp2.start()
+    cp2.wait()
+
+
+def _gru_stores(out_ref, h_vmem, sem_out, *, out_ptr, state_ptr, co,
+                n_seg):
+    st1 = pltpu.make_async_copy(h_vmem, out_ref.at[pl.ds(state_ptr, co)],
+                                sem_out)
+    st1.start()
+    st1.wait()
+    st2 = pltpu.make_async_copy(h_vmem,
+                                out_ref.at[pl.ds(out_ptr % n_seg, co)],
+                                sem_out)
+    st2.start()
+    st2.wait()
+
+
+def _gru_kernel(pool_ref, w_ref, u_ref, b_ref, out_ref, x_vmem, h_vmem,
+                sem_in, sem_out, *, in_ptr: int, out_ptr: int,
+                state_ptr: int, n_seg: int, d_in: int, d_h: int):
+    ci, co = _segs(d_in), _segs(d_h)
+    _gru_loads(pool_ref, x_vmem, h_vmem, sem_in, in_ptr=in_ptr,
+               state_ptr=state_ptr, ci=ci, co=co)
+    x = x_vmem[...].reshape(1, ci * SEG_WIDTH)[:, :d_in] \
+        .astype(jnp.float32)
+    h = h_vmem[...].reshape(1, co * SEG_WIDTH)[:, :d_h] \
+        .astype(jnp.float32)
+    gx = jnp.dot(x, w_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32) \
+        + b_ref[...].astype(jnp.float32)
+    gh = jnp.dot(h, u_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    hp = gru_update(gx, gh, h, d_h).astype(h_vmem.dtype)
+    pad = co * SEG_WIDTH - d_h
+    if pad:
+        hp = jnp.pad(hp, ((0, 0), (0, pad)))
+    h_vmem[...] = hp.reshape(co, SEG_WIDTH)
+    _gru_stores(out_ref, h_vmem, sem_out, out_ptr=out_ptr,
+                state_ptr=state_ptr, co=co, n_seg=n_seg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_in", "d_h", "in_ptr", "out_ptr", "state_ptr",
+                     "interpret"),
+    donate_argnums=(0,))
+def ring_gru_cell(pool: jax.Array, w: jax.Array, u: jax.Array,
+                  b: jax.Array, *, d_in: int, d_h: int, in_ptr: int = 0,
+                  out_ptr: int = 0, state_ptr: int = 0,
+                  interpret: bool = False) -> jax.Array:
+    """One GRU step in the ring: ``h' = gru_update(x@w + b, h@u, h)``
+    with ``h`` the pool-resident row at ``state_ptr``; ``h'`` is written
+    back there AND chained at ``out_ptr``."""
+    n_seg, ci, co = _gru_geometry(pool, d_in=d_in, d_h=d_h, in_ptr=in_ptr,
+                                  out_ptr=out_ptr, state_ptr=state_ptr)
+    kernel = functools.partial(_gru_kernel, in_ptr=in_ptr, out_ptr=out_ptr,
+                               state_ptr=state_ptr, n_seg=n_seg,
+                               d_in=d_in, d_h=d_h)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((d_in, 3 * d_h), lambda p: (0, 0)),
+            pl.BlockSpec((d_h, 3 * d_h), lambda p: (0, 0)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((ci, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((co, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, u, b)
+
+
+def _gru_q_kernel(pool_ref, w_ref, u_ref, b_ref, mx_ref, sx_ref, mu_ref,
+                  su_ref, out_ref, x_vmem, h_vmem, sem_in, sem_out, *,
+                  in_ptr: int, out_ptr: int, state_ptr: int, n_seg: int,
+                  d_in: int, d_h: int):
+    ci, co = _segs(d_in), _segs(d_h)
+    _gru_loads(pool_ref, x_vmem, h_vmem, sem_in, in_ptr=in_ptr,
+               state_ptr=state_ptr, ci=ci, co=co)
+    x = x_vmem[...].reshape(1, ci * SEG_WIDTH)[:, :d_in] \
+        .astype(jnp.int32)
+    h = h_vmem[...].reshape(1, co * SEG_WIDTH)[:, :d_h]
+    gx = requantize_i32(
+        jnp.dot(x, w_ref[...].astype(jnp.int32),
+                preferred_element_type=jnp.int32),
+        mx_ref[...][None, :], sx_ref[...][None, :])
+    gx = gx + b_ref[...].astype(jnp.int32)
+    gh = requantize_i32(
+        jnp.dot(h.astype(jnp.int32), u_ref[...].astype(jnp.int32),
+                preferred_element_type=jnp.int32),
+        mu_ref[...][None, :], su_ref[...][None, :])
+    hp = gru_update_q12(gx, gh, h, d_h)
+    pad = co * SEG_WIDTH - d_h
+    if pad:
+        hp = jnp.pad(hp, ((0, 0), (0, pad)))
+    h_vmem[...] = hp.reshape(co, SEG_WIDTH)
+    _gru_stores(out_ref, h_vmem, sem_out, out_ptr=out_ptr,
+                state_ptr=state_ptr, co=co, n_seg=n_seg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_in", "d_h", "in_ptr", "out_ptr", "state_ptr",
+                     "interpret"),
+    donate_argnums=(0,))
+def ring_gru_cell_q(pool: jax.Array, w: jax.Array, u: jax.Array,
+                    b: jax.Array, mult_x: jax.Array, shift_x: jax.Array,
+                    mult_u: jax.Array, shift_u: jax.Array, *, d_in: int,
+                    d_h: int, in_ptr: int = 0, out_ptr: int = 0,
+                    state_ptr: int = 0,
+                    interpret: bool = False) -> jax.Array:
+    """Int8 GRU step: both int32 accumulators requantize to the Q12 gate
+    domain, the update is the shared fully-integer pipeline
+    (``gru_update_q12``) and the hidden state stays at the fixed Q7
+    scale — bitwise-equal to the jnp executor."""
+    n_seg, ci, co = _gru_geometry(pool, d_in=d_in, d_h=d_h, in_ptr=in_ptr,
+                                  out_ptr=out_ptr, state_ptr=state_ptr)
+    kernel = functools.partial(_gru_q_kernel, in_ptr=in_ptr,
+                               out_ptr=out_ptr, state_ptr=state_ptr,
+                               n_seg=n_seg, d_in=d_in, d_h=d_h)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+            pl.BlockSpec((d_in, 3 * d_h), lambda p: (0, 0)),
+            pl.BlockSpec((d_h, 3 * d_h), lambda p: (0, 0)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+            pl.BlockSpec((3 * d_h,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((ci, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((co, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(pool, w, u, b, mult_x, shift_x, mult_u, shift_u)

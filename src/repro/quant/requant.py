@@ -163,6 +163,50 @@ def requantize(acc, multiplier, shift, *, zero_point=0):
     return jnp.clip(v, -128, 127).astype(jnp.int8)
 
 
+def gru_update(gx, gh, h, d_h: int):
+    """fp32 hard-gate GRU update (gate order z, r, n) — the ONE
+    definition the jnp executor, the reference oracle and the Pallas
+    kernel share.
+
+    ``gx = x @ w + b`` and ``gh = h @ u`` are ``[..., 3*d_h]`` gate
+    pre-activations; gates are piecewise linear — ``hard_sigmoid(t) =
+    clip(t/4 + 0.5, 0, 1)``, ``hard_tanh(t) = clip(t, -1, 1)`` — so the
+    int8 twin (:func:`gru_update_q12`) is a pure fixed-point pipeline
+    that agrees bitwise across backends."""
+    z = jnp.clip(0.25 * (gx[..., :d_h] + gh[..., :d_h]) + 0.5, 0.0, 1.0)
+    r = jnp.clip(0.25 * (gx[..., d_h:2 * d_h] + gh[..., d_h:2 * d_h])
+                 + 0.5, 0.0, 1.0)
+    n = jnp.clip(gx[..., 2 * d_h:] + r * gh[..., 2 * d_h:], -1.0, 1.0)
+    return (1.0 - z) * n + z * h
+
+
+def gru_update_q12(gx, gh, h_q7, d_h: int):
+    """Fixed-point twin of :func:`gru_update` (CMSIS-NN discipline).
+
+    ``gx``/``gh`` are int32 gate pre-activations in Q12 (scale 1/4096;
+    the Q12 bias is already folded into ``gx``); ``h_q7`` is the hidden
+    state at the FIXED Q7 state scale 1/128 (the pool-resident int8
+    layout).  hard_sigmoid lands in ``[0, 4096]`` Q12, hard_tanh in
+    ``[-4096, 4096]``, and the blend ``(1-z)*n + z*h`` resolves at Q7
+    with a single ``>> 12``.  Pre-activations saturate at ``±2**18``
+    (far past every gate's linear region) so all products fit int32.
+    Pure jnp — usable verbatim inside Pallas kernels.
+    """
+    lim = 1 << 18
+    gx = jnp.clip(jnp.asarray(gx, jnp.int32), -lim, lim)
+    gh = jnp.clip(jnp.asarray(gh, jnp.int32), -lim, lim)
+    h_q7 = jnp.asarray(h_q7, jnp.int32)
+    z = jnp.clip(((gx[..., :d_h] + gh[..., :d_h] + 2) >> 2) + 2048,
+                 0, 4096)
+    r = jnp.clip(((gx[..., d_h:2 * d_h] + gh[..., d_h:2 * d_h] + 2) >> 2)
+                 + 2048, 0, 4096)
+    n = jnp.clip(gx[..., 2 * d_h:]
+                 + ((r * gh[..., 2 * d_h:] + 2048) >> 12), -4096, 4096)
+    n_q7 = jnp.clip((n + 16) >> 5, -128, 127)
+    hp = (z * h_q7 + (4096 - z) * n_q7 + 2048) >> 12
+    return jnp.clip(hp, -128, 127).astype(jnp.int8)
+
+
 def act_i32(acc, activation):
     """Int32-domain activation between accumulate and requantize.
 

@@ -1,0 +1,15 @@
+"""Streaming inference subsystem (DESIGN.md §14).
+
+Persistent temporal state — ``conv_stream`` sliding windows and
+``gru_cell`` hidden vectors — lives INSIDE the segment ring, wrap-free
+above the frame program's linear extent, certified clobber-free across
+an unbounded step horizon by the static verifier.
+
+  * :func:`to_streaming` / :func:`to_full` — graph conversion,
+  * :class:`StreamSession` — the reset/step driver
+    (``repro.compile(...).stream()``).
+"""
+from .convert import to_full, to_streaming
+from .session import StreamSession
+
+__all__ = ["StreamSession", "to_full", "to_streaming"]

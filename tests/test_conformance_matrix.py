@@ -29,8 +29,9 @@ import pytest
 from repro.core.executors import execute, run_program
 from repro.core.graph_planner import ModuleConfig
 from repro.core.program import (AvgPoolSpec, ConvDWSpec, ConvK2DSpec,
-                                ConvPWSpec, ElementwiseSpec,
-                                EXECUTABLE_KINDS, FusedMLPSpec, GemmSpec,
+                                ConvPWSpec, ConvStreamSpec,
+                                ElementwiseSpec, EXECUTABLE_KINDS,
+                                FusedMLPSpec, GemmSpec, GRUCellSpec,
                                 IBModuleSpec, ResidualAddSpec,
                                 plan_program)
 from repro.graph.run import _quantize_net
@@ -225,6 +226,56 @@ def _cell_ib_fused() -> Cell:
                 _rand(k4, cfg.hw * cfg.hw, cfg.c_in), fp32, None)
 
 
+def _cell_conv_stream() -> Cell:
+    """One stream step from the zero (reset) state: the fresh pool's
+    zero-initialized window IS the reference conv's zero padding, so a
+    single ``run_program`` call is a well-defined matrix cell."""
+    h_win, w_, c_in, c_out, hop = 6, 5, 24, 32, 2
+    prog = plan_program(hop * w_, c_in,
+                        [ConvStreamSpec(h_win, w_, c_in, c_out, k=3,
+                                        stride=1, hop=hop,
+                                        activation="relu")], block_rows=1)
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    w = _rand(k1, 3, 3, c_in, c_out) / (9 * c_in) ** 0.5
+    b = _rand(k2, c_out) / 8
+
+    def fp32(x, p):
+        state = jnp.zeros((h_win, w_, c_in))
+        y, _ = ref.conv_stream_ref(state, x.reshape(hop, w_, c_in),
+                                   p[0][0], p[0][1], activation="relu")
+        return y.reshape(-1, c_out)
+
+    def int8(x_q, qp, ops):
+        state_q = jnp.zeros((h_win, w_, c_in), jnp.int8)
+        y, _ = ref.conv_stream_q_ref(state_q,
+                                     x_q.reshape(hop, w_, c_in),
+                                     *qp[0], activation="relu")
+        return y.reshape(-1, c_out)
+
+    return Cell(prog, [(w, b)], _rand(k3, hop * w_, c_in), fp32, int8)
+
+
+def _cell_gru_cell() -> Cell:
+    """One recurrence step from the zero hidden state (Q7 zero-point is
+    0, so int8 zero state == float zero state)."""
+    d_in, d_h = 40, 32
+    prog = plan_program(1, d_in, [GRUCellSpec(d_h)], block_rows=1)
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    w = _rand(k1, d_in, 3 * d_h) / d_in ** 0.5
+    u = _rand(k2, d_h, 3 * d_h) / d_h ** 0.5
+    b = _rand(k3, 3 * d_h) / 8
+
+    def fp32(x, p):
+        h = jnp.zeros((1, d_h))
+        return ref.gru_cell_ref(x, h, *p[0])
+
+    def int8(x_q, qp, ops):
+        h_q7 = jnp.zeros((1, d_h), jnp.int8)
+        return ref.gru_cell_q_ref(x_q, h_q7, *qp[0])
+
+    return Cell(prog, [(w, u, b)], _rand(k4, 1, d_in), fp32, int8)
+
+
 CELL_BUILDERS = {
     "gemm": _cell_gemm,
     "conv_pw": _cell_conv_pw,
@@ -235,6 +286,8 @@ CELL_BUILDERS = {
     "fused_mlp": _cell_fused_mlp,
     "elementwise": _cell_elementwise,
     "ib_fused": _cell_ib_fused,
+    "conv_stream": _cell_conv_stream,
+    "gru_cell": _cell_gru_cell,
 }
 
 

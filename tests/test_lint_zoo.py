@@ -17,6 +17,8 @@ COMBOS = [(net, tgt, dt)
           for net, tgt in (("mcunet-5fps-vww", "cortex-m4"),
                            ("mcunet-320kb-imagenet", "cortex-m7"),
                            ("ds-cnn", "cortex-m4"),
+                           ("ds-cnn-stream", "cortex-m4"),
+                           ("ad-toyadmos", "cortex-m4"),
                            ("resnet-8", "cortex-m4"),
                            ("mobilenetv1-0.25", "cortex-m4"))
           for dt in ("float32", "int8")]

@@ -7,9 +7,12 @@ import jax
 import numpy as np
 import pytest
 
+import jax.numpy as jnp
+
 import repro
 from repro.core.executors import run_program
-from repro.graph import (build_ds_cnn, build_mobilenet_v1, build_resnet8,
+from repro.graph import (build_ad_autoencoder, build_ds_cnn,
+                         build_mobilenet_v1, build_resnet8,
                          reference_forward)
 from repro.quant import QParams, quantize
 
@@ -88,6 +91,82 @@ def test_zoo_int8_all_backends_bitwise(net):
     rep = quantized_agreement(qnet, n=4)
     assert rep["cosine"] >= 0.99, rep
     assert rep["argmax_agreement"] >= 0.75, rep
+
+
+# ---------------------------------------------------------------------------
+# MLPerf-Tiny anomaly detection: the ToyADMOS FC autoencoder.
+# ---------------------------------------------------------------------------
+
+def test_ad_toyadmos_builder_validates():
+    g = build_ad_autoencoder()
+    g.validate()
+    fcs = [n for n in g.nodes.values() if n.kind == "fc"]
+    assert len(fcs) == 10                    # 4 enc + latent + 4 dec + head
+    assert fcs[-1].out.d == 640 and fcs[-1].activation is None
+    assert all(n.activation == "relu" for n in fcs[:-1])
+
+
+def test_ad_toyadmos_fp32_all_backends():
+    cn = repro.compile("ad-toyadmos", "host-sim")
+    assert cn.certificate["clobbers"] == 0
+    params = cn.ensure_params()
+    x = jax.random.normal(KEY, (cn.program.in_rows, cn.program.in_dim))
+    ref = reference_forward(cn.program, x, params)
+    tol = _tol(ref)
+    for backend in ("jnp", "pallas"):
+        y = cn.run(x, backend=backend)
+        assert y.shape == (1, 640)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), **tol)
+
+
+def test_ad_toyadmos_int8_cortex_m4_bitwise():
+    from repro.graph.run import quantized_agreement
+
+    cn = repro.compile("ad-toyadmos", "cortex-m4")
+    assert cn.quantized and cn.certificate["clobbers"] == 0
+    assert cn.report()["fits_sram"]
+    qnet = cn.qnet
+    x = jax.random.normal(KEY, (cn.program.in_rows, cn.program.in_dim))
+    x_q = quantize(x, QParams(scale=qnet.in_scale))
+    y_j, _ = run_program(qnet.program, x_q, qnet.qparams, backend="jnp")
+    y_p, _ = run_program(qnet.program, x_q, qnet.qparams,
+                         backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_j), np.asarray(y_p))
+    rep = quantized_agreement(qnet, n=4)
+    assert rep["cosine"] >= 0.99, rep
+
+
+def test_ad_toyadmos_alias_resolves():
+    cn = repro.compile("toyadmos", "host-sim", certify=False)
+    assert cn.net_name == "ad-toyadmos"
+
+
+# ---------------------------------------------------------------------------
+# Batched CompiledNet.run: one shared plan vmapped over a leading dim.
+# ---------------------------------------------------------------------------
+
+def test_batched_run_int8_bitwise_matches_loop():
+    """A leading batch dim vmaps ONE shared plan; the int8 path stays
+    bitwise identical to the per-sample loop."""
+    cn = repro.compile("ad-toyadmos", "cortex-m4")
+    x = jax.random.normal(KEY, (3, cn.program.in_rows, cn.program.in_dim))
+    y_b = cn.run(x)
+    assert y_b.shape == (3, 1, 640)
+    y_l = jnp.stack([cn.run(xi) for xi in x])
+    np.testing.assert_array_equal(np.asarray(y_b), np.asarray(y_l))
+    # pallas batches via the per-sample loop — same bitwise surface
+    y_p = cn.run(x, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_l))
+
+
+def test_batched_run_fp32_matches_loop():
+    cn = repro.compile("ds-cnn", "host-sim")
+    x = jax.random.normal(KEY, (2, cn.program.in_rows, cn.program.in_dim))
+    y_b = cn.run(x)
+    y_l = jnp.stack([cn.run(xi) for xi in x])
+    assert y_b.shape == y_l.shape
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_l),
+                               **_tol(y_l))
 
 
 def test_resnet8_shortcut_projection_plan_shape():

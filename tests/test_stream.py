@@ -1,0 +1,400 @@
+"""Streaming inference subsystem acceptance (DESIGN.md §14).
+
+Persistent temporal state on the segment ring — the fourth lifetime
+class.  Pinned here:
+
+  * graph conversion round-trip (``to_streaming`` / ``to_full``),
+  * >= 8 consecutive DS-CNN frames on sim (zero clobbers), jnp and
+    pallas, with int8 BITWISE jnp == pallas agreement per step,
+  * streaming-vs-full-recompute equivalence: once the window has
+    filled, every stream step reproduces the one-shot net on the
+    current window (bitwise in int8, exact in fp32) when the twin
+    shares the stream's weights and quantization,
+  * the static certificate's per-step counters times N equal the sim
+    oracle's N-step counters (the multi-step horizon proof is not
+    advisory — it predicts the byte traffic exactly),
+  * the state liveness diagnostics VMCU211/212/213 fire on hand-broken
+    plans, in agreement with the sim oracle where it can see the bug,
+  * multi-state chains (conv_stream window + GRU hidden vector) track
+    the kernels/ref.py oracles step by step in fp32 and bitwise int8,
+  * the streaming DS-CNN state + frame ring fits the 128 KB
+    cortex-m4 budget.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis.verifier import verify_program
+from repro.core.executors import execute, run_program
+from repro.core.pool import PoolClobberError
+from repro.core.program import (AvgPoolSpec, ConvStreamSpec, GRUCellSpec,
+                                plan_program)
+from repro.core.vpool import VirtualPool
+from repro.graph import QuantizedNet, build_ad_autoencoder, build_ds_cnn
+from repro.graph.run import _quantize_net
+from repro.kernels import ref
+from repro.quant import QParams, quantize
+from repro.stream import to_full, to_streaming
+
+KEY = jax.random.PRNGKey(7)
+N_FRAMES = 8
+SRAM_CORTEX_M4 = 128 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Graph conversion.
+# ---------------------------------------------------------------------------
+
+def test_to_streaming_round_trip():
+    g = build_ds_cnn()
+    gs = to_streaming(g)
+    assert gs.name == "ds-cnn-stream"
+    stems = [n for n in gs.nodes.values() if n.kind == "conv_stream"]
+    assert len(stems) == 1
+    win = g.nodes[g.input_id()].out
+    assert stems[0].h_win == win.h and stems[0].hop == 1
+    frame = gs.nodes[gs.input_id()].out
+    assert (frame.h, frame.w, frame.d) == (1, win.w, win.d)
+    assert to_streaming(gs) is gs                    # idempotent
+    gf = to_full(gs)
+    assert gf.name == g.name
+    assert [n.kind for n in gf.nodes.values()] \
+        == [n.kind for n in g.nodes.values()]
+    assert gf.nodes[gf.input_id()].out == win
+
+
+def test_to_streaming_rejects_non_conv_stem():
+    with pytest.raises(ValueError, match="conv_k2d stem"):
+        to_streaming(build_ad_autoencoder())
+
+
+def test_to_full_requires_single_stream_stem():
+    with pytest.raises(ValueError, match="conv_stream"):
+        to_full(build_ds_cnn())
+
+
+# ---------------------------------------------------------------------------
+# DS-CNN streaming compile: >= 8 consecutive frames on every backend.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ds_int8():
+    return repro.compile("ds-cnn", "cortex-m4", dtype="int8",
+                         streaming=True)
+
+
+@pytest.fixture(scope="module")
+def ds_fp32():
+    return repro.compile("ds-cnn", "host-sim", streaming=True)
+
+
+def _frames(program, n, key=KEY):
+    return jax.random.normal(
+        key, (n, program.ops[0].rows_in, program.in_dim))
+
+
+def test_stream_sim_n_frames_zero_clobbers(ds_int8):
+    """Eight consecutive frames through the clobber oracle on ONE
+    persistent pool — state survives every step or the sim raises."""
+    sess = ds_int8.stream(backend="sim")
+    for _ in range(N_FRAMES):
+        counters = sess.step()
+    assert counters["steps"] == N_FRAMES
+    assert counters["peak_live"] <= ds_int8.qnet.program.n_segments
+
+
+def test_stream_int8_jnp_pallas_bitwise(ds_int8):
+    prog = ds_int8.qnet.program
+    frames_q = quantize(_frames(prog, N_FRAMES),
+                        QParams(scale=ds_int8.qnet.in_scale))
+    sj = ds_int8.stream(backend="jnp")
+    sp = ds_int8.stream(backend="pallas")
+    for f in frames_q:
+        y_j, y_p = sj.step(f), sp.step(f)
+        assert y_j.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(y_j), np.asarray(y_p))
+    # ... and the whole ring (frame extent AND state) agrees bitwise
+    np.testing.assert_array_equal(np.asarray(sj._pool.array),
+                                  np.asarray(sp._pool.array))
+
+
+def test_stream_fp32_jnp_pallas_allclose(ds_fp32):
+    frames = _frames(ds_fp32.program, N_FRAMES)
+    sj = ds_fp32.stream(backend="jnp")
+    sp = ds_fp32.stream(backend="pallas")
+    for f in frames:
+        y_j, y_p = sj.step(f), sp.step(f)
+        np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_p),
+                                   rtol=3e-4, atol=1e-5)
+
+
+def test_stream_reset_restarts_from_zero_state(ds_int8):
+    prog = ds_int8.qnet.program
+    frames_q = quantize(_frames(prog, 3),
+                        QParams(scale=ds_int8.qnet.in_scale))
+    sess = ds_int8.stream(backend="jnp")
+    first = [np.asarray(sess.step(f)) for f in frames_q]
+    assert sess.steps == 3
+    sess.reset()
+    assert sess.steps == 0
+    again = [np.asarray(sess.step(f)) for f in frames_q]
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Streaming == full recompute, once the window has filled.
+# ---------------------------------------------------------------------------
+
+def _window_frames(x, prog):
+    """Split the full one-shot input into per-step frames."""
+    rows = prog.ops[0].rows_in
+    return x.reshape(-1, rows, prog.in_dim)
+
+
+def test_stream_matches_one_shot_int8_bitwise(ds_int8):
+    """After ``h_win`` frames the stream output equals the one-shot
+    DS-CNN on the same window BITWISE — provided the twin shares the
+    stream's weights AND quantization (calibration sees frames, not
+    windows, so the qparams are copied, not re-derived)."""
+    cf = repro.compile("ds-cnn", "cortex-m4", dtype="int8",
+                       certify=False)
+    qs = ds_int8.qnet
+    twin = QuantizedNet(plan=None, program=cf.qnet.program,
+                        params=qs.params, qparams=qs.qparams,
+                        act_scales=qs.act_scales)
+    h_win = ds_int8.program.ops[0].h_in
+    x = jax.random.normal(KEY, (twin.program.in_rows,
+                                twin.program.in_dim))
+    x_q = quantize(x, QParams(scale=qs.in_scale))
+    y_full, _ = run_program(twin.program, x_q, twin.qparams,
+                            backend="jnp")
+    sess = ds_int8.stream(backend="jnp")
+    y_stream = sess.run(_window_frames(x_q, qs.program))
+    assert sess.steps == h_win
+    np.testing.assert_array_equal(np.asarray(y_stream),
+                                  np.asarray(y_full))
+
+
+def test_stream_matches_one_shot_fp32(ds_fp32):
+    cf = repro.compile("ds-cnn", "host-sim", certify=False)
+    params = ds_fp32.ensure_params()   # shared weights, aligned op lists
+    h_win = ds_fp32.program.ops[0].h_in
+    x = jax.random.normal(KEY, (cf.program.in_rows, cf.program.in_dim))
+    y_full, _ = run_program(cf.program, x, params, backend="jnp")
+    sess = ds_fp32.stream(backend="jnp")
+    y_stream = sess.run(_window_frames(x, ds_fp32.program))
+    assert sess.steps == h_win
+    np.testing.assert_allclose(np.asarray(y_stream),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The multi-step certificate: static counters x N == sim counters(N).
+# ---------------------------------------------------------------------------
+
+def test_static_certificate_predicts_n_step_sim_counters(ds_int8):
+    prog = ds_int8.qnet.program
+    res = verify_program(prog)
+    assert res.safe is True
+    st = res.stats
+    assert st["stream_horizon"] == "unbounded"
+    assert st["n_states"] == 1
+    state = st["state_segments"]
+    assert state == sum(op.state_segments for op in prog.ops)
+    sess = ds_int8.stream(backend="sim")
+    for k in range(1, N_FRAMES + 1):
+        c = sess.step()
+        # the state is pre-written once; every step then re-reads and
+        # rewrites it, so the per-step static stats add linearly
+        assert c["reads"] == k * st["reads"]
+        assert c["writes"] == state + k * (st["writes"] - state)
+        assert c["peak_live"] == st["peak_live"]
+
+
+def test_compile_certificate_carries_stream_horizon(ds_int8):
+    cert = ds_int8.certificate
+    assert cert["clobbers"] == 0
+    assert cert["stream_horizon"] == "unbounded"
+    assert cert["n_states"] == 1 and cert["state_segments"] > 0
+
+
+def test_stream_state_fits_cortex_m4_budget(ds_int8):
+    """Acceptance: frame ring + persistent state together fit the
+    paper's 128 KB board, and the state is wrap-free above the frame
+    program's linear extent."""
+    prog = ds_int8.qnet.program
+    assert prog.physical_pool_bytes <= SRAM_CORTEX_M4
+    sess = ds_int8.stream(backend="sim")
+    assert 0 < sess.state_bytes < prog.physical_pool_bytes
+    for op in prog.ops:
+        if op.state_segments:
+            assert op.state_ptr + op.state_segments <= prog.n_segments
+            for other in prog.ops:
+                # frame traffic lives strictly below every state region
+                assert other.in_ptr + other.in_segments <= op.state_ptr
+                assert other.out_ptr + other.out_segments <= op.state_ptr
+
+
+# ---------------------------------------------------------------------------
+# State liveness diagnostics: VMCU211 / 212 / 213.
+# ---------------------------------------------------------------------------
+
+def _stream_prog():
+    return plan_program(10, 24,
+                        [ConvStreamSpec(6, 5, 24, 32, k=3, hop=2,
+                                        activation="relu")], block_rows=1)
+
+
+def _mutate_op0(prog, **kw):
+    ops = list(prog.ops)
+    ops[0] = dataclasses.replace(ops[0], **kw)
+    return dataclasses.replace(prog, ops=tuple(ops))
+
+
+def test_vmcu211_state_clobbered_by_frame_traffic():
+    prog = _stream_prog()
+    bad = _mutate_op0(prog, state_ptr=prog.ops[0].out_ptr)
+    res = verify_program(bad)
+    assert res.safe is False
+    assert res.errors[0].code == "VMCU211"
+    # agreement: the sim oracle sees the same clobber
+    with pytest.raises(PoolClobberError):
+        execute(bad, backend="sim")
+
+
+def test_vmcu212_wrong_state_extent():
+    prog = _stream_prog()
+    bad = _mutate_op0(prog, state_segments=prog.ops[0].state_segments - 1)
+    res = verify_program(bad)
+    assert res.safe is False
+    assert res.errors[0].code == "VMCU212"
+
+
+def test_vmcu213_state_wraps_ring():
+    prog = _stream_prog()
+    bad = _mutate_op0(prog, state_ptr=prog.n_segments - 1)
+    res = verify_program(bad)
+    assert res.safe is False
+    assert res.errors[0].code == "VMCU213"
+
+
+def test_stream_prog_static_stats_match_sim_exactly():
+    """The small synthetic stream program, adversarially: static stats
+    equal the sim pool counters bit for bit (the verifier's agreement
+    contract extends to the state lifetime class)."""
+    prog = _stream_prog()
+    res = verify_program(prog)
+    assert res.safe is True
+    sim = execute(prog, backend="sim")
+    assert res.stats["reads"] == sim.reads
+    assert res.stats["writes"] == sim.writes
+    assert res.stats["peak_live"] == sim.peak_live
+
+
+# ---------------------------------------------------------------------------
+# Multi-state chain: conv_stream window + GRU hidden vector, vs oracle.
+# ---------------------------------------------------------------------------
+
+H_WIN, W_, C_IN, C_OUT, HOP, D_H = 6, 5, 8, 16, 2, 24
+
+
+def _chain_prog():
+    return plan_program(HOP * W_, C_IN, [
+        ConvStreamSpec(H_WIN, W_, C_IN, C_OUT, k=3, hop=HOP,
+                       activation="relu"),
+        AvgPoolSpec(H_WIN, W_, C_OUT),
+        GRUCellSpec(D_H)], block_rows=1)
+
+
+def _chain_params():
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    w = jax.random.normal(k1, (3, 3, C_IN, C_OUT)) / (9 * C_IN) ** 0.5
+    b = jax.random.normal(k2, (C_OUT,)) / 8
+    wg = jax.random.normal(k3, (C_OUT, 3 * D_H)) / C_OUT ** 0.5
+    ug = jax.random.normal(k4, (D_H, 3 * D_H)) / D_H ** 0.5
+    bg = jax.random.normal(k5, (3 * D_H,)) / 8
+    return [(w, b), None, (wg, ug, bg)]
+
+
+def test_chain_two_states_certified():
+    res = verify_program(_chain_prog())
+    assert res.safe is True
+    assert res.stats["n_states"] == 2
+    assert res.stats["stream_horizon"] == "unbounded"
+
+
+def test_chain_fp32_tracks_oracle_step_by_step():
+    prog, params = _chain_prog(), _chain_params()
+    (w, b), _, (wg, ug, bg) = params
+    pool = VirtualPool.alloc(prog.spec(jnp.float32))
+    state = jnp.zeros((H_WIN, W_, C_IN))
+    h = jnp.zeros((1, D_H))
+    frames = jax.random.normal(KEY, (5, HOP * W_, C_IN))
+    for frame in frames:
+        pool = pool.stage_rows(frame, prog.input_ptr)
+        pool = execute(prog, pool, params, backend="jnp")
+        y = pool.fetch_rows(prog.output_ptr, prog.out_rows, prog.out_dim)
+        yc, state = ref.conv_stream_ref(state,
+                                        frame.reshape(HOP, W_, C_IN),
+                                        w, b, activation="relu")
+        h = ref.gru_cell_ref(ref.avgpool_ref(yc), h, wg, ug, bg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(h),
+                                   rtol=3e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_chain_int8_bitwise_tracks_q_oracle(backend):
+    """Both persistent state classes through the fixed-point pipeline:
+    the ring execution stays BITWISE equal to the q-oracles for every
+    step — the Q7 hidden state and int8 window survive exactly."""
+    prog, params = _chain_prog(), _chain_params()
+    qnet = _quantize_net(prog, params)
+    qprog = qnet.program
+    pool = VirtualPool.alloc(qprog.spec(jnp.int8))
+    state_q = jnp.zeros((H_WIN, W_, C_IN), jnp.int8)
+    h_q7 = jnp.zeros((1, D_H), jnp.int8)
+    frames = jax.random.normal(KEY, (5, HOP * W_, C_IN))
+    frames_q = quantize(frames, QParams(scale=qnet.in_scale))
+    for frame_q in frames_q:
+        pool = pool.stage_rows(frame_q, qprog.input_ptr)
+        pool = execute(qprog, pool, qnet.qparams, backend=backend)
+        y = pool.fetch_rows(qprog.output_ptr, qprog.out_rows,
+                            qprog.out_dim)
+        yc, state_q = ref.conv_stream_q_ref(
+            state_q, frame_q.reshape(HOP, W_, C_IN), *qnet.qparams[0],
+            activation="relu")
+        ya = ref.avgpool_q_ref(yc, *qnet.qparams[1])
+        h_q7 = ref.gru_cell_q_ref(ya, h_q7, *qnet.qparams[2])
+        assert y.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(h_q7))
+
+
+# ---------------------------------------------------------------------------
+# Session API edges.
+# ---------------------------------------------------------------------------
+
+def test_session_requires_streaming_compile():
+    cn = repro.compile("ds-cnn", "host-sim", certify=False)
+    with pytest.raises(ValueError, match="streaming=True"):
+        cn.stream()
+
+
+def test_session_array_backend_needs_frames(ds_fp32):
+    sess = ds_fp32.stream(backend="jnp")
+    with pytest.raises(ValueError, match="frame"):
+        sess.step()
+
+
+def test_session_trace_collects_per_step_artifacts(ds_fp32):
+    sess = ds_fp32.stream(backend="jnp", trace=True)
+    frames = _frames(ds_fp32.program, 2)
+    for f in frames:
+        sess.step(f)
+    assert len(sess.traces) == 2
+    for tr in sess.traces:
+        assert tr.events, "trace artifact must carry per-op events"
