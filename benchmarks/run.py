@@ -3,6 +3,8 @@
   single_layer   — Fig. 7  (RAM, 9 pointwise convs)
   energy_proxy   — Fig. 8  (memory-traffic proxy for energy)
   latency        — Table 3 (ring vs naive kernel cost, CPU-relative)
+  throughput     — inferences/sec through the batched CompiledNet.run
+                   fast path at batch 1/32/256
   multi_layer    — Fig. 9/10 (inverted bottlenecks, S1–S8 / B1–B17)
   full_network   — whole-DNN bottleneck via the compile facade (§7/§9):
                    the paper's 61.5% headline metric
@@ -24,7 +26,12 @@ row dump and wall-time) so the perf trajectory is tracked across PRs.
 ``--smoke`` runs the fast, deterministic planner sections only (CI);
 whenever a committed ``BENCH_vmcu.json`` exists, the new planner
 footprints are compared against it and the run FAILS if any regressed
-(``--no-check`` to skip).
+(``--no-check`` to skip).  Wall-time sections are gated too: every
+Table 3 ring/naive ratio must stay under ``VMCU_BENCH_LATENCY_TOL``
+(default 1.5) and neither latency ratios nor throughput rates may
+worsen beyond ``VMCU_BENCH_REGRESS_TOL``× (default 2.0) the committed
+numbers — loosen either env knob on noisy CI, or set
+``VMCU_BENCH_REGRESS_TOL=0`` to disable the relative wall gates.
 """
 from __future__ import annotations
 
@@ -32,16 +39,27 @@ import argparse
 import json
 import os
 import sys
-import time
 
 import jax
 
 from . import (capacity, energy_proxy, full_network, int8_network, latency,
                model_zoo, multi_layer, partial_execution, pool_footprint,
-               roofline_table, single_layer, streaming, traffic)
-from .timing import bench_us
+               roofline_table, single_layer, streaming, throughput, traffic)
+from .timing import bench_us, time_us
 
 BENCH_JSON = "BENCH_vmcu.json"
+
+#: Wall-time gate knobs.  The bench runs on a noisy shared CPU, so both
+#: carry deliberate headroom; loosen them via env on noisier CI:
+#:   VMCU_BENCH_LATENCY_TOL — absolute cap on every Table3 ring/naive
+#:                            ratio (default 1.5; the acceptance target
+#:                            is <= 1.2 under quiet conditions)
+#:   VMCU_BENCH_REGRESS_TOL — relative worsening factor allowed vs the
+#:                            committed BENCH_vmcu.json wall numbers
+#:                            (default 2.0; <= 0 disables the relative
+#:                            wall gates entirely)
+LATENCY_RATIO_CAP = float(os.environ.get("VMCU_BENCH_LATENCY_TOL", "1.5"))
+REGRESS_TOL = float(os.environ.get("VMCU_BENCH_REGRESS_TOL", "2.0"))
 
 
 def _multi_layer_rows():
@@ -61,12 +79,10 @@ _PIPELINE_ZOO = [("mcunet-5fps-vww", "cortex-m4", True),
 
 
 def _best_of(fn, n=3):
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Best-of-n wall seconds; every call is blocked on its JAX result
+    (``timing.time_us``) — a bare perf_counter around async dispatch
+    times the dispatch, not the work."""
+    return min(time_us(fn) for _ in range(n)) / 1e6
 
 
 def _compile_pipeline_rows():
@@ -135,6 +151,52 @@ def _compile_pipeline_show(rows):
               f"({r['certify_speedup']:.0f}x)")
 
 
+def check_latency_gate(rows, old_rows=None) -> list[str]:
+    """Wall-time gate on Table 3: every ring/naive ratio must stay
+    under the absolute cap, and must not worsen beyond REGRESS_TOL×
+    the committed ratio (wall-times were previously exempt from the
+    regression check — a real slowdown could land silently)."""
+    bad = []
+    old = {r["case"]: r for r in (old_rows or [])}
+    for r in rows:
+        if r["ratio"] > LATENCY_RATIO_CAP:
+            bad.append(
+                f"latency gate: {r['case']} ring/naive ratio "
+                f"{r['ratio']:.2f} > cap {LATENCY_RATIO_CAP:.2f} "
+                f"(VMCU_BENCH_LATENCY_TOL to loosen)")
+        prev = old.get(r["case"])
+        if prev and REGRESS_TOL > 0 \
+                and r["ratio"] > prev["ratio"] * REGRESS_TOL:
+            bad.append(
+                f"latency gate: {r['case']} ratio {r['ratio']:.2f} > "
+                f"{REGRESS_TOL:.1f}x committed {prev['ratio']:.2f} "
+                f"(VMCU_BENCH_REGRESS_TOL to loosen)")
+    return bad
+
+
+def check_throughput_gate(rows, old_rows=None) -> list[str]:
+    """The Throughput section must be populated with positive rates and
+    must not collapse beyond REGRESS_TOL× vs the committed numbers."""
+    if not rows:
+        return ["throughput gate: Throughput section empty"]
+    bad = []
+    old = {(r["net"], r["batch"]): r for r in (old_rows or [])}
+    for r in rows:
+        if not r["inf_per_sec"] > 0:
+            bad.append(f"throughput gate: {r['net']} batch {r['batch']} "
+                       f"rate {r['inf_per_sec']} not positive")
+            continue
+        prev = old.get((r["net"], r["batch"]))
+        if prev and REGRESS_TOL > 0 \
+                and r["inf_per_sec"] < prev["inf_per_sec"] / REGRESS_TOL:
+            bad.append(
+                f"throughput gate: {r['net']} batch {r['batch']} "
+                f"{r['inf_per_sec']:.1f} inf/s < committed "
+                f"{prev['inf_per_sec']:.1f} / {REGRESS_TOL:.1f} "
+                f"(VMCU_BENCH_REGRESS_TOL to loosen)")
+    return bad
+
+
 def check_certify_gate(rows) -> list[str]:
     """--smoke gate: the static proof must cost <10% of the sim replay
     on MCUNet-VWW (the acceptance headline; other nets are recorded
@@ -156,7 +218,8 @@ def check_certify_gate(rows) -> list[str]:
 SECTIONS = [
     ("Fig7_single_layer_ram", single_layer.run, single_layer.main, True),
     ("Fig8_energy_proxy", energy_proxy.run, energy_proxy.main, True),
-    ("Table3_latency", latency.run, latency.main, False),
+    ("Table3_latency", latency.run, latency.main, True),
+    ("Throughput", throughput.run, throughput.main, True),
     ("Fig9_10_multi_layer_ram", _multi_layer_rows, multi_layer.main, True),
     ("Net_full_network", full_network.run, full_network.main, True),
     ("Int8_full_network", int8_network.run, int8_network.main, True),
@@ -350,6 +413,21 @@ def main(argv=None) -> None:
             for msg in bad:
                 print(f"#   {msg}")
             sys.exit(1)
+
+    old_sections = (old_payload or {}).get("sections", {})
+    wall_bad = []
+    if "Table3_latency" in section_rows:
+        wall_bad += check_latency_gate(
+            section_rows["Table3_latency"],
+            old_sections.get("Table3_latency"))
+    if "Throughput" in section_rows:
+        wall_bad += check_throughput_gate(
+            section_rows["Throughput"], old_sections.get("Throughput"))
+    if wall_bad:
+        print("\n# WALL-TIME GATE FAILED:")
+        for msg in wall_bad:
+            print(f"#   {msg}")
+        sys.exit(1)
 
     if old_payload is not None:
         bad = check_regressions(old_payload, payload)

@@ -1,0 +1,46 @@
+"""Throughput — end-to-end inferences/sec through the compiled ring.
+
+Times the batched ``CompiledNet.run`` fast path (ONE solved plan,
+vmapped over the batch lanes on the ``jnp`` executor; quantize /
+dequantize batched outside the traced region) at batch 1 / 32 / 256.
+The section answers the question Table 3 cannot: whether the ring's
+per-op mechanics amortize when the deployment actually streams inputs.
+Wall-times are CPU-relative indicators, not TPU numbers.
+"""
+from __future__ import annotations
+
+import jax
+
+from .timing import bench_us
+
+#: (net, target) — a small zoo net so the section stays smoke-fast.
+NET, TARGET = "ds-cnn", "cortex-m4"
+BATCHES = (1, 32, 256)
+
+
+def run() -> list[dict]:
+    import repro
+
+    cn = repro.compile(NET, target=TARGET)
+    rows = []
+    for bs in BATCHES:
+        x = jax.random.normal(
+            jax.random.PRNGKey(0),
+            (bs, cn.program.in_rows, cn.program.in_dim))
+        us = bench_us(cn.run, x, iters=5)
+        rows.append({"net": NET, "target": TARGET, "batch": bs,
+                     "wall_us": us, "inf_per_sec": bs / (us * 1e-6)})
+    return rows
+
+
+def main(rows: list[dict] | None = None) -> None:
+    rows = run() if rows is None else rows
+    print("net,target,batch,wall_us,inf_per_sec")
+    for r in rows:
+        print(f"{r['net']},{r['target']},{r['batch']},"
+              f"{r['wall_us']:.0f},{r['inf_per_sec']:.1f}")
+    print("# batched CompiledNet.run: one plan, vmapped pool lanes")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,18 @@ import time
 import jax
 
 
+def time_us(fn, *args) -> float:
+    """One blocked wall-time measurement of ``fn(*args)`` in μs.
+
+    The result is ``jax.block_until_ready``-ed before the clock stops —
+    a bare ``perf_counter`` around an async-dispatching call times the
+    dispatch, not the work.
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) * 1e6
+
+
 def bench_us(fn, *args, iters: int = 20) -> float:
     """Mean wall-time of ``fn(*args)`` in microseconds.
 

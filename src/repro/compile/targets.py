@@ -40,6 +40,9 @@ class Target:
     flash_bytes: int
     seg_width: int = SEG_WIDTH
     block_rows: int | None = 1    # DMA block alignment (None = tight)
+    kernel_block_rows: int = 8    # pallas execution granularity cap
+                                  # (rows fused per grid step; NOT plan
+                                  # geometry — certificates are unchanged)
     simd_bits: int = 32
     requant_idiom: str = "smlad"  # one of REQUANT_IDIOMS
     default_dtype: str = "int8"

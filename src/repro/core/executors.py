@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from .pool import SegmentPool
 from .program import (EXECUTABLE_KINDS, PoolProgram, resolve_activation)
-from .vpool import VirtualPool, fetch_rows, segments_for, stage_rows
+from .vpool import (VirtualPool, fetch_rows, fetch_segments, segments_for,
+                    stage_rows, stage_segments)
 
 # ---------------------------------------------------------------------------
 # Registry.
@@ -176,36 +177,29 @@ def _like_input(pool, array):
 def gemm_ring_scan(pool: jax.Array, w: jax.Array, b: jax.Array, *,
                    in_ptr: int, out_ptr: int, m_rows: int, n_segments: int,
                    block_rows: int, activation: str | None) -> jax.Array:
-    """One FC layer streamed through the ring, ``block_rows`` rows/step.
+    """One FC layer streamed through the ring as a coalesced superblock.
 
-    The jnp mirror of the Pallas ring-GEMM (paper Fig. 4): gather a
-    row-block of input segments at the modular index, MXU-dot against the
-    un-pooled ("Flash") weight in fp32, scatter the output row-block at the
-    solved offset.
+    The jnp mirror of the Pallas ring-GEMM (paper Fig. 4): gather the
+    input segments at the modular index, MXU-dot against the un-pooled
+    ("Flash") weight in fp32, scatter the output rows at the solved
+    offset.  ``block_rows`` is the plan's DMA alignment (it must divide
+    ``m_rows``); execution coalesces all row-blocks into ONE
+    gather/compute/scatter, which DESIGN.md §15 proves bit-identical to
+    the certified per-step schedule.
     """
     d_in, d_out = w.shape
-    seg_w = pool.shape[1]
-    k_segs, n_segs = segments_for(d_in, seg_w), segments_for(d_out, seg_w)
-    bk, bn = block_rows * k_segs, block_rows * n_segs
     if m_rows % block_rows:
         raise ValueError("block_rows must divide m_rows")
     act = resolve_activation(activation)
-
-    def step(p, i):
-        ridx = (in_ptr + i * bk + jnp.arange(bk)) % n_segments
-        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
-        x = x[:, :d_in]
-        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
-        y = act(y + b.astype(jnp.float32))
-        y = y.astype(p.dtype)
-        pad = n_segs * seg_w - d_out
-        if pad:
-            y = jnp.pad(y, ((0, 0), (0, pad)))
-        widx = (out_ptr + i * bn + jnp.arange(bn)) % n_segments
-        return p.at[widx].set(y.reshape(bn, seg_w)), None
-
-    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
-    return pool
+    # Superblock coalescing: the certified schedule proves a store at step
+    # t only lands on segments already freed (never read at any step >= t),
+    # so gathering EVERY input row before the first store reads exactly the
+    # bytes the per-step scan would have read, and the store targets are
+    # pairwise distinct — one fetch/dot/stage replaces the whole scan.
+    x = fetch_rows(pool, in_ptr, m_rows, d_in, n_segments)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = act(y + b.astype(jnp.float32)).astype(pool.dtype)
+    return stage_rows(pool, y, out_ptr, n_segments)
 
 
 def mlp_ring_scan(pool: jax.Array, w_gate, w_up, w_down, *, ptr: int,
@@ -214,38 +208,28 @@ def mlp_ring_scan(pool: jax.Array, w_gate, w_up, w_down, *, ptr: int,
                   activation: str) -> jax.Array:
     """In-place fused MLP, mirroring the Pallas kernel's per-``ff_tile``
     accumulation order so the two backends agree to float tolerance."""
-    seg_w = pool.shape[1]
-    d_segs = segments_for(d_model, seg_w)
-    bd = block_rows * d_segs
     d_ff = w_up.shape[1]
     act = resolve_activation(activation)
-
-    def step(p, i):
-        idx = (ptr + i * bd + jnp.arange(bd)) % n_segments
-        x = jnp.take(p, idx, axis=0).reshape(block_rows, d_segs * seg_w)
-        x = x[:, :d_model].astype(jnp.float32)
-        acc = jnp.zeros((block_rows, d_model), jnp.float32)
-        for f in range(d_ff // ff_tile):
-            sl = slice(f * ff_tile, (f + 1) * ff_tile)
-            up = jnp.dot(x, w_up[:, sl].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
-            if gated:
-                gate = jnp.dot(x, w_gate[:, sl].astype(jnp.float32),
-                               preferred_element_type=jnp.float32)
-                h = act(gate) * up
-            else:
-                h = act(up)
-            acc = acc + jnp.dot(h, w_down[sl, :].astype(jnp.float32),
-                                preferred_element_type=jnp.float32)
-        y = acc + x if residual else acc
-        y = y.astype(p.dtype)
-        pad = d_segs * seg_w - d_model
-        if pad:
-            y = jnp.pad(y, ((0, 0), (0, pad)))
-        return p.at[idx].set(y.reshape(bd, seg_w)), None
-
-    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
-    return pool
+    # In-place op (delta == 0): every row's output depends only on that
+    # row's input and lands on the segments it was read from, so the
+    # per-row-block scan coalesces into one fetch/compute/stage.
+    x = fetch_rows(pool, ptr, m_rows, d_model,
+                   n_segments).astype(jnp.float32)
+    acc = jnp.zeros((m_rows, d_model), jnp.float32)
+    for f in range(d_ff // ff_tile):
+        sl = slice(f * ff_tile, (f + 1) * ff_tile)
+        up = jnp.dot(x, w_up[:, sl].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+        if gated:
+            gate = jnp.dot(x, w_gate[:, sl].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            h = act(gate) * up
+        else:
+            h = act(up)
+        acc = acc + jnp.dot(h, w_down[sl, :].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    y = acc + x if residual else acc
+    return stage_rows(pool, y.astype(pool.dtype), ptr, n_segments)
 
 
 def elementwise_ring_scan(pool: jax.Array, *, ptr: int, m_rows: int,
@@ -255,16 +239,11 @@ def elementwise_ring_scan(pool: jax.Array, *, ptr: int, m_rows: int,
     padded tile — every registered fn maps 0 to 0, preserving padding)."""
     seg_w = pool.shape[1]
     d_segs = segments_for(d, seg_w)
-    bd = block_rows * d_segs
     f = resolve_activation(fn)
-
-    def step(p, i):
-        idx = (ptr + i * bd + jnp.arange(bd)) % n_segments
-        x = jnp.take(p, idx, axis=0).astype(jnp.float32)
-        return p.at[idx].set(f(x).astype(p.dtype)), None
-
-    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
-    return pool
+    # In-place, row-local (delta == 0): coalesce the whole scan.
+    x = fetch_segments(pool, ptr, m_rows * d_segs,
+                       n_segments).astype(jnp.float32)
+    return stage_segments(pool, f(x).astype(pool.dtype), ptr, n_segments)
 
 
 # ---------------------------------------------------------------------------
@@ -529,26 +508,14 @@ def gemm_ring_scan_q(pool, w, b, mult, shift, *, in_ptr, out_ptr, m_rows,
                      n_segments, block_rows, d_in, d_out, activation):
     from ..quant.requant import requantize
 
-    seg_w = pool.shape[1]
-    k_segs, n_segs = segments_for(d_in, seg_w), segments_for(d_out, seg_w)
-    bk, bn = block_rows * k_segs, block_rows * n_segs
-
-    def step(p, i):
-        ridx = (in_ptr + i * bk + jnp.arange(bk)) % n_segments
-        x = jnp.take(p, ridx, axis=0).reshape(block_rows, k_segs * seg_w)
-        x = x[:, :d_in].astype(jnp.int32)
-        acc = jnp.dot(x, w.astype(jnp.int32),
-                      preferred_element_type=jnp.int32)
-        acc = _q_act(acc + b.astype(jnp.int32), activation)
-        y = requantize(acc, mult[None, :], shift[None, :])
-        pad = n_segs * seg_w - d_out
-        if pad:
-            y = jnp.pad(y, ((0, 0), (0, pad)))
-        widx = (out_ptr + i * bn + jnp.arange(bn)) % n_segments
-        return p.at[widx].set(y.reshape(bn, seg_w).astype(p.dtype)), None
-
-    pool, _ = jax.lax.scan(step, pool, jnp.arange(m_rows // block_rows))
-    return pool
+    # Coalesced like the fp32 path (DESIGN.md §15); integer math makes
+    # the equivalence exact at every element.
+    x = fetch_rows(pool, in_ptr, m_rows, d_in,
+                   n_segments).astype(jnp.int32)
+    acc = jnp.dot(x, w.astype(jnp.int32), preferred_element_type=jnp.int32)
+    acc = _q_act(acc + b.astype(jnp.int32), activation)
+    y = requantize(acc, mult[None, :], shift[None, :])
+    return stage_rows(pool, y, out_ptr, n_segments)
 
 
 def add_ring_q(pool, mult_in, shift_in, mult_aux, shift_aux, *, op,
@@ -770,10 +737,36 @@ def run_program_jnp(program: PoolProgram, pool, params, *, tracer=None,
 # pallas backend.
 # ---------------------------------------------------------------------------
 
+def _pw_row_block(op, n_seg: int, in_ptr: int, seg_width: int,
+                  limit: int) -> int:
+    """Largest safe pointwise-conv row block ``<= limit``.
+
+    Blocking needs the identity pixel map (stride 1, no resample) so a
+    block's source rows are contiguous, plus DMA no-wrap alignment: the
+    pool length and both pointers must be multiples of the block's input
+    and output chunk sizes (a mid-block modular wrap would split the
+    single async copy).  Execution granularity only — the plan geometry
+    and its certificates are untouched (DESIGN.md §15).
+    """
+    if limit <= 1 or op.stride != 1 or op.resample:
+        return 1
+    ic = op.w_in * segments_for(op.d_in, seg_width)
+    oc = op.w_out * segments_for(op.d_out, seg_width)
+    for rb in range(min(limit, op.h_out), 1, -1):
+        if op.h_out % rb:
+            continue
+        if n_seg % (rb * ic) or in_ptr % (rb * ic):
+            continue
+        if n_seg % (rb * oc) or op.out_ptr % (rb * oc):
+            continue
+        return rb
+    return 1
+
+
 @register_executor("pallas")
 def run_program_pallas(program: PoolProgram, pool, params, *,
                        interpret: bool | None = None, tracer=None,
-                       **_kw):
+                       kernel_block_rows: int = 8, **_kw):
     # Lazy import: core must stay importable without the kernels package.
     from ..kernels.conv2d import (ring_add, ring_avgpool, ring_conv_dw,
                                   ring_conv_k2d, ring_conv_pw)
@@ -798,7 +791,8 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
     if program.quantized:
         return _like_input(pool, _run_pallas_q(
             arr, _normalize_params(program, params), program, br,
-            interpret, tracer=tracer))
+            interpret, tracer=tracer,
+            kernel_block_rows=kernel_block_rows))
     for i, (op, p) in enumerate(zip(program.ops,
                                     _normalize_params(program, params))):
         rows = op.rows_in or program.m_rows
@@ -823,13 +817,16 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
                                    block_rows=br, interpret=interpret)
         elif op.kind == "conv_pw":
             w, b = p
+            iptr = _image_ptr(arr, op)
             arr = ring_conv_pw(arr, w, b, h_in=op.h_in, w_in=op.w_in,
                                h_out=op.h_out, w_out=op.w_out,
                                c_in=op.d_in, c_out=op.d_out,
                                stride=op.stride, resample=op.resample,
-                               in_ptr=_image_ptr(arr, op),
-                               out_ptr=op.out_ptr,
+                               in_ptr=iptr, out_ptr=op.out_ptr,
                                activation=op.activation,
+                               row_block=_pw_row_block(
+                                   op, arr.shape[0], iptr,
+                                   program.seg_width, kernel_block_rows),
                                interpret=interpret)
         elif op.kind == "conv_dw":
             w, b = p
@@ -892,7 +889,7 @@ def run_program_pallas(program: PoolProgram, pool, params, *,
 
 
 def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
-                  tracer=None):
+                  tracer=None, kernel_block_rows: int = 8):
     """Int8 program on the Pallas ring kernels (``kernels.quantized``)."""
     from ..kernels.quantized import (ring_add_q, ring_avgpool_q,
                                      ring_conv_dw_q, ring_conv_k2d_q,
@@ -911,14 +908,18 @@ def _run_pallas_q(arr, params, program: PoolProgram, br, interpret,
                               interpret=interpret)
         elif op.kind == "conv_pw":
             w, b, mult, shift = p
+            iptr = _image_ptr(arr, op)
             arr = ring_conv_pw_q(arr, w, b, mult, shift, h_in=op.h_in,
                                  w_in=op.w_in, h_out=op.h_out,
                                  w_out=op.w_out, c_in=op.d_in,
                                  c_out=op.d_out, stride=op.stride,
                                  resample=op.resample,
-                                 in_ptr=_image_ptr(arr, op),
-                                 out_ptr=op.out_ptr,
+                                 in_ptr=iptr, out_ptr=op.out_ptr,
                                  activation=op.activation,
+                                 row_block=_pw_row_block(
+                                     op, arr.shape[0], iptr,
+                                     program.seg_width,
+                                     kernel_block_rows),
                                  interpret=interpret)
         elif op.kind == "conv_dw":
             w, b, mult, shift = p

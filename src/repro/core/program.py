@@ -381,6 +381,29 @@ class PoolOp:
         return hi - lo
 
 
+def op_grid_steps(op: PoolOp, row_block: int = 1) -> int:
+    """Kernel grid steps ``op`` executes with ``row_block`` output rows
+    fused per step.
+
+    ``row_block == 1`` (the default) is the planner's fine-grained
+    schedule — the one the sim oracle and static verifier replay and
+    the certificates count.  A larger ``row_block`` is pure execution
+    granularity (the blocked Pallas kernels, DESIGN.md §15): the same
+    rows move in ``1/row_block`` as many steps, so per-step counters
+    group by exactly that factor and every aggregate (rows read, rows
+    written, bytes moved) is unchanged.
+    """
+    if row_block < 1:
+        raise ValueError("row_block must be >= 1")
+    steps = op.h_out if op.h_out else (op.rows_out or 1)
+    if row_block == 1:
+        return steps
+    if steps % row_block:
+        raise ValueError(f"row_block {row_block} does not divide the "
+                         f"op's {steps} steps")
+    return steps // row_block
+
+
 @dataclasses.dataclass(frozen=True)
 class PoolProgram:
     """An ordered list of PoolOps over one VirtualPool.

@@ -121,6 +121,38 @@ class RowSchedule:
         return solve_stream_offset(self.write_end_segments(),
                                    self.read_start_segments())
 
+    # -- execution-granularity view ---------------------------------------
+    def coalesced(self, block: int) -> "RowSchedule":
+        """The block-granular view: ``block`` consecutive steps fused
+        into one super-step — the schedule the blocked Pallas kernels
+        execute (DESIGN.md §15).
+
+        A super-step's reads/writes are the concatenation (order kept,
+        duplicates kept) of its member steps', so every aggregate
+        counter — total row reads, total row writes, rows freed — is
+        invariant under coalescing; only the step axis changes.  The
+        planner, sim oracle and static verifier keep replaying the
+        fine-grained schedule (certificates stay byte-identical); this
+        view exists to state and test the superblock-coalescing
+        property: a certified plan's stores only land on segments
+        already freed at that step, so hoisting a block's reads above
+        its stores cannot read a clobbered row.
+        """
+        if block < 1:
+            raise ValueError("block must be >= 1")
+        if block == 1:
+            return self
+
+        def group(seq):
+            return tuple(tuple(r for step in seq[i:i + block]
+                               for r in step)
+                         for i in range(0, len(seq), block))
+
+        aux = None if self.aux_reads is None else group(self.aux_reads)
+        return dataclasses.replace(
+            self, steps=-(-self.steps // block), reads=group(self.reads),
+            writes=group(self.writes), aux_reads=aux)
+
 
 # ---------------------------------------------------------------------------
 # Schedule builders, one per op kind.

@@ -71,31 +71,67 @@ class PoolSpec:
         return self.n_segments * self.segment_bytes
 
 
+def fetch_segments(pool: jax.Array, ptr: int, count: int,
+                   n_segments: int | None = None) -> jax.Array:
+    """Read ``count`` consecutive ring segments starting at ``ptr``.
+
+    Pointers are static Python ints, so the modular index resolves at
+    trace time: a run that stays inside the pool is ONE contiguous XLA
+    slice, a wrapping run is two (tail + head) — never a gather.  The
+    selected segments are identical to ``pool[(ptr + arange(count)) % n]``.
+    """
+    n = pool.shape[0] if n_segments is None else n_segments
+    start = int(ptr) % n
+    if start + count <= n:
+        return jax.lax.slice_in_dim(pool, start, start + count, axis=0)
+    head = n - start
+    return jnp.concatenate(
+        [jax.lax.slice_in_dim(pool, start, n, axis=0),
+         jax.lax.slice_in_dim(pool, 0, count - head, axis=0)], axis=0)
+
+
+def stage_segments(pool: jax.Array, segs: jax.Array, ptr: int,
+                   n_segments: int | None = None) -> jax.Array:
+    """Write ``segs [count, seg_width]`` at ring segment ``ptr`` — the
+    in-place dual of :func:`fetch_segments` (one update slice, or two on
+    a wrap; with a donated pool XLA updates the buffer in place)."""
+    n = pool.shape[0] if n_segments is None else n_segments
+    start = int(ptr) % n
+    count = segs.shape[0]
+    segs = segs.astype(pool.dtype)
+    if start + count <= n:
+        return jax.lax.dynamic_update_slice_in_dim(pool, segs, start,
+                                                   axis=0)
+    head = n - start
+    pool = jax.lax.dynamic_update_slice_in_dim(pool, segs[:head], start,
+                                               axis=0)
+    return jax.lax.dynamic_update_slice_in_dim(pool, segs[head:], 0,
+                                               axis=0)
+
+
 def stage_rows(pool: jax.Array, rows: jax.Array, ptr: int,
                n_segments: int | None = None) -> jax.Array:
     """Place ``rows [M, d]`` into the ring starting at segment ``ptr``.
 
-    Rows are padded to whole segments and scattered with modular indices —
-    the paper's circular-buffer bounds check, verbatim.
+    Rows are padded to whole segments and stored with modular addressing —
+    the paper's circular-buffer bounds check, lowered to contiguous
+    slices (:func:`stage_segments`).
     """
     m, d = rows.shape
     seg_w = pool.shape[1]
-    n = pool.shape[0] if n_segments is None else n_segments
     segs = segments_for(d, seg_w)
     padded = jnp.pad(rows, ((0, 0), (0, segs * seg_w - d)))
-    idx = (ptr + jnp.arange(m * segs)) % n
-    return pool.at[idx].set(padded.reshape(m * segs, seg_w)
-                            .astype(pool.dtype))
+    return stage_segments(pool, padded.reshape(m * segs, seg_w), ptr,
+                          n_segments)
 
 
 def fetch_rows(pool: jax.Array, ptr: int, m: int, d: int,
                n_segments: int | None = None) -> jax.Array:
     """Gather ``[m, d]`` rows resident at segment ``ptr`` out of the ring."""
     seg_w = pool.shape[1]
-    n = pool.shape[0] if n_segments is None else n_segments
     segs = segments_for(d, seg_w)
-    idx = (ptr + jnp.arange(m * segs)) % n
-    return jnp.take(pool, idx, axis=0).reshape(m, segs * seg_w)[:, :d]
+    return fetch_segments(pool, ptr, m * segs,
+                          n_segments).reshape(m, segs * seg_w)[:, :d]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,25 +44,45 @@ from .segment_matmul import SEG_WIDTH, _segs
 def _pw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
                sem_out, *, in_ptr: int, out_ptr: int, n_seg: int,
                h_in: int, w_in: int, h_out: int, w_out: int, c_in: int,
-               c_out: int, stride: int, resample: bool,
-               activation: str | None):
+               c_out: int, stride: int, resample: bool, row_block: int,
+               num_blocks: int, activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
-    if resample:
+    in_chunk = row_block * w_in * ksegs
+    out_chunk = row_block * w_out * nsegs
+    slot = jax.lax.rem(p, 2)
+
+    def ram_load(block, into):
+        # row_block > 1 only when stride == 1 and not resample (the
+        # driver's blocking rule), so a block's source rows are the
+        # contiguous run starting at its first source row
+        if resample:
+            # traced mirror of core.rowsched.resample_src
+            src = jax.lax.div(block * h_in, h_out)
+        else:
+            src = block * row_block * stride
+        off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, in_chunk)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered RAMLoad: stage block p+1 while block p computes
+    # (safe pre-store: block p+1's input is still live — DESIGN.md §15).
+    @pl.when(p == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(p + 1 < num_blocks)
+    def _prefetch():
+        ram_load(p + 1, 1 - slot).start()
+
+    ram_load(p, slot).wait()
+    x = x_vmem[slot].reshape(row_block * w_in, ksegs * SEG_WIDTH)[:, :c_in]
+    if row_block == 1 and (stride != 1 or resample):
+        q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
         # traced mirror of core.rowsched.resample_src
-        src = jax.lax.div(p * h_in, h_out)
-    else:
-        src = p * stride
-    off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
-                                 x_vmem, sem_in)
-    load.start()
-    load.wait()
-    x = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in]
-    q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
-    # traced mirror of core.rowsched.resample_src
-    cols = (q * w_in) // w_out if resample else q * stride
-    xs = jnp.take(x, cols, axis=0).astype(jnp.float32)  # [w_out, c_in]
+        cols = (q * w_in) // w_out if resample else q * stride
+        x = jnp.take(x, cols, axis=0)
+    xs = x.astype(jnp.float32)                  # [row_block*w_out, c_in]
     y = jnp.dot(xs, w_ref[...].astype(jnp.float32),
                 preferred_element_type=jnp.float32)
     y = resolve_activation(activation)(y + b_ref[...].astype(jnp.float32))
@@ -70,10 +90,10 @@ def _pw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
     pad = nsegs * SEG_WIDTH - c_out
     if pad:
         y = jnp.pad(y, ((0, 0), (0, pad)))
-    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
-    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    y_vmem[...] = y.reshape(out_chunk, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * out_chunk, n_seg)
     store = pltpu.make_async_copy(y_vmem,
-                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  out_ref.at[pl.ds(ooff, out_chunk)],
                                   sem_out)
     store.start()
     store.wait()
@@ -83,28 +103,37 @@ def _pw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
     jax.jit,
     static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
                      "stride", "resample", "in_ptr", "out_ptr",
-                     "activation", "interpret"),
+                     "activation", "row_block", "interpret"),
     donate_argnums=(0,))
 def ring_conv_pw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
                  w_in: int, h_out: int, w_out: int, c_in: int, c_out: int,
                  stride: int = 1, resample: bool = False, in_ptr: int = 0,
                  out_ptr: int = 0, activation: str | None = None,
-                 interpret: bool = False) -> jax.Array:
+                 row_block: int = 1, interpret: bool = False) -> jax.Array:
     """Pointwise conv ``[h_in, w_in, c_in] -> [h_out, w_out, c_out]`` in
-    the ring; rows live one pixel per ``segs(c)`` segments, row-major."""
+    the ring; rows live one pixel per ``segs(c)`` segments, row-major.
+
+    ``row_block`` image rows are fused per grid step (blocking requires
+    the identity pixel map: ``stride == 1`` and no resampling); the next
+    block's rows stage into the spare VMEM slot while the current block
+    computes (DESIGN.md §15)."""
     n_seg = pool.shape[0]
     ksegs, nsegs = _segs(c_in), _segs(c_out)
     if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
             or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
         raise ValueError("pool/pointers not image-row aligned")
+    if row_block != 1 and (stride != 1 or resample or h_out % row_block):
+        raise ValueError("row_block needs stride==1, no resample, and "
+                         "row_block | h_out")
+    num_blocks = h_out // row_block
     kernel = functools.partial(
         _pw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
         c_out=c_out, stride=stride, resample=resample,
-        activation=activation)
+        row_block=row_block, num_blocks=num_blocks, activation=activation)
     return pl.pallas_call(
         kernel,
-        grid=(h_out,),
+        grid=(num_blocks,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ARBITRARY),
             pl.BlockSpec((c_in, c_out), lambda p: (0, 0)),
@@ -113,9 +142,10 @@ def ring_conv_pw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
-            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, row_block * w_in * ksegs, SEG_WIDTH),
+                       pool.dtype),                       # double buffer
+            pltpu.VMEM((row_block * w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -134,18 +164,36 @@ def _dw_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
                activation: str | None):
     p = pl.program_id(0)
     segs = _segs(c)
+
+    def tap_load(row_p, r, into):
+        srcc = jnp.clip(row_p * stride - pad_v + r, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Pipelined halo loads: the (p, r) tap sequence is double-buffered —
+    # tap r+1 (or the next output row's first tap) stages while tap r
+    # accumulates.  The cross-row prefetch precedes row p's RAMStore,
+    # which is safe because row p+1's halo is still live (DESIGN.md §15).
+    @pl.when(p == 0)
+    def _prime():
+        tap_load(0, 0, 0).start()
+
     acc = jnp.zeros((w_out, c), jnp.float32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(rs):
+        slot = jax.lax.rem(p * rs + r, 2)
+        spare = 1 - slot
+        if r + 1 < rs:
+            tap_load(p, r + 1, spare).start()
+        else:
+            @pl.when(p + 1 < h_out)
+            def _prefetch():
+                tap_load(p + 1, 0, spare).start()
+        tap_load(p, r, slot).wait()
         src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
-        srcc = jnp.clip(src, 0, h_in - 1)
-        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
-        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
-                                     x_vmem, sem_in)
-        load.start()
-        load.wait()
-        row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
+        row = x_vmem[slot].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
             .astype(jnp.float32)
         for s in range(rs):
             cols = qs * stride - pad_h + s
@@ -208,9 +256,9 @@ def ring_conv_dw(pool: jax.Array, w: jax.Array, b: jax.Array, *, h_in: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w_in * segs, SEG_WIDTH), pool.dtype),  # 2 slots
             pltpu.VMEM((w_out * segs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -229,18 +277,33 @@ def _k2d_kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in,
                 activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
+
+    def tap_load(row_p, r, into):
+        srcc = jnp.clip(row_p * stride - pad_v + r, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Pipelined halo loads — see _dw_kernel.
+    @pl.when(p == 0)
+    def _prime():
+        tap_load(0, 0, 0).start()
+
     acc = jnp.zeros((w_out, c_out), jnp.float32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(k):
+        slot = jax.lax.rem(p * k + r, 2)
+        spare = 1 - slot
+        if r + 1 < k:
+            tap_load(p, r + 1, spare).start()
+        else:
+            @pl.when(p + 1 < h_out)
+            def _prefetch():
+                tap_load(p + 1, 0, spare).start()
+        tap_load(p, r, slot).wait()
         src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
-        srcc = jnp.clip(src, 0, h_in - 1)
-        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
-        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
-                                     x_vmem, sem_in)
-        load.start()
-        load.wait()
-        row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+        row = x_vmem[slot].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
             .astype(jnp.float32)
         for s in range(k):
             cols = qs * stride - pad_h + s
@@ -306,9 +369,9 @@ def ring_conv_k2d(pool: jax.Array, w: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w_in * ksegs, SEG_WIDTH), pool.dtype),  # 2 slots
             pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -322,25 +385,41 @@ def ring_conv_k2d(pool: jax.Array, w: jax.Array, b: jax.Array, *,
 
 def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
                 in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
-                chunk: int, activation: str | None):
+                chunk: int, rows: int, activation: str | None):
     t = pl.program_id(0)
-    off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
-    off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
-    cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)], x_vmem,
-                                sem_in)
-    cp1.start()
-    cp1.wait()
-    cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)], r_vmem,
-                                sem_in)
-    cp2.start()
-    cp2.wait()
+    slot = jax.lax.rem(t, 2)
+
+    def ram_load(row, into):
+        off_x = jax.lax.rem(in_ptr + row * chunk, n_seg)
+        off_r = jax.lax.rem(aux_ptr + row * chunk, n_seg)
+        cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)],
+                                    x_vmem.at[into], sem_in.at[into, 0])
+        cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)],
+                                    r_vmem.at[into], sem_in.at[into, 1])
+        return cp1, cp2
+
+    # Both operand rows double-buffer: row t+1 (operand + held residual)
+    # stages while row t sums — the prefetch precedes row t's in-place
+    # store, safe because row t+1's sources are still live.
+    @pl.when(t == 0)
+    def _prime():
+        for cp in ram_load(0, 0):
+            cp.start()
+
+    @pl.when(t + 1 < rows)
+    def _prefetch():
+        for cp in ram_load(t + 1, 1 - slot):
+            cp.start()
+
+    for cp in ram_load(t, slot):
+        cp.wait()
     y = resolve_activation(activation)(
-        x_vmem[...].astype(jnp.float32)
-        + r_vmem[...].astype(jnp.float32)).astype(x_vmem.dtype)
-    x_vmem[...] = y
+        x_vmem[slot].astype(jnp.float32)
+        + r_vmem[slot].astype(jnp.float32)).astype(x_vmem.dtype)
+    x_vmem[slot] = y
     off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
-    st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
-                               sem_out)
+    st = pltpu.make_async_copy(x_vmem.at[slot],
+                               out_ref.at[pl.ds(off_o, chunk)], sem_out)
     st.start()
     st.wait()
 
@@ -363,7 +442,7 @@ def ring_add(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
         raise ValueError("pool/pointers not row aligned")
     kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
                                out_ptr=out_ptr, n_seg=n_seg, chunk=chunk,
-                               activation=activation)
+                               rows=rows, activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(rows,),
@@ -371,9 +450,9 @@ def ring_add(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
-            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, chunk, SEG_WIDTH), pool.dtype),    # 2 slots
+            pltpu.VMEM((2, chunk, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -390,12 +469,25 @@ def _avgpool_kernel(pool_ref, out_ref, x_vmem, acc_vmem, sem_in, sem_out, *,
                     c: int):
     p = pl.program_id(0)
     segs = _segs(c)
-    off = jax.lax.rem(in_ptr + p * (w * segs), n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)], x_vmem,
-                                 sem_in)
-    load.start()
-    load.wait()
-    row = x_vmem[...].reshape(w, segs * SEG_WIDTH).astype(jnp.float32)
+    slot = jax.lax.rem(p, 2)
+
+    def ram_load(row, into):
+        off = jax.lax.rem(in_ptr + row * (w * segs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered row loads; nothing stores until the last step, so
+    # the prefetch trivially precedes every write.
+    @pl.when(p == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(p + 1 < h)
+    def _prefetch():
+        ram_load(p + 1, 1 - slot).start()
+
+    ram_load(p, slot).wait()
+    row = x_vmem[slot].reshape(w, segs * SEG_WIDTH).astype(jnp.float32)
     rowsum = jnp.sum(row, axis=0, keepdims=True)     # [1, segs*SEG]
 
     @pl.when(p == 0)
@@ -407,9 +499,9 @@ def _avgpool_kernel(pool_ref, out_ref, x_vmem, acc_vmem, sem_in, sem_out, *,
     @pl.when(p == h - 1)
     def _emit():
         y = (acc_vmem[0:1, :] / (h * w)).astype(x_vmem.dtype)
-        x_vmem[pl.ds(0, segs)] = y.reshape(segs, SEG_WIDTH)
+        x_vmem[slot, pl.ds(0, segs)] = y.reshape(segs, SEG_WIDTH)
         ooff = jax.lax.rem(out_ptr, n_seg)
-        st = pltpu.make_async_copy(x_vmem.at[pl.ds(0, segs)],
+        st = pltpu.make_async_copy(x_vmem.at[slot].at[pl.ds(0, segs)],
                                    out_ref.at[pl.ds(ooff, segs)], sem_out)
         st.start()
         st.wait()
@@ -436,9 +528,9 @@ def ring_avgpool(pool: jax.Array, *, h: int, w: int, c: int, in_ptr: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w * segs, SEG_WIDTH), pool.dtype),  # 2 slots
             pltpu.VMEM((8, segs * SEG_WIDTH), jnp.float32),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},

@@ -24,16 +24,32 @@ from .segment_matmul import SEG_WIDTH, _segs
 
 
 def _kernel(pool_ref, out_ref, x_vmem, sem_in, sem_out, *,
-            ptr: int, n_seg: int, bd: int, fn: str):
+            ptr: int, n_seg: int, bd: int, num_blocks: int, fn: str):
     i = pl.program_id(0)
+    slot = jax.lax.rem(i, 2)
+
+    def ram_load(block, into):
+        off = jax.lax.rem(ptr + block * bd, n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, bd)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered RAMLoad: block i+1 stages while block i computes.
+    # Block i's in-place store covers block i's rows only, never block
+    # i+1's still-live rows, so the prefetch is clobber-free.
+    @pl.when(i == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(i + 1 < num_blocks)
+    def _prefetch():
+        ram_load(i + 1, 1 - slot).start()
+
+    ram_load(i, slot).wait()
+    y = resolve_activation(fn)(x_vmem[slot].astype(jnp.float32))
+    x_vmem[slot] = y.astype(x_vmem.dtype)
     off = jax.lax.rem(ptr + i * bd, n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, bd)], x_vmem, sem_in)
-    load.start()
-    load.wait()
-    y = resolve_activation(fn)(x_vmem[...].astype(jnp.float32))
-    x_vmem[...] = y.astype(x_vmem.dtype)
-    store = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off, bd)],
-                                  sem_out)
+    store = pltpu.make_async_copy(x_vmem.at[slot],
+                                  out_ref.at[pl.ds(off, bd)], sem_out)
     store.start()
     store.wait()
 
@@ -53,7 +69,8 @@ def ring_elementwise(pool: jax.Array, *, m_rows: int, d: int, ptr: int,
         raise ValueError("block_rows must divide m_rows")
     if n_seg % bd or ptr % bd:
         raise ValueError("pool/ptr must be row-block aligned")
-    kernel = functools.partial(_kernel, ptr=ptr, n_seg=n_seg, bd=bd, fn=fn)
+    kernel = functools.partial(_kernel, ptr=ptr, n_seg=n_seg, bd=bd,
+                               num_blocks=m_rows // block_rows, fn=fn)
     return pl.pallas_call(
         kernel,
         grid=(m_rows // block_rows,),
@@ -61,8 +78,8 @@ def ring_elementwise(pool: jax.Array, *, m_rows: int, d: int, ptr: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bd, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, bd, SEG_WIDTH), pool.dtype),   # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},

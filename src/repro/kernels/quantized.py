@@ -42,16 +42,28 @@ from .segment_matmul import SEG_WIDTH, _segs
 def _gemm_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                  y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
                  n_seg: int, block_rows: int, d_in: int, d_out: int,
-                 activation: str | None):
+                 num_blocks: int, activation: str | None):
     i = pl.program_id(0)
     k_segs, n_segs = _segs(d_in), _segs(d_out)
     bk, bn = block_rows * k_segs, block_rows * n_segs
-    in_off = jax.lax.rem(in_ptr + i * bk, n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(in_off, bk)], x_vmem,
-                                 sem_in)
-    load.start()
-    load.wait()
-    x = x_vmem[...].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
+    slot = jax.lax.rem(i, 2)
+
+    def ram_load(block, into):
+        off = jax.lax.rem(in_ptr + block * bk, n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, bk)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered RAMLoad (see segment_matmul._kernel / DESIGN.md §15)
+    @pl.when(i == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(i + 1 < num_blocks)
+    def _prefetch():
+        ram_load(i + 1, 1 - slot).start()
+
+    ram_load(i, slot).wait()
+    x = x_vmem[slot].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
     acc = jnp.dot(x.astype(jnp.int32), w_ref[...].astype(jnp.int32),
                   preferred_element_type=jnp.int32)
     acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
@@ -89,7 +101,7 @@ def ring_gemm_q(pool: jax.Array, w: jax.Array, b: jax.Array,
     kernel = functools.partial(
         _gemm_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         block_rows=block_rows, d_in=d_in, d_out=d_out,
-        activation=activation)
+        num_blocks=m_rows // block_rows, activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(m_rows // block_rows,),
@@ -103,9 +115,9 @@ def ring_gemm_q(pool: jax.Array, w: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, bk, SEG_WIDTH), pool.dtype),   # double buffer
             pltpu.VMEM((bn, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -121,22 +133,44 @@ def _pw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                y_vmem, sem_in, sem_out, *, in_ptr: int, out_ptr: int,
                n_seg: int, h_in: int, w_in: int, h_out: int, w_out: int,
                c_in: int, c_out: int, stride: int, resample: bool,
-               activation: str | None):
+               row_block: int, num_blocks: int, activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
-    if resample:
-        src = jax.lax.div(p * h_in, h_out)
-    else:
-        src = p * stride
-    off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
-                                 x_vmem, sem_in)
-    load.start()
-    load.wait()
-    x = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in]
-    q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
-    cols = (q * w_in) // w_out if resample else q * stride
-    xs = jnp.take(x, cols, axis=0).astype(jnp.int32)
+    in_chunk = row_block * w_in * ksegs
+    out_chunk = row_block * w_out * nsegs
+    slot = jax.lax.rem(p, 2)
+
+    def ram_load(block, into):
+        # row_block > 1 only when stride == 1 and not resample (the
+        # driver's blocking rule), so a block's source rows are the
+        # contiguous run starting at its first source row
+        if resample:
+            # traced mirror of core.rowsched.resample_src
+            src = jax.lax.div(block * h_in, h_out)
+        else:
+            src = block * row_block * stride
+        off = jax.lax.rem(in_ptr + src * (w_in * ksegs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, in_chunk)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered RAMLoad: stage block p+1 while block p computes
+    # (safe pre-store: block p+1's input is still live — DESIGN.md §15).
+    @pl.when(p == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(p + 1 < num_blocks)
+    def _prefetch():
+        ram_load(p + 1, 1 - slot).start()
+
+    ram_load(p, slot).wait()
+    x = x_vmem[slot].reshape(row_block * w_in, ksegs * SEG_WIDTH)[:, :c_in]
+    if row_block == 1 and (stride != 1 or resample):
+        q = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
+        # traced mirror of core.rowsched.resample_src
+        cols = (q * w_in) // w_out if resample else q * stride
+        x = jnp.take(x, cols, axis=0)
+    xs = x.astype(jnp.int32)                    # [row_block*w_out, c_in]
     acc = jnp.dot(xs, w_ref[...].astype(jnp.int32),
                   preferred_element_type=jnp.int32)
     acc = _q_act(acc + b_ref[...].astype(jnp.int32), activation)
@@ -144,10 +178,10 @@ def _pw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
     pad = nsegs * SEG_WIDTH - c_out
     if pad:
         y = jnp.pad(y, ((0, 0), (0, pad)))
-    y_vmem[...] = y.reshape(w_out * nsegs, SEG_WIDTH)
-    ooff = jax.lax.rem(out_ptr + p * (w_out * nsegs), n_seg)
+    y_vmem[...] = y.reshape(out_chunk, SEG_WIDTH)
+    ooff = jax.lax.rem(out_ptr + p * out_chunk, n_seg)
     store = pltpu.make_async_copy(y_vmem,
-                                  out_ref.at[pl.ds(ooff, w_out * nsegs)],
+                                  out_ref.at[pl.ds(ooff, out_chunk)],
                                   sem_out)
     store.start()
     store.wait()
@@ -157,29 +191,35 @@ def _pw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
     jax.jit,
     static_argnames=("h_in", "w_in", "h_out", "w_out", "c_in", "c_out",
                      "stride", "resample", "in_ptr", "out_ptr",
-                     "activation", "interpret"),
+                     "activation", "row_block", "interpret"),
     donate_argnums=(0,))
 def ring_conv_pw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
                    mult: jax.Array, shift: jax.Array, *, h_in: int,
                    w_in: int, h_out: int, w_out: int, c_in: int,
                    c_out: int, stride: int = 1, resample: bool = False,
                    in_ptr: int = 0, out_ptr: int = 0,
-                   activation: str | None = None,
+                   activation: str | None = None, row_block: int = 1,
                    interpret: bool = False) -> jax.Array:
-    """Int8 pointwise conv in the ring, one output image row per step."""
+    """Int8 pointwise conv in the ring, ``row_block`` output image rows
+    per step (blocking requires the identity pixel map — see
+    :func:`repro.kernels.conv2d.ring_conv_pw`)."""
     n_seg = pool.shape[0]
     ksegs, nsegs = _segs(c_in), _segs(c_out)
     if n_seg % (w_in * ksegs) or n_seg % (w_out * nsegs) \
             or in_ptr % (w_in * ksegs) or out_ptr % (w_out * nsegs):
         raise ValueError("pool/pointers not image-row aligned")
+    if row_block != 1 and (stride != 1 or resample or h_out % row_block):
+        raise ValueError("row_block needs stride==1, no resample, and "
+                         "row_block | h_out")
+    num_blocks = h_out // row_block
     kernel = functools.partial(
         _pw_kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         h_in=h_in, w_in=w_in, h_out=h_out, w_out=w_out, c_in=c_in,
         c_out=c_out, stride=stride, resample=resample,
-        activation=activation)
+        row_block=row_block, num_blocks=num_blocks, activation=activation)
     return pl.pallas_call(
         kernel,
-        grid=(h_out,),
+        grid=(num_blocks,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ARBITRARY),
             pl.BlockSpec((c_in, c_out), lambda p: (0, 0)),
@@ -190,9 +230,10 @@ def ring_conv_pw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
-            pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, row_block * w_in * ksegs, SEG_WIDTH),
+                       pool.dtype),                       # double buffer
+            pltpu.VMEM((row_block * w_out * nsegs, SEG_WIDTH), pool.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -211,18 +252,33 @@ def _dw_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                activation: str | None):
     p = pl.program_id(0)
     segs = _segs(c)
+
+    def tap_load(row_p, r, into):
+        srcc = jnp.clip(row_p * stride - pad_v + r, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Pipelined halo loads (see conv2d._dw_kernel / DESIGN.md §15).
+    @pl.when(p == 0)
+    def _prime():
+        tap_load(0, 0, 0).start()
+
     acc = jnp.zeros((w_out, c), jnp.int32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(rs):
+        slot = jax.lax.rem(p * rs + r, 2)
+        spare = 1 - slot
+        if r + 1 < rs:
+            tap_load(p, r + 1, spare).start()
+        else:
+            @pl.when(p + 1 < h_out)
+            def _prefetch():
+                tap_load(p + 1, 0, spare).start()
+        tap_load(p, r, slot).wait()
         src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
-        srcc = jnp.clip(src, 0, h_in - 1)
-        off = jax.lax.rem(in_ptr + srcc * (w_in * segs), n_seg)
-        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * segs)],
-                                     x_vmem, sem_in)
-        load.start()
-        load.wait()
-        row = x_vmem[...].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
+        row = x_vmem[slot].reshape(w_in, segs * SEG_WIDTH)[:, :c] \
             .astype(jnp.int32)
         for s in range(rs):
             cols = qs * stride - pad_h + s
@@ -283,9 +339,9 @@ def ring_conv_dw_q(pool: jax.Array, w: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w_in * segs, SEG_WIDTH), pool.dtype),   # 2-slot
             pltpu.VMEM((w_out * segs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -304,18 +360,33 @@ def _k2d_kernel(pool_ref, w_ref, b_ref, m_ref, s_ref, out_ref, x_vmem,
                 pad_h: int, activation: str | None):
     p = pl.program_id(0)
     ksegs, nsegs = _segs(c_in), _segs(c_out)
+
+    def tap_load(row_p, r, into):
+        srcc = jnp.clip(row_p * stride - pad_v + r, 0, h_in - 1)
+        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Pipelined halo loads (see conv2d._k2d_kernel / DESIGN.md §15).
+    @pl.when(p == 0)
+    def _prime():
+        tap_load(0, 0, 0).start()
+
     acc = jnp.zeros((w_out, c_out), jnp.int32)
     qs = jax.lax.broadcasted_iota(jnp.int32, (w_out, 1), 0)[:, 0]
     for r in range(k):
+        slot = jax.lax.rem(p * k + r, 2)
+        spare = 1 - slot
+        if r + 1 < k:
+            tap_load(p, r + 1, spare).start()
+        else:
+            @pl.when(p + 1 < h_out)
+            def _prefetch():
+                tap_load(p + 1, 0, spare).start()
+        tap_load(p, r, slot).wait()
         src = p * stride - pad_v + r
         valid_r = (src >= 0) & (src < h_in)
-        srcc = jnp.clip(src, 0, h_in - 1)
-        off = jax.lax.rem(in_ptr + srcc * (w_in * ksegs), n_seg)
-        load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w_in * ksegs)],
-                                     x_vmem, sem_in)
-        load.start()
-        load.wait()
-        row = x_vmem[...].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
+        row = x_vmem[slot].reshape(w_in, ksegs * SEG_WIDTH)[:, :c_in] \
             .astype(jnp.int32)
         for s in range(k):
             cols = qs * stride - pad_h + s
@@ -380,9 +451,9 @@ def ring_conv_k2d_q(pool: jax.Array, w: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w_in * ksegs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w_in * ksegs, SEG_WIDTH), pool.dtype),  # 2-slot
             pltpu.VMEM((w_out * nsegs, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -396,26 +467,41 @@ def ring_conv_k2d_q(pool: jax.Array, w: jax.Array, b: jax.Array,
 
 def _add_kernel(pool_ref, out_ref, x_vmem, r_vmem, sem_in, sem_out, *,
                 in_ptr: int, aux_ptr: int, out_ptr: int, n_seg: int,
-                chunk: int, mult_in: int, shift_in: int, mult_aux: int,
-                shift_aux: int, activation: str | None):
+                chunk: int, rows: int, mult_in: int, shift_in: int,
+                mult_aux: int, shift_aux: int, activation: str | None):
     t = pl.program_id(0)
-    off_x = jax.lax.rem(in_ptr + t * chunk, n_seg)
-    off_r = jax.lax.rem(aux_ptr + t * chunk, n_seg)
-    cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)], x_vmem,
-                                sem_in)
-    cp1.start()
-    cp1.wait()
-    cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)], r_vmem,
-                                sem_in)
-    cp2.start()
-    cp2.wait()
-    ya = requantize_i32(x_vmem[...].astype(jnp.int32), mult_in, shift_in)
-    yb = requantize_i32(r_vmem[...].astype(jnp.int32), mult_aux, shift_aux)
+    slot = jax.lax.rem(t, 2)
+
+    def ram_load(row, into):
+        off_x = jax.lax.rem(in_ptr + row * chunk, n_seg)
+        off_r = jax.lax.rem(aux_ptr + row * chunk, n_seg)
+        cp1 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_x, chunk)],
+                                    x_vmem.at[into], sem_in.at[into, 0])
+        cp2 = pltpu.make_async_copy(pool_ref.at[pl.ds(off_r, chunk)],
+                                    r_vmem.at[into], sem_in.at[into, 1])
+        return cp1, cp2
+
+    # Both operand rows double-buffer (see conv2d._add_kernel).
+    @pl.when(t == 0)
+    def _prime():
+        for cp in ram_load(0, 0):
+            cp.start()
+
+    @pl.when(t + 1 < rows)
+    def _prefetch():
+        for cp in ram_load(t + 1, 1 - slot):
+            cp.start()
+
+    for cp in ram_load(t, slot):
+        cp.wait()
+    ya = requantize_i32(x_vmem[slot].astype(jnp.int32), mult_in, shift_in)
+    yb = requantize_i32(r_vmem[slot].astype(jnp.int32), mult_aux,
+                        shift_aux)
     acc = _q_act(ya + yb, activation)   # post-add relu (int32 domain)
-    x_vmem[...] = jnp.clip(acc, -128, 127).astype(x_vmem.dtype)
+    x_vmem[slot] = jnp.clip(acc, -128, 127).astype(x_vmem.dtype)
     off_o = jax.lax.rem(out_ptr + t * chunk, n_seg)
-    st = pltpu.make_async_copy(x_vmem, out_ref.at[pl.ds(off_o, chunk)],
-                               sem_out)
+    st = pltpu.make_async_copy(x_vmem.at[slot],
+                               out_ref.at[pl.ds(off_o, chunk)], sem_out)
     st.start()
     st.wait()
 
@@ -441,9 +527,9 @@ def ring_add_q(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
         raise ValueError("pool/pointers not row aligned")
     kernel = functools.partial(_add_kernel, in_ptr=in_ptr, aux_ptr=aux_ptr,
                                out_ptr=out_ptr, n_seg=n_seg, chunk=chunk,
-                               mult_in=mult_in, shift_in=shift_in,
-                               mult_aux=mult_aux, shift_aux=shift_aux,
-                               activation=activation)
+                               rows=rows, mult_in=mult_in,
+                               shift_in=shift_in, mult_aux=mult_aux,
+                               shift_aux=shift_aux, activation=activation)
     return pl.pallas_call(
         kernel,
         grid=(rows,),
@@ -451,9 +537,9 @@ def ring_add_q(pool: jax.Array, *, rows: int, d: int, in_ptr: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
-            pltpu.VMEM((chunk, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, chunk, SEG_WIDTH), pool.dtype),   # 2-slot x
+            pltpu.VMEM((2, chunk, SEG_WIDTH), pool.dtype),   # 2-slot res
+            pltpu.SemaphoreType.DMA((2, 2)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},
@@ -470,12 +556,25 @@ def _avgpool_kernel(pool_ref, out_ref, x_vmem, y_vmem, acc_vmem, sem_in,
                     h: int, w: int, c: int, mult: int, shift: int):
     p = pl.program_id(0)
     segs = _segs(c)
-    off = jax.lax.rem(in_ptr + p * (w * segs), n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)], x_vmem,
-                                 sem_in)
-    load.start()
-    load.wait()
-    row = x_vmem[...].reshape(w, segs * SEG_WIDTH).astype(jnp.int32)
+    slot = jax.lax.rem(p, 2)
+
+    def ram_load(row, into):
+        off = jax.lax.rem(in_ptr + row * (w * segs), n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, w * segs)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # Double-buffered row loads; nothing stores until the last step, so
+    # the prefetch trivially precedes every write.
+    @pl.when(p == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(p + 1 < h)
+    def _prefetch():
+        ram_load(p + 1, 1 - slot).start()
+
+    ram_load(p, slot).wait()
+    row = x_vmem[slot].reshape(w, segs * SEG_WIDTH).astype(jnp.int32)
     rowsum = jnp.sum(row, axis=0, keepdims=True)
 
     @pl.when(p == 0)
@@ -520,10 +619,10 @@ def ring_avgpool_q(pool: jax.Array, *, h: int, w: int, c: int, in_ptr: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((w * segs, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, w * segs, SEG_WIDTH), pool.dtype),   # 2-slot
             pltpu.VMEM((segs, SEG_WIDTH), pool.dtype),
             pltpu.VMEM((8, segs * SEG_WIDTH), jnp.int32),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},

@@ -44,20 +44,35 @@ def _segs(d: int) -> int:
 
 def _kernel(pool_ref, w_ref, b_ref, out_ref, x_vmem, y_vmem, sem_in, sem_out,
             *, in_ptr: int, out_ptr: int, n_seg: int, block_rows: int,
-            d_in: int, d_out: int, activation: str | None):
+            d_in: int, d_out: int, num_blocks: int,
+            activation: str | None):
     i = pl.program_id(0)
     k_segs, n_segs = _segs(d_in), _segs(d_out)
     bk, bn = block_rows * k_segs, block_rows * n_segs
+    slot = jax.lax.rem(i, 2)
 
-    # --- RAMLoad: ring → VMEM ------------------------------------------------
-    in_off = jax.lax.rem(in_ptr + i * bk, n_seg)
-    load = pltpu.make_async_copy(pool_ref.at[pl.ds(in_off, bk)], x_vmem,
-                                 sem_in)
-    load.start()
-    load.wait()
+    def ram_load(block, into):
+        off = jax.lax.rem(in_ptr + block * bk, n_seg)
+        return pltpu.make_async_copy(pool_ref.at[pl.ds(off, bk)],
+                                     x_vmem.at[into], sem_in.at[into])
+
+    # --- RAMLoad, double-buffered: block 0 primes the pipeline; every
+    # step then stages block i+1 into the spare slot while block i
+    # computes.  Prefetching before block i's RAMStore is safe: block
+    # i+1's input is still live, so the certified schedule proves the
+    # store cannot touch it (DESIGN.md §15).
+    @pl.when(i == 0)
+    def _prime():
+        ram_load(0, 0).start()
+
+    @pl.when(i + 1 < num_blocks)
+    def _prefetch():
+        ram_load(i + 1, 1 - slot).start()
+
+    ram_load(i, slot).wait()
 
     # --- Dot: MXU on the segment block --------------------------------------
-    x = x_vmem[...].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
+    x = x_vmem[slot].reshape(block_rows, k_segs * SEG_WIDTH)[:, :d_in]
     y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
     y = resolve_activation(activation)(y + b_ref[...].astype(jnp.float32))
     y = y.astype(x_vmem.dtype)
@@ -121,7 +136,7 @@ def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
     kernel = functools.partial(
         _kernel, in_ptr=in_ptr, out_ptr=out_ptr, n_seg=n_seg,
         block_rows=block_rows, d_in=d_in, d_out=d_out,
-        activation=activation)
+        num_blocks=m_rows // block_rows, activation=activation)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -133,9 +148,9 @@ def ring_gemm(pool: jax.Array, w: jax.Array, b: jax.Array, *, m_rows: int,
         out_specs=pl.BlockSpec(memory_space=pltpu.ARBITRARY),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bk, SEG_WIDTH), pool.dtype),
+            pltpu.VMEM((2, bk, SEG_WIDTH), pool.dtype),   # double buffer
             pltpu.VMEM((bn, SEG_WIDTH), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],
         input_output_aliases={0: 0},

@@ -347,6 +347,109 @@ def test_conformance_cell(kind, backend, dtype):
 
 
 # ---------------------------------------------------------------------------
+# Execution-granularity blocking (kernel_block_rows): every kind x
+# block x dtype on the pallas backend — blocking must not move a bit.
+# ---------------------------------------------------------------------------
+
+#: 1 = the fine-grained certified schedule; 8 = the Target default
+#: (``Target.kernel_block_rows``).
+KERNEL_BLOCKS = (1, 8)
+
+
+def _blocked_grid():
+    cells = []
+    for kind in EXECUTABLE_KINDS:
+        for block in KERNEL_BLOCKS:
+            for dtype in DTYPES:
+                marks = ()
+                reason = UNSUPPORTED.get((kind, dtype))
+                if reason is not None:
+                    marks = pytest.mark.xfail(reason=reason, strict=True)
+                cells.append(pytest.param(
+                    kind, block, dtype, marks=marks,
+                    id=f"{kind}-rb{block}-{dtype}"))
+    return cells
+
+
+@pytest.mark.parametrize("kind,block,dtype", _blocked_grid())
+def test_blocked_pallas_cell(kind, block, dtype):
+    """The pallas backend at execution granularity 1 and the target
+    default 8 both agree with the ref oracle (bitwise for int8) —
+    kernel blocking is invisible to the numbers."""
+    cell = CELL_BUILDERS[kind]()
+    if dtype == "int8":
+        qnet = _quantize_net(cell.program, cell.params)
+        x_q = quantize(cell.x, QParams(scale=qnet.in_scale))
+        y, _ = run_program(qnet.program, x_q, qnet.qparams,
+                           backend="pallas", kernel_block_rows=block)
+        expected = cell.ref_int8(x_q, qnet.qparams, qnet.program.ops)
+        assert y.dtype == np.int8
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(expected))
+    else:
+        y, _ = run_program(cell.program, cell.x, cell.params,
+                           backend="pallas", kernel_block_rows=block)
+        expected = cell.ref_fp32(cell.x, cell.params)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(expected),
+                                   **_tol(expected))
+
+
+def test_blocked_conv_pw_multi_row_engages():
+    """A stride-1 pointwise conv whose geometry satisfies the driver's
+    divisor rule: the multi-row path (row_block > 1) must actually
+    engage AND stay bitwise-identical to the ref oracle for int8."""
+    from repro.core.executors import _pw_row_block
+
+    h, w_, c_in, c_out = 8, 4, 96, 64
+    prog = plan_program(h * w_, c_in,
+                        [ConvPWSpec(h, w_, c_in, c_out,
+                                    activation="relu")], block_rows=1)
+    op = next(o for o in prog.ops if o.kind == "conv_pw")
+    rb = _pw_row_block(op, prog.n_segments, op.in_ptr, prog.seg_width, 8)
+    assert rb > 1, "geometry was chosen so blocking engages"
+
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    w = _rand(k1, c_in, c_out) / c_in ** 0.5
+    b = _rand(k2, c_out) / 8
+    x = _rand(k3, h * w_, c_in)
+    expected = ref.conv_pw_ref(x.reshape(h, w_, c_in), w, b,
+                               activation="relu").reshape(-1, c_out)
+    y, _ = run_program(prog, x, [(w, b)], backend="pallas",
+                       kernel_block_rows=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expected),
+                               **_tol(expected))
+
+    qnet = _quantize_net(prog, [(w, b)])
+    x_q = quantize(x, QParams(scale=qnet.in_scale))
+    expected_q = ref.conv_pw_q_ref(x_q.reshape(h, w_, c_in),
+                                   *qnet.qparams[0], activation="relu") \
+        .reshape(-1, c_out)
+    for block in KERNEL_BLOCKS:
+        y_q, _ = run_program(qnet.program, x_q, qnet.qparams,
+                             backend="pallas", kernel_block_rows=block)
+        np.testing.assert_array_equal(np.asarray(y_q),
+                                      np.asarray(expected_q))
+
+
+def test_batched_vmap_pallas_cell():
+    """A leading batch dimension vmapped straight over the blocked
+    pallas path: every lane equals the single-sample run."""
+    cell = CELL_BUILDERS["gemm"]()
+
+    def run_one(xi):
+        y, _ = run_program(cell.program, xi, cell.params,
+                           backend="pallas", kernel_block_rows=8)
+        return y
+
+    xb = jnp.stack([cell.x, cell.x * 0.5, -cell.x])
+    yb = jax.vmap(run_one)(xb)
+    assert yb.shape[0] == 3
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(yb[i]),
+                                   np.asarray(run_one(xb[i])),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # conv_k2d envelope: k x stride x padding across backends and dtypes.
 # ---------------------------------------------------------------------------
 

@@ -197,3 +197,37 @@ def test_jnp_backend_works_unaligned_and_any_seg_width():
                                rtol=3e-5, atol=3e-5)
     with pytest.raises(ValueError, match="aligned"):
         run_program(program, x, params, backend="pallas")
+
+
+def test_coalesced_schedule_preserves_aggregate_counters():
+    """RowSchedule.coalesced(b) groups b consecutive steps into one
+    super-step without changing any aggregate counter — the invariant
+    that keeps block-granular execution under the same certificate."""
+    from repro.core.rowsched import conv_pw_schedule, gemm_fine_schedule
+
+    for sched, block in ((conv_pw_schedule(12, 12, 3, 2, stride=1), 4),
+                         (conv_pw_schedule(12, 6, 3, 2, stride=2), 3),
+                         (gemm_fine_schedule(8, 2, 1), 2)):
+        co = sched.coalesced(block)
+        assert co.steps == -(-sched.steps // block)
+        flat = lambda seq: [r for rows in seq for r in rows]
+        assert flat(co.reads) == flat(sched.reads)
+        assert flat(co.writes) == flat(sched.writes)
+        assert (co.in_chunk, co.out_chunk) == (sched.in_chunk,
+                                               sched.out_chunk)
+    assert sched.coalesced(1) is sched
+    with pytest.raises(ValueError):
+        sched.coalesced(0)
+
+
+def test_op_grid_steps_divisor_rule():
+    from repro.core.program import op_grid_steps
+
+    program = plan_program(8, 32, [GemmSpec(32)])
+    op = program.ops[0]
+    assert op_grid_steps(op) == 8
+    assert op_grid_steps(op, 4) == 2
+    with pytest.raises(ValueError):
+        op_grid_steps(op, 3)
+    with pytest.raises(ValueError):
+        op_grid_steps(op, 0)

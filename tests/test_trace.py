@@ -114,6 +114,40 @@ def test_traced_run_bit_identical_int8():
     assert art.totals["requants"] > 0
 
 
+def test_batched_trace_counters_equal_certificate_times_batch():
+    """Batched ``run(trace=True)`` returns ONE artifact whose traffic
+    counters are the per-sample certificate scaled by exactly the
+    batch size (wall times sum across lanes)."""
+    from repro.analysis import verify_program
+
+    cn = vcompile("ds-cnn", "cortex-m4", quantize=True, certify=False,
+                  n_calib=1)
+    batch = 3
+    x = jax.random.normal(
+        jax.random.PRNGKey(11),
+        (batch, cn.program.in_rows, cn.program.in_dim))
+    y1, art1 = cn.run(x[0], trace=True)
+    yb, artb = cn.run(x, trace=True)
+    assert yb.shape[0] == batch
+    assert np.array_equal(np.asarray(yb[0]), np.asarray(y1))
+    assert artb.totals["batch"] == batch
+
+    cert = verify_program(cn.program).certificate()
+    seg_bytes = cn.program.seg_width * cn.program.elem_bytes
+    assert artb.totals["bytes_loaded"] == \
+        batch * cert["reads"] * seg_bytes
+    assert artb.totals["bytes_stored"] == \
+        batch * cert["writes"] * seg_bytes
+    for k in ("segs_read", "segs_written", "macs", "requants"):
+        assert artb.totals[k] == batch * art1.totals[k], k
+    for e1, eb in zip(art1.events, artb.events):
+        for k in ("segs_read", "segs_written", "bytes_loaded",
+                  "bytes_stored"):
+            if k in e1:
+                assert eb[k] == batch * e1[k], (e1["name"], k)
+    assert artb.totals["wall_us"] > 0
+
+
 # ---------------------------------------------------------------------------
 # The bit-exact traffic invariant, per zoo net, fp32 + int8.
 # ---------------------------------------------------------------------------
